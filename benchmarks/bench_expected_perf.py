@@ -1,0 +1,78 @@
+"""Paper §IV-B expected-performance ablation (beyond the paper's tables).
+
+The paper observes that expected performance is E[J] = sum_s p_s J_s over
+failure scenarios s, and that "depending on the probability of any client
+or server failing ... either batch, FL, or Tol-FL may be most suited".
+This bench makes that concrete: with per-device failure probability p
+(at most one failure per run, the paper's §II model), scenario weights
+for a scheme whose topology has N devices of which H are heads:
+
+    P(no failure)      = (1-p)^N
+    P(member failure)  = (N-H) p (1-p)^(N-1)   (a non-head dies)
+    P(head failure)    = H p (1-p)^(N-1)       (a head/server dies)
+    (+ renormalisation over the >=2-failure remainder, assigned the
+     head-failure outcome pessimistically)
+
+J_s come from the same simulator cells as Tables III/IV/V.  Output: the
+E[AUROC] vs p crossover table — the quantified version of the paper's
+"which scheme when" conclusion.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.bench_failure_auroc import run_cell
+
+# scheme -> (N devices, heads H) for the scenario weighting
+TOPOLOGY = {
+    "tolfl": (10, 5),      # k=5 cluster heads (commsml prep uses k=2;
+                           # heads taken from the prep inside run_cell)
+    "fl": (11, 1),         # 10 clients + 1 dedicated server
+    "batch": (1, 1),       # the server IS the system
+}
+
+
+def expected(j_none: float, j_client: float, j_server: float,
+             n: int, h: int, p: float) -> float:
+    p_none = (1 - p) ** n
+    p_member = (n - h) * p * (1 - p) ** (n - 1)
+    p_head = h * p * (1 - p) ** (n - 1)
+    rest = max(0.0, 1.0 - p_none - p_member - p_head)
+    return (p_none * j_none + p_member * j_client
+            + (p_head + rest) * j_server)
+
+
+def run(reps: int = 1, rounds: int = 40, dataset: str = "commsml"
+        ) -> List[str]:
+    cells: Dict[str, Dict[str, float]] = {}
+    for method in ("tolfl", "fl", "batch"):
+        cells[method] = {}
+        for kind in ("none", "client", "server"):
+            if method == "batch" and kind == "client":
+                # no clients to lose; same as failure-free
+                cells[method][kind] = cells[method]["none"]
+                continue
+            c = run_cell(dataset, method, kind, reps, rounds)
+            cells[method][kind] = c["mean"]
+
+    lines = [f"# E[AUROC] = sum_s p_s J_s ({dataset}, {rounds} rounds); "
+             "paper section IV-B",
+             "p_fail," + ",".join(TOPOLOGY) + ",best"]
+    for p in (0.0, 0.01, 0.05, 0.1, 0.2, 0.4):
+        row = [f"{p:.2f}"]
+        best, best_v = None, -1.0
+        for method, (n, h) in TOPOLOGY.items():
+            v = expected(cells[method]["none"], cells[method]["client"],
+                         cells[method]["server"], n, h, p)
+            row.append(f"{v:.3f}")
+            if v > best_v:
+                best, best_v = method, v
+        row.append(best)
+        lines.append(",".join(row))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

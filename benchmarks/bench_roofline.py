@@ -1,0 +1,49 @@
+"""Section-Roofline table: aggregate the dry-run JSON records into the
+per-(arch x shape x mesh) three-term roofline table (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+from typing import List
+
+from repro.analysis.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
+
+
+def run(pattern: str = "results/dryrun/*.json") -> List[str]:
+    lines = ["# Roofline terms per (arch x shape x mesh); analytic model "
+             "(HLO raw kept in the JSONs; see costmodel.py for why).",
+             "# variant: 'baseline' or the section-Perf optimised records "
+             "(filenames tagged __opt).",
+             "arch,shape,mesh,variant,mode,t_compute_s,t_memory_s,"
+             "t_collective_s,bottleneck,useful_flops_ratio,mem_per_dev_GB,"
+             "status"]
+    recs = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            r = json.load(f)
+        r["_variant"] = "opt" if "__opt" in p else "baseline"
+        recs.append(r)
+    for r in recs:
+        v = r["_variant"]
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},{v},"
+                         f"{r.get('mode','')},,,,,,,"
+                         f"skipped({r.get('reason','')[:40]})")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},{v},"
+                         f"{r.get('mode','')},,,,,,,error")
+            continue
+        rl = r["roofline"]
+        mem = rl.get("memory_per_device")
+        mem_gb = f"{mem/1e9:.2f}" if mem else ""
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{v},{r['mode']},"
+            f"{rl['t_compute']:.3e},{rl['t_memory']:.3e},"
+            f"{rl['t_collective']:.3e},{rl['bottleneck']},"
+            f"{rl['useful_flops_ratio']:.3f},{mem_gb},ok")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,55 @@
+"""Figure 5: epochs + modelled wall-clock to reach centralised training's
+converged loss (within 5%).
+
+Batch training establishes the target loss; each scheme reports the number
+of rounds to get within 5% of it and the modelled wall-clock (paper
+Section IV-A task-sequencing model: parallel stages max, sequential sum).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.datasets import prepare
+from repro.core.simulate import (SimConfig, round_time_model,
+                                 run_simulation)
+from repro.models import autoencoder as AE
+from repro.models.params import param_bytes, param_count
+
+ROUNDS = 120
+
+
+def run(dataset: str = "commsml", rounds: int = ROUNDS) -> List[str]:
+    prep = prepare(dataset)
+    base = SimConfig(scheme="batch", num_devices=10, rounds=rounds,
+                     lr=prep.lr, local_epochs=prep.local_epochs, seed=0)
+    rb = run_simulation(prep.ae_cfg, prep.device_x, prep.counts,
+                        prep.test_x, prep.test_y, base)
+    target = float(rb.loss_curve[-1]) * 1.05
+
+    params, _ = AE.init_params(jax.random.PRNGKey(0), prep.ae_cfg)
+    pbytes = param_bytes(params)
+    flops_per_sample = 6 * param_count(params)
+    samples = int(prep.counts.sum())
+
+    lines = [f"# Fig 5: rounds & modelled wall-clock to reach batch loss "
+             f"x1.05 = {target:.1f} ({dataset})",
+             "method,rounds_to_loss,sec_per_round,wallclock_s"]
+    for scheme in ("batch", "fl", "tolfl", "sbt"):
+        cfg = SimConfig(scheme=scheme, num_devices=10,
+                        num_clusters=prep.clusters, rounds=rounds,
+                        lr=prep.lr, local_epochs=prep.local_epochs, seed=0)
+        r = run_simulation(prep.ae_cfg, prep.device_x, prep.counts,
+                           prep.test_x, prep.test_y, cfg,
+                           target_loss=target)
+        spr = round_time_model(scheme, 10, prep.clusters, samples, pbytes,
+                               flops_per_sample)
+        n = r.rounds_to_loss if r.rounds_to_loss else rounds
+        lines.append(f"{scheme},{n},{spr:.4f},{n * spr:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,119 @@
+"""HLO collective profiler — the dry-run 'profile' for the perf loop.
+
+Lowers one (arch x shape x mesh [x schedule x clusters]) combination and
+prints the top-N collective ops by payload bytes, with dtype and shape, so
+each hillclimb iteration can see exactly which transfer dominates and
+whether a change moved it.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.profile_collectives \
+      --arch qwen3-8b --shape train_4k [--schedule ring] [--clusters 4] \
+      [--top 12] [--microbatches 1] [--grad-dtype float32]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+import sys
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def top_collectives(hlo: str, n: int = 12):
+    from repro.analysis.roofline import _shape_bytes
+    rows = []
+    for m in _OP_RE.finditer(hlo):
+        shape_str, kind = m.group(1), m.group(2)
+        rows.append((_shape_bytes(shape_str), kind, shape_str[:70]))
+    rows.sort(reverse=True)
+    agg = collections.Counter()
+    for b, kind, _ in rows:
+        agg[kind] += b
+    return rows[:n], agg, len(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--schedule", default="auto",
+                    choices=["auto", "ring", "psum"])
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--grad-dtype", default=None, dest="grad_dtype")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--param-cast", default=None, dest="param_cast")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import ARCHS, INPUT_SHAPES, OptimizerConfig, \
+        TolFLConfig
+    from repro.core import distributed as D
+    from repro.launch import specs as SP
+    from repro.launch.dryrun import (BF16_STATE_ARCHS, FSDP_ARCHS,
+                                     pick_schedule, rules_for_arch)
+    from repro.launch.mesh import make_production_mesh
+    from repro.serving.decode import decode_step, prefill
+    from repro.sharding import logical as L
+
+    cfg = ARCHS[args.arch]
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    rules = rules_for_arch(args.arch)
+
+    with L.activate_mesh(mesh, rules):
+        if shape.mode == "train":
+            sched = pick_schedule(args.arch, args.schedule)
+            tolfl = TolFLConfig(num_clusters=args.clusters, schedule=sched,
+                                grad_sync_dtype=args.grad_dtype,
+                                microbatches=args.microbatches,
+                                param_cast_dtype=args.param_cast)
+            ocfg = OptimizerConfig()
+            sdt = "bfloat16" if args.arch in BF16_STATE_ARCHS else None
+            step = D.make_train_step(cfg, tolfl, ocfg, mesh, state_dtype=sdt)
+            state = SP.state_specs(cfg, ocfg, mesh, rules)
+            batch = SP.train_batch_specs(cfg, shape, mesh, rules)
+            alive = SP.alive_spec(mesh)
+            lowered = jax.jit(step).lower(state, batch, alive)
+        elif shape.mode == "prefill":
+            batch = SP.prefill_specs(cfg, shape, mesh, rules)
+            params = SP.params_specs(cfg, mesh, rules)
+            lowered = jax.jit(
+                lambda p, b: prefill(p, cfg, b)).lower(params, batch)
+        else:
+            d = SP.decode_specs(cfg, shape, mesh, rules,
+                                long_context=args.shape == "long_500k")
+            params = SP.params_specs(cfg, mesh, rules)
+            lowered = jax.jit(
+                lambda p, t, c, pos: decode_step(p, cfg, t, c, pos)).lower(
+                    params, d["tokens"], d["cache"], d["position"])
+        compiled = lowered.compile()
+
+    hlo = compiled.as_text()
+    rows, agg, n_ops = top_collectives(hlo, args.top)
+    print(f"# {args.arch} x {args.shape} x {args.mesh} "
+          f"schedule={args.schedule} clusters={args.clusters}")
+    print(f"# {n_ops} collective ops; totals per kind:")
+    for kind, b in agg.most_common():
+        print(f"#   {kind:<22} {b / 1e9:8.2f} GB")
+    print(f"# top {args.top} ops:")
+    for b, kind, shape_str in rows:
+        print(f"  {b / 1e9:8.3f} GB  {kind:<20} {shape_str}")
+    mem = compiled.memory_analysis()
+    print(f"# temp memory: {mem.temp_size_in_bytes / 1e9:.2f} GB; "
+          f"args {mem.argument_size_in_bytes / 1e9:.2f} GB")
+    cost = compiled.cost_analysis()
+    print(f"# HLO flops {cost.get('flops', 0):.3e} "
+          f"bytes {cost.get('bytes accessed', 0):.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

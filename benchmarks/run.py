@@ -1,0 +1,77 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]``
+
+Prints CSV blocks (name,us_per_call,derived per the repo convention, plus
+the paper tables).  The failure-AUROC tables dominate runtime; --quick
+cuts reps/rounds for smoke purposes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps/rounds (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench: kernels|roofline|comm|"
+                         "curves|time|expected|auroc")
+    args = ap.parse_args(argv)
+
+    t_all = time.time()
+    sections = []
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        sections.append(("kernels (interpret parity + xla timing)",
+                         bench_kernels.run()))
+    if want("roofline"):
+        from benchmarks import bench_roofline
+        sections.append(("roofline table (from dry-run records)",
+                         bench_roofline.run()))
+    if want("comm"):
+        from benchmarks import bench_comm_cost
+        sections.append(("Table VI comm cost", bench_comm_cost.run()))
+    if want("curves"):
+        from benchmarks import bench_failure_curves
+        sections.append(("Fig 4 server-failure curves",
+                         bench_failure_curves.run(
+                             rounds=30 if args.quick else 80)))
+    if want("time"):
+        from benchmarks import bench_time_to_loss
+        sections.append(("Fig 5 time-to-loss",
+                         bench_time_to_loss.run(
+                             rounds=40 if args.quick else 120)))
+    if want("expected"):
+        from benchmarks import bench_expected_perf
+        sections.append(("Section IV-B expected performance vs p(fail)",
+                         bench_expected_perf.run(
+                             rounds=30 if args.quick else 60)))
+    if want("auroc"):
+        from benchmarks import bench_failure_auroc
+        # single-core CPU container: 1 rep x 60 rounds keeps the full
+        # 3-tables x 4-datasets sweep under an hour; bump for more seeds
+        reps = 1
+        rounds = 30 if args.quick else 60
+        datasets = ("commsml",) if args.quick else \
+            ("commsml", "fmnist", "cifar10", "cifar100")
+        sections.append(("Tables III/IV/V failure AUROC",
+                         bench_failure_auroc.run(reps=reps, rounds=rounds,
+                                                 datasets=datasets)))
+
+    for title, lines in sections:
+        print(f"\n===== {title} =====")
+        print("\n".join(lines))
+    print(f"\nall benchmarks done in {time.time()-t_all:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Sources: ``compiled.cost_analysis()`` (per-chip — XLA reports the SPMD
+per-device program) for flops/bytes; collective bytes are parsed out of
+the (post-SPMD) HLO text by summing the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shapes: "bf16[1,2,3]{...}" or tuple "(f32[8]{0}, f32[8]{0})"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    '-start'/'-done' async pairs are counted once (the -done op carries no
+    new transfer)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float            # 6 N D (active params) global
+    memory_per_device: Optional[float] = None   # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops — catches remat/redundancy."""
+        hlo_global = self.flops_per_chip * self.chips
+        return self.model_flops / hlo_global if hlo_global else float("nan")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops_for(cfg, shape, mode: str) -> float:
+    """6 N D for training; 2 N D for inference, D = tokens processed."""
+    n_active = cfg.active_param_count()
+    if mode == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if mode == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_roofline(arch: str, shape_name: str, mesh_name: str, chips: int,
+                   cost: dict, hlo_text: str, model_flops: float,
+                   memory_per_device: Optional[float] = None) -> Roofline:
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_chip=float(cost.get("flops", 0.0)),
+        bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll, model_flops=model_flops,
+        memory_per_device=memory_per_device)
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':28s} {'shape':12s} {'mesh':10s} "
+           f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
+           f"{'bottleneck':>10s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:28s} {r.shape:12s} {r.mesh:10s} "
+            f"{r.t_compute:10.3e} {r.t_memory:10.3e} {r.t_collective:10.3e} "
+            f"{r.bottleneck:>10s} {r.useful_flops_ratio:7.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,12 @@
+from repro.configs.base import (AttentionConfig, FrontendConfig, InputShape,
+                                INPUT_SHAPES, MeshConfig, ModelConfig,
+                                MoEConfig, OptimizerConfig, RecurrentConfig,
+                                RunConfig, TolFLConfig)
+from repro.configs.registry import ARCHS, ASSIGNED, get_arch
+
+__all__ = [
+    "AttentionConfig", "FrontendConfig", "InputShape", "INPUT_SHAPES",
+    "MeshConfig", "ModelConfig", "MoEConfig", "OptimizerConfig",
+    "RecurrentConfig", "RunConfig", "TolFLConfig", "ARCHS", "ASSIGNED",
+    "get_arch",
+]

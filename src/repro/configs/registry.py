@@ -1,0 +1,35 @@
+"""--arch <id> registry mapping architecture ids to ModelConfigs."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+def _load() -> Dict[str, ModelConfig]:
+    from repro.configs import (granite_3_2b, internlm2_18b, internvl2_26b,
+                               llama4_maverick, llama4_scout, qwen15_05b,
+                               qwen3_8b, recurrentgemma_9b, rwkv6_7b,
+                               whisper_large_v3)
+    mods = [recurrentgemma_9b, rwkv6_7b, whisper_large_v3, internlm2_18b,
+            llama4_maverick, internvl2_26b, llama4_scout, qwen3_8b,
+            granite_3_2b, qwen15_05b]
+    return {m.CONFIG.name: m.CONFIG for m in mods}
+
+
+ARCHS: Dict[str, ModelConfig] = _load()
+
+# ids as assigned in the brief
+ASSIGNED = (
+    "recurrentgemma-9b", "rwkv6-7b", "whisper-large-v3", "internlm2-1.8b",
+    "llama4-maverick-400b-a17b", "internvl2-26b", "llama4-scout-17b-a16e",
+    "qwen3-8b", "granite-3-2b", "qwen1.5-0.5b",
+)
+
+assert set(ASSIGNED) == set(ARCHS), (set(ASSIGNED), set(ARCHS))
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

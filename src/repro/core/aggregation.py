@@ -1,0 +1,86 @@
+"""Tol-FL aggregation algebra (paper Algorithm 1 / 2, Appendix A eq. 1-2).
+
+The streaming weighted mean:
+
+    n <- n + n_i
+    r  = n_i / n
+    g <- r g_i + (1 - r) g
+
+applied over clusters (Tol-FL) or devices (SBT).  The central mathematical
+property — the paper's k-invariance — is that this equals the direct
+sample-weighted mean regardless of grouping; ``tests/test_tolfl_invariance``
+property-tests it.  These are *pure pytree functions* shared by the
+paper-scale simulator and the mesh engine (which realises the same algebra
+with psum / ppermute collectives).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def combine_pair(n_a: jax.Array, g_a: Pytree, n_b: jax.Array, g_b: Pytree
+                 ) -> Tuple[jax.Array, Pytree]:
+    """One streaming-mean step: absorb (n_b, g_b) into running (n_a, g_a).
+
+    Weights are sample counts; zero-count operands are absorbed as no-ops
+    (the failure-masking path)."""
+    n = n_a + n_b
+    r = jnp.where(n > 0, n_b / jnp.maximum(n, 1e-30), 0.0)
+    g = jax.tree.map(
+        lambda a, b: (1.0 - r).astype(a.dtype) * a + r.astype(a.dtype) * b,
+        g_a, g_b)
+    return n, g
+
+
+def streaming_weighted_mean(gs: Sequence[Pytree], ns: Sequence[jax.Array]
+                            ) -> Tuple[jax.Array, Pytree]:
+    """Sequential SBT combine over a python sequence (Algorithm 2)."""
+    n = jnp.zeros(())
+    g = jax.tree.map(jnp.zeros_like, gs[0])
+    for gi, ni in zip(gs, ns):
+        n, g = combine_pair(n, g, ni, gi)
+    return n, g
+
+
+def stacked_streaming_mean(gs: Pytree, ns: jax.Array
+                           ) -> Tuple[jax.Array, Pytree]:
+    """Same, but inputs stacked on a leading axis and combined by
+    ``lax.scan`` — the jit-friendly form used by the simulator."""
+    def step(carry, xs):
+        n, g = carry
+        ni, gi = xs
+        return combine_pair(n, g, ni, gi), None
+
+    g0 = jax.tree.map(lambda x: jnp.zeros_like(x[0]), gs)
+    (n, g), _ = jax.lax.scan(step, (jnp.zeros(()), g0), (ns, gs))
+    return n, g
+
+
+def weighted_mean(gs: Pytree, ns: jax.Array) -> Pytree:
+    """Direct sample-weighted mean over a stacked leading axis (the
+    algebraically-equal 'optimised' form — one fused reduction)."""
+    tot = jnp.maximum(jnp.sum(ns), 1e-30)
+    w = ns / tot
+    def wm(x):
+        wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(wr * x, axis=0)
+    return jax.tree.map(wm, gs)
+
+
+def cluster_reduce(gs: Pytree, ns: jax.Array, cluster_ids: jax.Array,
+                   num_clusters: int) -> Tuple[Pytree, jax.Array]:
+    """Per-cluster FedAvg (Algorithm 1 inner loop): stacked device grads
+    (N, ...) -> cluster grads (k, ...) + counts (k,)."""
+    onehot = jax.nn.one_hot(cluster_ids, num_clusters, dtype=jnp.float32)
+    n_c = onehot.T @ ns                                     # (k,)
+    def red(x):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        num = onehot.T @ (flat * ns[:, None])
+        return (num / jnp.maximum(n_c[:, None], 1e-30)).reshape(
+            (num_clusters,) + x.shape[1:]).astype(x.dtype)
+    return jax.tree.map(red, gs), n_c

@@ -1,0 +1,198 @@
+"""Clustered-FL baselines the paper compares against (Section V-A).
+
+* **FedGroup** [arXiv:2010.06870] — static grouping by a data-driven
+  measure: devices are clustered once (cosine similarity of their initial
+  local updates, k-means in gradient space), then per-group FedAvg.
+* **IFCA** [NeurIPS'20] — iterative: every round each device picks the
+  model with the lowest loss on its local data, trains it, and models are
+  aggregated over their adopters.
+* **FeSEM** [arXiv:2005.01026] — multi-center EM: devices are assigned to
+  the nearest center in parameter space after a local step; centers move
+  to the weighted mean of their members.
+
+All train M model instances.  Reporting matches the paper's columns:
+``best`` (*) = highest test AUROC of any single instance; ``multi`` (†) =
+per-sample min reconstruction error over instances (the multi-model
+oracle score).
+
+Failure semantics: a *client* failure removes that device; a *server*
+failure kills the aggregator of group 0 — that instance freezes and its
+devices stop contributing (they keep their last model for evaluation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core.failure import NO_FAILURE, FailureSpec
+from repro.core.simulate import SimConfig
+from repro.models import autoencoder as AE
+from repro.training.metrics import auroc
+
+
+@dataclass(frozen=True)
+class MultiModelConfig:
+    scheme: str = "ifca"          # fedgroup | ifca | fesem
+    num_devices: int = 10
+    num_models: int = 3
+    rounds: int = 100
+    lr: float = 1e-4
+    dropout: bool = True
+    seed: int = 0
+
+
+@dataclass
+class MultiModelResult:
+    best_auroc: float             # the paper's * column
+    multi_auroc: float            # the paper's dagger column
+    loss_curve: np.ndarray
+    assignments: np.ndarray       # final device -> model map
+
+
+def _grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
+    def local_loss(params, x, valid, key):
+        x_hat = AE.forward(params, ae_cfg, x,
+                           dropout_key=key if dropout else None)
+        err = jnp.sum(jnp.square(x - x_hat), axis=-1) * valid
+        return jnp.sum(err) / jnp.maximum(jnp.sum(valid), 1.0)
+    return local_loss, jax.grad(local_loss)
+
+
+def _flat(tree):
+    return jnp.concatenate([t.ravel() for t in jax.tree.leaves(tree)])
+
+
+def _kmeans_groups(vectors: np.ndarray, m: int, seed: int,
+                   iters: int = 20) -> np.ndarray:
+    """Tiny k-means for FedGroup's static gradient-similarity grouping."""
+    rng = np.random.default_rng(seed)
+    v = vectors / (np.linalg.norm(vectors, axis=1, keepdims=True) + 1e-9)
+    centers = v[rng.choice(len(v), m, replace=False)]
+    for _ in range(iters):
+        sim = v @ centers.T
+        assign = sim.argmax(1)
+        for j in range(m):
+            sel = v[assign == j]
+            if len(sel):
+                c = sel.mean(0)
+                centers[j] = c / (np.linalg.norm(c) + 1e-9)
+    return assign
+
+
+def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+                   device_counts: np.ndarray, test_x: np.ndarray,
+                   test_y: np.ndarray, cfg: MultiModelConfig,
+                   failure: FailureSpec = NO_FAILURE) -> MultiModelResult:
+    N, M = cfg.num_devices, cfg.num_models
+    key = jax.random.PRNGKey(cfg.seed)
+    local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
+    # M model instances with different inits
+    models = []
+    for j in range(M):
+        p, _ = AE.init_params(jax.random.fold_in(key, j), ae_cfg)
+        models.append(p)
+    models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+
+    dx = jnp.asarray(device_x)
+    counts = jnp.asarray(device_counts, jnp.float32)
+    valid = (jnp.arange(device_x.shape[1])[None, :]
+             < counts[:, None]).astype(jnp.float32)
+    tx = jnp.asarray(test_x)
+
+    # ---- initial assignment ----
+    if cfg.scheme == "fedgroup":
+        p0, _ = AE.init_params(key, ae_cfg)
+        g0 = jax.vmap(lambda x, v, k_: _flat(grad_fn(p0, x, v, k_)),
+                      in_axes=(0, 0, 0))(dx, valid,
+                                         jax.random.split(key, N))
+        assign0 = jnp.asarray(_kmeans_groups(np.asarray(g0), M, cfg.seed))
+    else:
+        assign0 = jnp.arange(N) % M
+
+    # failure target: "server" kills group 0's aggregator
+    tgt_device = failure.device if failure.device is not None else N - 1
+
+    def dev_alive(epoch):
+        if failure.kind != "client":
+            return jnp.ones((N,), jnp.float32)
+        dead = (jnp.arange(N) == tgt_device) & (epoch >= failure.epoch)
+        return (~dead).astype(jnp.float32)
+
+    def group_alive(epoch):
+        if failure.kind != "server":
+            return jnp.ones((M,), jnp.float32)
+        dead = (jnp.arange(M) == 0) & (epoch >= failure.epoch)
+        return (~dead).astype(jnp.float32)
+
+    def device_losses(models_, x, v, k_):
+        """(M,) local loss of each model instance on one device's data."""
+        return jax.vmap(lambda p: local_loss(p, x, v, k_))(models_)
+
+    def round_fn(carry, epoch):
+        models_, assign, rkey = carry
+        rkey, dkey = jax.random.split(rkey)
+        dkeys = jax.random.split(dkey, N)
+        a_dev = dev_alive(epoch)
+        a_grp = group_alive(epoch)
+
+        # ---- (re)assignment ----
+        if cfg.scheme == "ifca":
+            losses = jax.vmap(device_losses, in_axes=(None, 0, 0, 0))(
+                models_, dx, valid, dkeys)          # (N, M)
+            assign = jnp.argmin(losses, axis=1)
+        elif cfg.scheme == "fesem":
+            # e-step: distance between one-step-updated local params and
+            # each center, in parameter space
+            def dev_assign(x, v, k_, a):
+                p_cur = jax.tree.map(lambda t: t[a], models_)
+                g = grad_fn(p_cur, x, v, k_)
+                upd = jax.tree.map(lambda p_, g_: p_ - cfg.lr * g_, p_cur, g)
+                fu = _flat(upd)
+                d = jax.vmap(lambda j: jnp.sum(jnp.square(
+                    fu - _flat(jax.tree.map(lambda t: t[j], models_)))))(
+                        jnp.arange(M))
+                return jnp.argmin(d)
+            assign = jax.vmap(dev_assign)(dx, valid, dkeys, assign)
+        # fedgroup: static
+
+        # ---- local grads on the assigned model ----
+        def dev_grad(x, v, k_, a):
+            p_cur = jax.tree.map(lambda t: t[a], models_)
+            return grad_fn(p_cur, x, v, k_)
+        gs = jax.vmap(dev_grad)(dx, valid, dkeys, assign)
+
+        # ---- per-model weighted aggregation ----
+        onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)  # (N, M)
+        w = counts * a_dev
+        denom = onehot.T @ w                                   # (M,)
+
+        def agg_leaf(gleaf):
+            flatg = gleaf.reshape(N, -1)
+            num = onehot.T @ (flatg * w[:, None])
+            mean = num / jnp.maximum(denom[:, None], 1e-30)
+            return mean.reshape((M,) + gleaf.shape[1:])
+        g_m = jax.tree.map(agg_leaf, gs)
+        upd_gate = ((denom > 0).astype(jnp.float32) * a_grp)
+        models_ = jax.tree.map(
+            lambda p_, g_: p_ - cfg.lr * upd_gate.reshape(
+                (-1,) + (1,) * (g_.ndim - 1)) * g_,
+            models_, g_m)
+
+        scores = jax.vmap(lambda p: AE.anomaly_scores(p, ae_cfg, tx))(
+            models_)                                           # (M, T)
+        tl = jnp.mean(jnp.min(scores, axis=0))
+        return (models_, assign, rkey), (tl, scores)
+
+    (models, assign, _), (losses, scores_hist) = jax.lax.scan(
+        round_fn, (models, assign0, key), jnp.arange(cfg.rounds))
+
+    final_scores = np.asarray(scores_hist[-1])                 # (M, T)
+    per_model = [auroc(final_scores[j], test_y) for j in range(M)]
+    multi = auroc(final_scores.min(axis=0), test_y)
+    return MultiModelResult(float(np.max(per_model)), float(multi),
+                            np.asarray(losses), np.asarray(assign))

@@ -1,0 +1,73 @@
+"""Failure model (paper Section II / IV-B).
+
+Any one networked device may become unreachable at any stage; failures are
+client (cluster member) or server (cluster head / FL server).  The model
+is *in-graph*: an ``alive`` mask enters the jitted step and per-device
+effective weights are derived from it, so one compiled executable covers
+every failure scenario — which is exactly the property the paper wants
+(training persists without reconfiguration).
+
+Semantics (paper IV-B):
+* dead member  -> its samples leave the weighted mean; cluster continues.
+* dead head    -> the entire cluster leaves training (worst case).
+* FL (k=1) head death == server death -> no aggregation is possible; the
+  engine falls back to isolated local training (paper Section V-C).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """A single failure event injected during training."""
+    epoch: int                 # fires at the START of this epoch/round
+    kind: str                  # "client" | "server" | "none"
+    device: Optional[int] = None   # explicit device id; defaults per kind
+
+    def target(self, topo: Topology) -> int:
+        if self.device is not None:
+            return self.device
+        if self.kind == "server":
+            return topo.heads[0]          # a cluster head (the FL server)
+        # a non-head member: last member of cluster 0 (or device 0 if all
+        # devices are heads, i.e. SBT)
+        c0 = topo.clusters[0]
+        return c0[-1] if len(c0) > 1 else c0[0]
+
+
+NO_FAILURE = FailureSpec(epoch=1 << 30, kind="none")
+
+
+def alive_mask(spec: FailureSpec, topo: Topology, epoch: jax.Array
+               ) -> jax.Array:
+    """(N,) float mask of devices still alive at ``epoch`` (traced)."""
+    n = topo.num_devices
+    if spec.kind == "none":
+        return jnp.ones((n,), jnp.float32)
+    tgt = spec.target(topo)
+    dead = (jnp.arange(n) == tgt) & (epoch >= spec.epoch)
+    return (~dead).astype(jnp.float32)
+
+
+def effective_weights(alive: jax.Array, topo: Topology) -> jax.Array:
+    """(N,) per-device weight given head-failure semantics.
+
+    w_i = alive_i * alive_{head(cluster(i))}: a dead head zeroes its whole
+    cluster; dead members zero only themselves."""
+    cluster_ids = jnp.asarray(topo.device_cluster_array())
+    heads = jnp.asarray(np.array(topo.heads))
+    head_alive = alive[heads]                     # (k,)
+    return alive * head_alive[cluster_ids]
+
+
+def surviving_fraction(alive: np.ndarray, topo: Topology) -> float:
+    w = effective_weights(jnp.asarray(alive), topo)
+    return float(jnp.mean(w))

@@ -1,0 +1,250 @@
+"""Paper-scale Tol-FL simulator (Tables III-VI, Figures 4-5).
+
+Simulates N federated devices training the paper's autoencoder with the
+single-model schemes — Batch (centralised), FL (k=1), SBT (k=N),
+Tol-FL (1<k<N) — under client / server failures.  The whole federation is
+one jitted ``lax.scan`` over rounds: device gradients via ``vmap``, the
+Tol-FL combine via the shared algebra in :mod:`repro.core.aggregation`,
+failures via in-graph masks from :mod:`repro.core.failure`.
+
+FL server failure triggers the paper's fallback: remaining devices
+continue training *isolated* local models (Section V-C / Fig 4); the
+reported metric then averages the independent devices, exactly as the
+paper's Fig 4 caption describes.
+
+Multi-model baselines (FedGroup / IFCA / FeSEM) live in
+:mod:`repro.core.baselines`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import aggregation as agg
+from repro.core.failure import NO_FAILURE, FailureSpec, alive_mask, \
+    effective_weights
+from repro.core.topology import Topology
+from repro.models import autoencoder as AE
+from repro.training.metrics import auroc
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    scheme: str = "tolfl"          # batch | fl | sbt | tolfl
+    num_devices: int = 10
+    num_clusters: int = 5          # k (tolfl); fl -> 1, sbt -> N
+    rounds: int = 100
+    lr: float = 1e-3
+    local_epochs: int = 1          # E local steps per round
+    combine: str = "streaming"     # streaming (faithful) | direct
+    dropout: bool = True
+    seed: int = 0
+
+    def topology(self) -> Topology:
+        if self.scheme == "batch":
+            return Topology(1, 1)
+        if self.scheme == "fl":
+            return Topology(self.num_devices, 1)
+        if self.scheme == "sbt":
+            return Topology(self.num_devices, self.num_devices)
+        return Topology(self.num_devices, self.num_clusters)
+
+
+@dataclass
+class SimResult:
+    final_auroc: float
+    iso_auroc: float               # mean of isolated devices (fl fallback)
+    auroc_used: float              # what the paper would report
+    loss_curve: np.ndarray         # (rounds,) global-model test loss
+    auroc_curve: np.ndarray        # (rounds,)
+    iso_loss_curve: np.ndarray     # (rounds,) mean isolated test loss
+    iso_active: bool
+    rounds_to_loss: Optional[int] = None
+
+
+def _device_grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
+    def local_loss(params, x, valid, key):
+        x_hat = AE.forward(params, ae_cfg, x,
+                           dropout_key=key if dropout else None)
+        err = jnp.sum(jnp.square(x - x_hat), axis=-1) * valid
+        return jnp.sum(err) / jnp.maximum(jnp.sum(valid), 1.0)
+    return jax.grad(local_loss)
+
+
+def _local_delta_fn(ae_cfg: AutoencoderConfig, cfg: SimConfig):
+    """E local SGD steps; returns the (negated-gradient-like) delta/lr.
+
+    With E=1 this is exactly the local gradient (paper Algorithm 1)."""
+    grad_fn = _device_grad_fn(ae_cfg, cfg.dropout)
+
+    def delta(params, x, valid, key):
+        if cfg.local_epochs == 1:
+            return grad_fn(params, x, valid, key)
+
+        def step(p, i):
+            g = grad_fn(p, x, valid, jax.random.fold_in(key, i))
+            return jax.tree.map(lambda a, b: a - cfg.lr * b, p, g), None
+
+        p_end, _ = jax.lax.scan(step, params, jnp.arange(cfg.local_epochs))
+        # pseudo-gradient: (theta - theta_local) / lr
+        return jax.tree.map(lambda a, b: (a - b) / cfg.lr, params, p_end)
+
+    return delta
+
+
+def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+                   device_counts: np.ndarray, test_x: np.ndarray,
+                   test_y: np.ndarray, cfg: SimConfig,
+                   failure: FailureSpec = NO_FAILURE,
+                   target_loss: Optional[float] = None) -> SimResult:
+    """device_x: (N, n_max, D) padded; device_counts: (N,)."""
+    topo = cfg.topology()
+    N = topo.num_devices
+    if cfg.scheme == "batch":
+        # centralise all data onto the single server device
+        flat = np.concatenate([device_x[i, :device_counts[i]]
+                               for i in range(len(device_counts))], 0)
+        device_x = flat[None]
+        device_counts = np.array([len(flat)])
+    assert device_x.shape[0] == N, (device_x.shape, N)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params, _ = AE.init_params(key, ae_cfg)
+    dx = jnp.asarray(device_x)
+    counts = jnp.asarray(device_counts, jnp.float32)
+    valid = (jnp.arange(device_x.shape[1])[None, :]
+             < counts[:, None]).astype(jnp.float32)     # (N, n_max)
+    tx = jnp.asarray(test_x)
+    cluster_ids = jnp.asarray(topo.device_cluster_array())
+    k = topo.num_clusters
+    delta_fn = _local_delta_fn(ae_cfg, cfg)
+    fl_server_fallback = (cfg.scheme == "fl" and failure.kind == "server")
+
+    def test_loss(p):
+        s = AE.anomaly_scores(p, ae_cfg, tx)
+        return jnp.mean(s)
+
+    def round_fn(carry, epoch):
+        params, iso_params, rkey = carry
+        rkey, dkey = jax.random.split(rkey)
+        alive = alive_mask(failure, topo, epoch)
+        w = effective_weights(alive, topo)
+        dkeys = jax.random.split(dkey, N)
+        gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
+            params, dx, valid, dkeys)
+        ns = counts * w
+        # ---- Tol-FL hierarchical combine (Algorithm 1) ----
+        cluster_gs, n_c = agg.cluster_reduce(gs, ns, cluster_ids, k)
+        if cfg.combine == "streaming":
+            n_tot, g = agg.stacked_streaming_mean(cluster_gs, n_c)
+        else:
+            g = agg.weighted_mean(cluster_gs, n_c)
+            n_tot = jnp.sum(n_c)
+        has_update = (n_tot > 0).astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
+
+        # ---- isolated fallback (fl server failure) ----
+        if fl_server_fallback:
+            failed_now = jnp.asarray(epoch >= failure.epoch, jnp.float32)
+            # track the global model until failure, then diverge per device
+            iso_params = jax.tree.map(
+                lambda ip, p_: jnp.where(failed_now > 0, ip,
+                                         jnp.broadcast_to(p_, ip.shape)),
+                iso_params, params)
+            iso_gs = jax.vmap(delta_fn, in_axes=(0, 0, 0, 0))(
+                iso_params, dx, valid, dkeys)
+            iso_step = failed_now * alive   # only alive devices train
+            iso_params = jax.tree.map(
+                lambda ip, g_: ip - cfg.lr * iso_step.reshape(
+                    (-1,) + (1,) * (g_.ndim - 1)) * g_,
+                iso_params, iso_gs)
+            iso_tl = jnp.mean(jax.vmap(test_loss)(iso_params))
+        else:
+            iso_tl = jnp.float32(0)
+
+        tl = test_loss(new_params)
+        scores = AE.anomaly_scores(new_params, ae_cfg, tx)
+        return (new_params, iso_params, rkey), (tl, scores, iso_tl)
+
+    iso0 = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy()
+        if cfg.scheme != "batch" else jnp.broadcast_to(p, (1,) + p.shape),
+        params)
+    (final_params, iso_params, _), (losses, scores_all, iso_losses) = \
+        jax.lax.scan(round_fn, (params, iso0, key),
+                     jnp.arange(cfg.rounds))
+
+    losses = np.asarray(losses)
+    iso_losses = np.asarray(iso_losses)
+    scores_all = np.asarray(scores_all)
+    aurocs = np.array([auroc(s, test_y) for s in scores_all])
+    final = float(aurocs[-1])
+
+    # isolated final AUROC: mean over alive devices of per-device AUROC
+    iso_final = float("nan")
+    if fl_server_fallback:
+        per_dev = []
+        tgt = failure.target(topo)
+        for i in range(N):
+            if i == tgt:
+                continue
+            p_i = jax.tree.map(lambda x: x[i], iso_params)
+            s = np.asarray(AE.anomaly_scores(p_i, ae_cfg, tx))
+            per_dev.append(auroc(s, test_y))
+        iso_final = float(np.mean(per_dev))
+
+    used = iso_final if fl_server_fallback else final
+    r2l = None
+    if target_loss is not None:
+        hit = np.where(losses <= target_loss)[0]
+        r2l = int(hit[0]) + 1 if len(hit) else None
+    return SimResult(final, iso_final, used, losses, aurocs, iso_losses,
+                     fl_server_fallback, r2l)
+
+
+# ---------------------------------------------------------------------------
+# Resource-usage models (Table II / VI, Fig 5)
+# ---------------------------------------------------------------------------
+def comm_transfers_per_round(scheme: str, n: int, k: int) -> int:
+    """Model transfers per training round (Table VI accounting)."""
+    if scheme == "batch":
+        return 0
+    if scheme == "fl":
+        return 2 * n                       # broadcast + gather
+    if scheme == "sbt":
+        return n - 1                       # sequential ring pass
+    if scheme == "tolfl":
+        # members -> heads (n - k), head chain (k - 1), head broadcast (k)
+        return n + k - 1
+    raise ValueError(scheme)
+
+
+def comm_mb_per_round(scheme: str, n: int, k: int, model_bytes: int) -> float:
+    return comm_transfers_per_round(scheme, n, k) * model_bytes / 1e6
+
+
+def round_time_model(scheme: str, n: int, k: int, samples: int,
+                     model_bytes: int, flops_per_sample: float,
+                     device_flops: float = 5e9, link_bw: float = 10e6
+                     ) -> float:
+    """Seconds per round under the paper's Section IV-A task-sequencing
+    model: parallel stages take the max over participants, sequential
+    stages sum.  link_bw in bytes/s (wireless-ish)."""
+    t_model = model_bytes / link_bw
+    per_dev = samples / max(n, 1) * flops_per_sample / device_flops
+    if scheme == "batch":
+        return samples * flops_per_sample / device_flops
+    if scheme == "fl":
+        return per_dev + 2 * t_model
+    if scheme == "sbt":
+        return per_dev + (n - 1) * t_model
+    if scheme == "tolfl":
+        return per_dev + 2 * t_model + (k - 1) * t_model
+    raise ValueError(scheme)

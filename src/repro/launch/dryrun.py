@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count on first backend initialisation (see brief, step 0).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) combination, lower + compile the
+appropriate step (train_step for train_4k, prefill for prefill_32k,
+serve/decode step for decode_32k & long_500k) against the production mesh:
+16x16 single-pod and 2x16x16 multi-pod, with ShapeDtypeStruct inputs (no
+allocation).  Prints memory_analysis / cost_analysis and writes a JSON
+record (incl. HLO collective-bytes breakdown) per combo for the roofline
+bench.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch qwen3-8b] [--shape train_4k] [--mesh single|multi|both]
+        [--schedule ring|psum|auto] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import costmodel as CM
+from repro.analysis.roofline import Roofline as R_Roofline
+from repro.analysis.roofline import build_roofline, model_flops_for
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, OptimizerConfig, \
+    TolFLConfig
+from repro.configs.base import AUDIO, VLM
+from repro.core import distributed as D
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.serving.decode import decode_step, prefill
+from repro.sharding import logical as L
+
+# archs that must store params FSDP-sharded over the data axis (100B+ or
+# >16GB/chip replicated; DESIGN.md section 2) -> weighted-psum schedule
+FSDP_ARCHS = {"llama4-maverick-400b-a17b", "llama4-scout-17b-a16e",
+              "internvl2-26b"}
+# optimizer-moment dtype override for the giants (memory budget)
+BF16_STATE_ARCHS = {"llama4-maverick-400b-a17b", "llama4-scout-17b-a16e"}
+
+# long_500k is skipped for pure full-attention archs (brief; DESIGN.md
+# section 4): whisper (enc-dec full attn) and internvl2 (full-attn VLM).
+LONG_SKIP = {"whisper-large-v3", "internvl2-26b"}
+
+
+def pick_schedule(arch: str, requested: str) -> str:
+    if requested == "ring":
+        return "tolfl_ring"
+    if requested == "psum":
+        return "tolfl_psum"
+    return "tolfl_psum" if arch in FSDP_ARCHS else "tolfl_ring"
+
+
+def rules_for_arch(arch: str) -> dict:
+    return L.rules_for("fsdp" if arch in FSDP_ARCHS else "replicated_data")
+
+
+def dryrun_one(arch: str, shape_name: str, mesh, mesh_name: str,
+               schedule: str = "auto", verbose: bool = True,
+               clusters: int = 4, grad_sync_dtype=None, microbatches: int = 1,
+               param_cast_dtype=None) -> dict:
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    rules = rules_for_arch(arch)
+    chips = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": chips, "mode": shape.mode}
+
+    if shape_name == "long_500k" and arch in LONG_SKIP:
+        rec["status"] = "skipped"
+        rec["reason"] = "pure full-attention arch (DESIGN.md section 4)"
+        return rec
+
+    t0 = time.time()
+    with L.activate_mesh(mesh, rules):
+        if shape.mode == "train":
+            sched = pick_schedule(arch, schedule)
+            rec["schedule"] = sched
+            rec["perf_knobs"] = {"clusters": clusters,
+                                 "grad_sync_dtype": grad_sync_dtype,
+                                 "microbatches": microbatches,
+                                 "param_cast_dtype": param_cast_dtype}
+            tolfl = TolFLConfig(num_clusters=clusters, schedule=sched,
+                                grad_sync_dtype=grad_sync_dtype,
+                                microbatches=microbatches,
+                                param_cast_dtype=param_cast_dtype)
+            ocfg = OptimizerConfig()
+            sdt = "bfloat16" if arch in BF16_STATE_ARCHS else None
+            step = D.make_train_step(cfg, tolfl, ocfg, mesh,
+                                     state_dtype=sdt)
+            state = SP.state_specs(cfg, ocfg, mesh, rules)
+            batch = SP.train_batch_specs(cfg, shape, mesh, rules)
+            alive = SP.alive_spec(mesh)
+            lowered = jax.jit(step).lower(state, batch, alive)
+        elif shape.mode == "prefill":
+            batch = SP.prefill_specs(cfg, shape, mesh, rules)
+            params = SP.params_specs(cfg, mesh, rules)
+            lowered = jax.jit(
+                lambda p, b: prefill(p, cfg, b)).lower(params, batch)
+        else:  # decode
+            long_ctx = shape_name == "long_500k"
+            dspec = SP.decode_specs(cfg, shape, mesh, rules,
+                                    long_context=long_ctx)
+            params = SP.params_specs(cfg, mesh, rules)
+            lowered = jax.jit(
+                lambda p, t, c, pos: decode_step(p, cfg, t, c, pos)).lower(
+                    params, dspec["tokens"], dspec["cache"],
+                    dspec["position"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_bytes = getattr(mem, "temp_size_in_bytes", None)
+        mem_str = str(mem)
+    except Exception:
+        mem_bytes, mem_str = None, "n/a"
+    hlo = compiled.as_text()
+    # HLO-derived record (raw; scan bodies counted once — see costmodel.py)
+    rl_hlo = build_roofline(arch, shape_name, mesh_name, chips, cost, hlo,
+                            model_flops_for(cfg, shape, shape.mode),
+                            memory_per_device=mem_bytes)
+    # analytic roofline (used for the section-Roofline table)
+    sizes = L.mesh_axis_sizes(mesh)
+    cb = CM.step_costs(
+        cfg, shape, chips, model_shards=sizes.get("model", 1),
+        data_shards=sizes.get("data", 1),
+        schedule=rec.get("schedule", "tolfl_ring"),
+        num_clusters=clusters, pods=sizes.get("pod", 1),
+        long_ctx=(shape_name == "long_500k"), fsdp=arch in FSDP_ARCHS,
+        grad_sync_dtype=grad_sync_dtype, microbatches=microbatches,
+        param_cast_dtype=param_cast_dtype)
+    rl = R_Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_chip=cb.flops, bytes_per_chip=cb.hbm_bytes,
+        coll_bytes_per_chip=cb.coll_bytes,
+        coll_breakdown=rl_hlo.coll_breakdown,
+        model_flops=model_flops_for(cfg, shape, shape.mode),
+        memory_per_device=mem_bytes)
+    rec.update(status="ok", t_lower=round(t_lower, 1),
+               t_compile=round(t_compile, 1), roofline=rl.to_dict(),
+               roofline_hlo=rl_hlo.to_dict(), memory_analysis=mem_str,
+               cost_flops=cost.get("flops"),
+               cost_bytes=cost.get("bytes accessed"))
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"  memory_analysis: {mem_str}")
+        print(f"  cost_analysis(raw HLO): flops={cost.get('flops'):.3e} "
+              f"bytes={cost.get('bytes accessed'):.3e}")
+        print(f"  HLO collectives: "
+              f"{ {k: v for k, v in rl_hlo.coll_breakdown.items() if v} }")
+        print(f"  roofline(analytic): comp={rl.t_compute:.3e}s "
+              f"mem={rl.t_memory:.3e}s coll={rl.t_collective:.3e}s "
+              f"-> {rl.bottleneck}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED),
+                    help="default: all assigned archs")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--schedule", default="auto",
+                    choices=["auto", "ring", "psum"])
+    ap.add_argument("--out", default="results/dryrun")
+    # perf-iteration knobs (EXPERIMENTS.md section Perf)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--grad-dtype", default=None,
+                    choices=[None, "bfloat16"], dest="grad_dtype")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--param-cast", default=None,
+                    choices=[None, "bfloat16"], dest="param_cast")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf variants)")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pod16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = dryrun_one(arch, shape, mesh, mesh_name,
+                                     args.schedule,
+                                     clusters=args.clusters,
+                                     grad_sync_dtype=args.grad_dtype,
+                                     microbatches=args.microbatches,
+                                     param_cast_dtype=args.param_cast)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e)}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    print(f"dry-run complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``.
+
+Runs real batched prefill + decode on the host mesh (reduced configs on
+CPU; the full-size path is what the decode_32k / long_500k dry-run
+lowers).  Reports prefill latency and per-token decode latency — the
+serving-side counterpart of launch/train.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serving.decode import decode_step, pad_cache, prefill
+from repro.sharding import logical as L
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(data=1, model=1)
+    rules = L.rules_for("replicated_data")
+
+    with L.activate_mesh(mesh, rules):
+        params, _ = T.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (args.batch, args.prompt), 0,
+                                     cfg.vocab_size)
+        batch = {"tokens": prompts}
+        if cfg.is_encdec:
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.encoder_seq or 16, cfg.d_model))
+        if cfg.frontend.kind == "vision":
+            batch["prefix"] = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.frontend.frontend_seq or 16, cfg.d_model))
+
+        print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+              f"batch={args.batch} prompt={args.prompt} gen={args.tokens}")
+        t0 = time.time()
+        logits, cache = jax.jit(
+            lambda p, b: prefill(p, cfg, b))(params, batch)
+        logits.block_until_ready()
+        print(f"prefill: {(time.time() - t0) * 1000:.1f} ms "
+              f"({args.batch * args.prompt} tokens)")
+
+        cache = pad_cache(cache, cfg, prompt_len=args.prompt,
+                          target_len=args.prompt + args.tokens)
+        step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        base = args.prompt
+        if cfg.frontend.kind == "vision":
+            base += batch["prefix"].shape[1]
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None] \
+            .astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for i in range(args.tokens - 1):
+            logits, cache = step(params, tok, cache, jnp.int32(base + i))
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None] \
+                .astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        dt = time.time() - t0
+        print(f"decode: {dt / max(args.tokens - 1, 1) * 1000:.1f} ms/token "
+              f"({args.tokens - 1} steps)")
+        gen = jnp.concatenate(out, axis=1)
+        print(f"sample[0]: {gen[0, :12].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

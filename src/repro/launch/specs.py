@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) combo.
+
+No device allocation — the dry-run lowers against these.  Shardings are
+attached to the structs so ``jit(...).lower()`` sees the production layout.
+
+Modality carve-out (brief): for audio/vlm the frontend is a stub —
+``input_specs`` hands precomputed frame/patch embeddings of the right
+shape instead of raw audio/pixels.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import (InputShape, ModelConfig, OptimizerConfig,
+                                TolFLConfig)
+from repro.core import distributed as D
+from repro.models.transformer import padded_vocab
+from repro.serving.decode import cache_logical_axes, cache_shape
+from repro.sharding import logical as L
+
+# vlm: number of (stubbed) patch-embedding prefix tokens
+VLM_PREFIX = 256
+
+
+def _sds(shape, dtype, mesh, axes, rules):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=L.sharding_for(mesh, axes, shape, rules))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      rules: dict) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    tok_axes = ("batch", None)
+    if cfg.frontend.kind == "vision":
+        P_ = VLM_PREFIX
+        batch["prefix"] = _sds((B, P_, cfg.d_model), jnp.dtype(cfg.dtype),
+                               mesh, ("batch", None, None), rules)
+        batch["tokens"] = _sds((B, S - P_), jnp.int32, mesh, tok_axes, rules)
+        batch["labels"] = _sds((B, S - P_), jnp.int32, mesh, tok_axes, rules)
+    elif cfg.is_encdec:
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               jnp.dtype(cfg.dtype), mesh,
+                               ("batch", None, None), rules)
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, tok_axes, rules)
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, tok_axes, rules)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, tok_axes, rules)
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, tok_axes, rules)
+    return batch
+
+
+def state_specs(cfg: ModelConfig, ocfg: OptimizerConfig, mesh: Mesh,
+                rules: dict):
+    shapes = jax.eval_shape(
+        lambda k: D.init_state(k, cfg, ocfg), jax.random.PRNGKey(0))
+    shardings = D.state_shardings(mesh, cfg, ocfg, rules)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def alive_spec(mesh: Mesh) -> jax.ShapeDtypeStruct:
+    g = D.num_groups(mesh)
+    return jax.ShapeDtypeStruct((g,), jnp.float32)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 rules: dict, long_context: bool = False) -> Dict[str, Any]:
+    B = shape.global_batch
+    cs = cache_shape(cfg, B, shape.seq_len, long_context)
+    axes = cache_logical_axes(cs)
+    cache = jax.tree.map(
+        lambda s, a: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=L.sharding_for(mesh, a, s.shape, rules)),
+        cs, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tokens = _sds((B, 1), jnp.int32, mesh, ("batch", None), rules)
+    position = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": tokens, "cache": cache, "position": position}
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                  rules: dict) -> Dict[str, Any]:
+    return train_batch_specs(cfg, shape, mesh, rules)
+
+
+def params_specs(cfg: ModelConfig, mesh: Mesh, rules: dict):
+    from repro.models import transformer as T
+    shapes = jax.eval_shape(
+        lambda k: T.init_params(k, cfg)[0], jax.random.PRNGKey(0))
+    axes = D.params_logical_axes(cfg)
+
+    def mk(s, a):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=L.sharding_for(mesh, a, s.shape,
+                                                      rules))
+
+    import jax.tree_util as jtu
+    flat_s, treedef = jtu.tree_flatten(shapes)
+    flat_a = treedef.flatten_up_to(axes)
+    return jtu.tree_unflatten(treedef, [mk(s, a)
+                                        for s, a in zip(flat_s, flat_a)])

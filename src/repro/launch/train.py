@@ -1,0 +1,99 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Runs real steps on the host mesh (CPU container: a small data x model mesh
+over however many devices exist; on TPU: the production mesh).  The same
+code path the dry-run lowers — make_train_step (ring or psum schedule),
+failure injection via the alive mask, checkpointing, metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES, OptimizerConfig, TolFLConfig
+from repro.core import distributed as D
+from repro.core.failure import FailureSpec, NO_FAILURE, alive_mask
+from repro.core.topology import Topology
+from repro.data.pipeline import TokenPipeline, shard_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding import logical as L
+from repro.training.checkpoint import CheckpointManager
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (CPU-runnable); --no-reduced for full")
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--schedule", default="tolfl_ring",
+                    choices=["tolfl_ring", "tolfl_psum", "fedavg",
+                             "sbt_ring"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--fail-epoch", type=int, default=-1,
+                    help="inject a failure at this step (-1: none)")
+    ap.add_argument("--fail-kind", default="server",
+                    choices=["server", "client"])
+    ap.add_argument("--data-axis", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (dry-run scale)")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(data=args.data_axis, model=1))
+    sizes = L.mesh_axis_sizes(mesh)
+    G = sizes.get("pod", 1) * sizes.get("data", 1)
+    clusters = min(args.clusters, G)
+    if args.schedule == "sbt_ring":
+        clusters = G
+    print(f"mesh={sizes} groups={G} clusters={clusters} arch={cfg.name} "
+          f"params={cfg.param_count()/1e6:.1f}M schedule={args.schedule}")
+
+    tolfl = TolFLConfig(num_clusters=clusters, schedule=args.schedule)
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=5,
+                           total_steps=args.steps)
+    topo = Topology(G, clusters)
+    failure = (NO_FAILURE if args.fail_epoch < 0 else
+               FailureSpec(epoch=args.fail_epoch, kind=args.fail_kind))
+
+    rules = L.rules_for("replicated_data")
+    with L.activate_mesh(mesh, rules):
+        step_fn = D.make_train_step(cfg, tolfl, ocfg, mesh)
+        state = D.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+        jit_step = jax.jit(step_fn, donate_argnums=0)
+
+        pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             global_batch=args.batch, num_groups=G)
+        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        t0 = time.time()
+        for step, host_batch in enumerate(pipe.batches(args.steps)):
+            alive = np.asarray(alive_mask(failure, topo, jnp.int32(step)))
+            batch = shard_batch(host_batch, mesh)
+            state, metrics = jit_step(state, batch, jnp.asarray(alive))
+            loss = float(metrics["loss"])
+            extras = ""
+            if "n_effective" in metrics:
+                extras = f" n_eff={float(metrics['n_effective']):.0f}"
+            print(f"step {step:4d} loss {loss:8.4f}{extras} "
+                  f"({time.time()-t0:5.1f}s)")
+            if ckpt and (step + 1) % 10 == 0:
+                ckpt.save({"params": state["params"],
+                           "step": state["step"]}, step + 1)
+        print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

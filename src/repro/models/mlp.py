@@ -1,0 +1,36 @@
+"""Dense MLP (optionally gated) with tensor-parallel ff sharding."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+from repro.sharding import logical as L
+
+
+def mlp_init(key, d_model: int, d_ff: int, glu: bool, dtype: str
+             ) -> Tuple[P.Params, P.Axes]:
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["up"], a["up"] = P.dense_init(ks[0], d_model, d_ff, "embed", "ff", dtype)
+    if glu:
+        p["gate"], a["gate"] = P.dense_init(ks[1], d_model, d_ff,
+                                            "embed", "ff", dtype)
+    p["down"], a["down"] = P.dense_init(ks[2], d_ff, d_model,
+                                        "ff", "embed", dtype)
+    return p, a
+
+
+def mlp_apply(p: P.Params, x: jax.Array, act: str, glu: bool) -> jax.Array:
+    f = P.activation(act)
+    h = P.dense_apply(p["up"], x, x.dtype)
+    if glu:
+        g = P.dense_apply(p["gate"], x, x.dtype)
+        h = f(g) * h
+    else:
+        h = f(h)
+    h = L.constrain(h, ("batch", "seq", "ff"))
+    out = P.dense_apply(p["down"], h, x.dtype)
+    return L.constrain(out, ("batch", "seq", "embed"))

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer (Llama-4-style top-k routing, GShard-style
+capacity dispatch) with expert-parallel sharding over the "model" mesh axis.
+
+Design (DESIGN.md section 4): activations are replicated over the model axis
+(batch over data), expert weights are sharded over experts.  Dispatch is a
+pair of one-hot einsums computed chunk-by-chunk over the sequence (a
+``lax.scan``), so the (tokens x experts x capacity) tensor never exceeds
+(B, chunk, E, C).  Each model-shard computes its slice of the expert dim
+locally; the combine contraction over the expert dim produces the single
+all-reduce over "model" (the TPU analogue of the MoE all-to-all for this
+activation layout).  Capacity overflow drops tokens (standard GShard
+semantics); the residual path keeps their values.
+
+Aux losses: load-balance (Switch) + router z-loss, returned for logging and
+added to the train objective.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import params as P
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.sharding import logical as L
+
+
+def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig, glu: bool,
+             dtype: str) -> Tuple[P.Params, P.Axes]:
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["router"], a["router"] = P.dense_init(
+        k_router, d_model, cfg.num_experts, "embed", "experts", dtype,
+        scale=0.02)
+    # experts: stacked mlp params with a leading 'experts' dim
+    exp_keys = jax.random.split(k_exp, cfg.num_experts)
+    per, ax = [], None
+    for ek in exp_keys:
+        ep, ax = mlp_init(ek, d_model, d_ff, glu, dtype)
+        per.append(ep)
+    p["experts"] = P.stack_layer_trees(per)
+    a["experts"] = jax.tree.map(lambda t: ("experts",) + t, ax,
+                                is_leaf=P.is_axes_leaf)
+    if cfg.shared_expert:
+        p["shared"], a["shared"] = mlp_init(k_shared, d_model, d_ff, glu, dtype)
+    return p, a
+
+
+def _capacity(chunk: int, cfg: MoEConfig) -> int:
+    c = int(chunk * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(c, 1)
+
+
+def _dispatch_mask(logits: jax.Array, cfg: MoEConfig, capacity: int):
+    """logits: (B, T, E) -> dispatch (B,T,E,C) bool-ish, combine (B,T,E,C).
+
+    Top-k selection with per-expert capacity enforced by a running cumsum
+    over the chunk (GShard position-in-expert)."""
+    B, T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    dispatch = jnp.zeros((B, T, E, capacity), jnp.float32)
+    combine = jnp.zeros((B, T, E, capacity), jnp.float32)
+    # running per-expert fill count
+    fill = jnp.zeros((B, E), jnp.int32)
+    masked = probs
+    for _ in range(cfg.num_experts_per_tok):
+        idx = jnp.argmax(masked, axis=-1)                    # (B,T)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)   # (B,T,E)
+        gate = jnp.sum(probs * onehot, axis=-1)              # (B,T)
+        # position of each token within its expert's buffer
+        pos_in_exp = (jnp.cumsum(onehot, axis=1) - onehot)   # (B,T,E)
+        pos = jnp.sum(pos_in_exp * onehot, axis=-1) + \
+            jnp.sum(fill[:, None, :] * onehot, axis=-1)      # (B,T)
+        keep = pos < capacity
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)           # (B,T,C)
+        d = onehot[..., None] * pos_oh[:, :, None, :] * \
+            keep[:, :, None, None].astype(jnp.float32)
+        dispatch = dispatch + d
+        combine = combine + d * gate[:, :, None, None]
+        fill = fill + jnp.sum(onehot, axis=1).astype(jnp.int32)
+        masked = masked * (1.0 - onehot)                     # exclude chosen
+    return dispatch, combine, probs
+
+
+def _expert_mlp(exp_p: P.Params, h: jax.Array, act: str, glu: bool
+                ) -> jax.Array:
+    """h: (B, E, C, d); expert weights carry a leading E dim."""
+    f = P.activation(act)
+    up = jnp.einsum("becd,edf->becf", h, exp_p["up"]["w"].astype(h.dtype))
+    if glu:
+        gate = jnp.einsum("becd,edf->becf", h,
+                          exp_p["gate"]["w"].astype(h.dtype))
+        mid = f(gate) * up
+    else:
+        mid = f(up)
+    mid = L.constrain(mid, ("batch", "experts", None, "ff"))
+    return jnp.einsum("becf,efd->becd", mid,
+                      exp_p["down"]["w"].astype(h.dtype))
+
+
+def moe_apply(p: P.Params, x: jax.Array, cfg: MoEConfig, act: str, glu: bool,
+              chunk: int = 512) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (out, aux) with aux = {'lb_loss', 'z_loss'}."""
+    from repro.models.transformer import divisor_block
+    B, S, d = x.shape
+    chunk = divisor_block(S, chunk)
+    C = _capacity(chunk, cfg)
+    xs = x.reshape(B, S // chunk, chunk, d).transpose(1, 0, 2, 3)
+
+    def step(_, xc):
+        logits = P.dense_apply(p["router"], xc, jnp.float32)     # (B,T,E)
+        dispatch, combine, probs = _dispatch_mask(logits, cfg, C)
+        h = jnp.einsum("btec,btd->becd", dispatch.astype(xc.dtype), xc)
+        h = L.constrain(h, ("batch", "experts", None, "embed"))
+        o = _expert_mlp(p["experts"], h, act, glu)
+        out = jnp.einsum("btec,becd->btd", combine.astype(xc.dtype), o)
+        out = L.constrain(out, ("batch", "seq", "embed"))
+        # aux losses (Switch LB + z-loss)
+        frac_tokens = jnp.mean(
+            jnp.sum(dispatch, axis=-1), axis=(0, 1))             # (E,)
+        frac_probs = jnp.mean(probs, axis=(0, 1))                # (E,)
+        lb = cfg.num_experts * jnp.sum(frac_tokens * frac_probs)
+        z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(
+            logits.astype(jnp.float32), axis=-1)))
+        return None, (out, lb, z)
+
+    _, (outs, lbs, zs) = jax.lax.scan(step, None, xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, d)
+    if cfg.shared_expert:
+        out = out + mlp_apply(p["shared"], x, act, glu)
+    aux = {"lb_loss": jnp.mean(lbs), "z_loss": jnp.mean(zs)}
+    return out, aux

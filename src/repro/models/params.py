@@ -1,0 +1,172 @@
+"""Minimal functional parameter system (no flax).
+
+Params are nested dicts of jnp arrays; a parallel ``axes`` tree (same
+structure, leaves = tuples of logical axis names) drives sharding.  Layer
+init functions return ``(params, axes)`` pairs and are composed by hand.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf: a (possibly empty) plain tuple of axis names.
+
+    NamedTuples (optimizer states) are containers, not leaves."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def normal_init(key, shape, dtype, stddev: float):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: Optional[str],
+               out_ax: Optional[str], dtype: str = "float32",
+               bias: bool = False, scale: Optional[float] = None
+               ) -> Tuple[Params, Axes]:
+    """Kernel (in,out) with fan-in scaled init."""
+    stddev = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": normal_init(key, (in_dim, out_dim), _dtype(dtype), stddev)}
+    a = {"w": (in_ax, out_ax)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), _dtype(dtype))
+        a["b"] = (out_ax,)
+    return p, a
+
+
+def dense_apply(p: Params, x: jax.Array, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        b = p["b"]
+        if compute_dtype is not None:
+            b = b.astype(compute_dtype)
+        y = y + b
+    return y
+
+
+def embed_init(key, vocab: int, dim: int, dtype: str = "float32"
+               ) -> Tuple[Params, Axes]:
+    p = {"table": normal_init(key, (vocab, dim), _dtype(dtype), 0.02)}
+    a = {"table": ("vocab", "embed")}
+    return p, a
+
+
+def rmsnorm_init(dim: int, dtype: str = "float32") -> Tuple[Params, Axes]:
+    return ({"scale": jnp.ones((dim,), _dtype(dtype))}, {"scale": ("embed",)})
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype: str = "float32") -> Tuple[Params, Axes]:
+    return ({"scale": jnp.ones((dim,), _dtype(dtype)),
+             "bias": jnp.zeros((dim,), _dtype(dtype))},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gradient-communication dtype boundary (beyond-paper perf lever)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def grad_bf16_boundary(x: jax.Array) -> jax.Array:
+    """Identity in the forward pass; rounds the COTANGENT to bfloat16 on
+    the way back.
+
+    Placed on the residual stream at tensor-parallel layer boundaries so
+    the backward-pass partial-sum all-reduces over the "model" axis carry
+    bf16 instead of f32 — halving the dominant TP collective payload
+    (EXPERIMENTS.md section Perf).  Megatron-style grad-comm compression;
+    numerics validated in tests/test_grad_comm.py."""
+    return x
+
+
+def _gb_fwd(x):
+    return x, None
+
+
+def _gb_bwd(_, g):
+    if g.dtype == jnp.float32:
+        g = g.astype(jnp.bfloat16).astype(jnp.float32)
+    return (g,)
+
+
+grad_bf16_boundary.defvjp(_gb_fwd, _gb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+        "linear": lambda x: x,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+def stack_layer_trees(trees: Sequence[Params]) -> Params:
+    """Stack per-layer param trees along a new leading 'layers' dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def add_layers_axis(axes: Axes) -> Axes:
+    return jax.tree.map(lambda a: ("layers",) + a, axes, is_leaf=is_axes_leaf)
+
+
+def param_count(params: Params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+def param_bytes(params: Params) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(params)))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+def tree_zeros_like(params: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

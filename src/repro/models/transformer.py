@@ -1,0 +1,416 @@
+"""Generic multi-family transformer backbone.
+
+One code path covers all six assigned families:
+
+* dense / moe   — (attn | moe-or-mlp) decoder layers
+* ssm (rwkv6)   — time-mix + channel-mix layers
+* hybrid        — RecurrentGemma (rec, rec, local-attn) pattern units
+* audio (enc-dec) — whisper backbone; conv/mel frontend stubbed upstream
+* vlm           — early-fusion prefix of (stubbed) patch embeddings
+
+The layer stack is scanned over *pattern units* (the repeating block of the
+layer pattern — 1 layer for dense, 2 for interleaved MoE, 3 for
+RecurrentGemma), keeping the HLO size O(unit) instead of O(num_layers).
+Remainder layers that don't fill a unit are applied unrolled ("tail").
+
+Modes: ``train`` (loss), ``prefill`` (build cache, last-token logits),
+``decode`` (one token against a cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, LOCAL_ATTN, ModelConfig, RECURRENT,
+                                RWKV)
+from repro.models import attention as A
+from repro.models import params as P
+from repro.models import rglru as G
+from repro.models import rwkv6 as R
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.sharding import logical as L
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def divisor_block(S: int, target: int) -> int:
+    """Largest block size <= target that divides S (chunked scans need
+    exact tiling; e.g. whisper's encoder S=1500 -> 500)."""
+    b = max(1, min(target, S))
+    while S % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Pattern units
+# ---------------------------------------------------------------------------
+def unit_pattern(cfg: ModelConfig) -> Tuple[Tuple[str, bool], ...]:
+    """The repeating unit as ((kind, use_moe), ...)."""
+    pat = cfg.layer_pattern
+    if cfg.moe.num_experts > 0:
+        unit_len = cfg.moe.interleave
+    elif cfg.recurrent.block_pattern:
+        unit_len = len(cfg.recurrent.block_pattern)
+    else:
+        unit_len = 1
+    unit_len = min(unit_len, cfg.num_layers)
+    unit = []
+    for i in range(unit_len):
+        kind = pat[i]
+        use_moe = cfg.moe.num_experts > 0 and i % cfg.moe.interleave == 0
+        unit.append((kind, use_moe))
+    return tuple(unit)
+
+
+def unit_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(num_scanned_units, num_tail_layers)."""
+    u = len(unit_pattern(cfg))
+    return cfg.num_layers // u, cfg.num_layers % u
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ModelConfig, kind: str, use_moe: bool
+                ) -> Tuple[P.Params, P.Axes]:
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = P.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    p["norm2"], a["norm2"] = P.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    if kind in (ATTN, LOCAL_ATTN):
+        p["mix"], a["mix"] = A.attn_init(ks[0], cfg.d_model, cfg.attention,
+                                         cfg.param_dtype)
+    elif kind == RECURRENT:
+        p["mix"], a["mix"] = G.rglru_init(ks[0], cfg)
+    elif kind == RWKV:
+        p["mix"], a["mix"] = R.timemix_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind == RWKV:
+        p["mlp"], a["mlp"] = R.channelmix_init(ks[1], cfg)
+    elif use_moe:
+        p["mlp"], a["mlp"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe,
+                                      cfg.glu, cfg.param_dtype)
+    else:
+        p["mlp"], a["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu,
+                                      cfg.param_dtype)
+    return p, a
+
+
+def _unit_init(key, cfg: ModelConfig) -> Tuple[P.Params, P.Axes]:
+    unit = unit_pattern(cfg)
+    p, a = {}, {}
+    for i, (kind, use_moe) in enumerate(unit):
+        ki = jax.random.fold_in(key, i)
+        p[f"l{i}"], a[f"l{i}"] = _layer_init(ki, cfg, kind, use_moe)
+    return p, a
+
+
+def _encoder_layer_init(key, cfg: ModelConfig) -> Tuple[P.Params, P.Axes]:
+    """Whisper encoder layer: bidirectional self-attn + mlp."""
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = P.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    p["norm2"], a["norm2"] = P.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    p["attn"], a["attn"] = A.attn_init(ks[0], cfg.d_model, cfg.attention,
+                                       cfg.param_dtype)
+    p["mlp"], a["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu,
+                                  cfg.param_dtype)
+    return p, a
+
+
+def _cross_layer_init(key, cfg: ModelConfig) -> Tuple[P.Params, P.Axes]:
+    p, a = {}, {}
+    p["norm"], a["norm"] = P.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    p["attn"], a["attn"] = A.attn_init(key, cfg.d_model, cfg.attention,
+                                       cfg.param_dtype)
+    return p, a
+
+
+def init_params(key, cfg: ModelConfig) -> Tuple[P.Params, P.Axes]:
+    keys = jax.random.split(key, 8)
+    Vp = padded_vocab(cfg)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = P.embed_init(keys[0], Vp, cfg.d_model,
+                                          cfg.param_dtype)
+    n_units, n_tail = unit_counts(cfg)
+    per, ax = [], None
+    for i in range(n_units):
+        up, ax = _unit_init(jax.random.fold_in(keys[1], i), cfg)
+        per.append(up)
+    p["units"] = P.stack_layer_trees(per)
+    a["units"] = P.add_layers_axis(ax)
+    if n_tail:
+        tail_p, tail_a = {}, {}
+        unit = unit_pattern(cfg)
+        for i in range(n_tail):
+            kind, use_moe = unit[i]
+            tail_p[f"l{i}"], tail_a[f"l{i}"] = _layer_init(
+                jax.random.fold_in(keys[2], i), cfg, kind, use_moe)
+        p["tail"], a["tail"] = tail_p, tail_a
+    p["final_norm"], a["final_norm"] = P.rmsnorm_init(cfg.d_model,
+                                                      cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = P.dense_init(keys[3], cfg.d_model, Vp,
+                                            "embed", "vocab", cfg.param_dtype)
+    if cfg.is_encdec:
+        enc_p, enc_ax = [], None
+        for i in range(cfg.num_encoder_layers):
+            ep, enc_ax = _encoder_layer_init(jax.random.fold_in(keys[4], i),
+                                             cfg)
+            enc_p.append(ep)
+        cross_p, cross_ax = [], None
+        for i in range(cfg.num_layers):
+            cp, cross_ax = _cross_layer_init(jax.random.fold_in(keys[5], i),
+                                             cfg)
+            cross_p.append(cp)
+        p["encoder"] = {"layers": P.stack_layer_trees(enc_p)}
+        a["encoder"] = {"layers": P.add_layers_axis(enc_ax)}
+        p["encoder"]["norm"], a["encoder"]["norm"] = P.rmsnorm_init(
+            cfg.d_model, cfg.param_dtype)
+        p["cross"] = {"layers": P.stack_layer_trees(cross_p)}
+        a["cross"] = {"layers": P.add_layers_axis(cross_ax)}
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+def embed_tokens(params: P.Params, cfg: ModelConfig, tokens: jax.Array
+                 ) -> jax.Array:
+    x = params["embed"]["table"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return L.constrain(x, ("batch", "seq", "embed"))
+
+
+def sinusoidal_positions(S: int, d: int, offset: int = 0) -> jax.Array:
+    pos = np.arange(offset, offset + S)[:, None]
+    div = np.exp(np.arange(0, d, 2) * (-np.log(10000.0) / d))
+    pe = np.zeros((S, d), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)
+
+
+def logits_fn(params: P.Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """h: (..., d) -> (..., Vp)."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(h.dtype)
+        out = h @ w.T
+    else:
+        out = P.dense_apply(params["head"], h, h.dtype)
+    return out
+
+
+def xent_loss(params: P.Params, cfg: ModelConfig, h: jax.Array,
+              labels: jax.Array, mask: Optional[jax.Array] = None,
+              chunk: int = 512) -> jax.Array:
+    """Chunked softmax cross-entropy.  h: (B,S,d), labels: (B,S) int32.
+
+    Padded vocab entries are excluded via a -inf additive mask; the seq dim
+    is processed in chunks so per-step logits stay (B, chunk, Vp)."""
+    B, S, d = h.shape
+    Vp = padded_vocab(cfg)
+    V = cfg.vocab_size
+    chunk = divisor_block(S, chunk)
+    pad_mask = jnp.where(jnp.arange(Vp) < V, 0.0, A.NEG_INF)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    hs = h.reshape(B, S // chunk, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        hc, lc, mc = xs
+        logits = logits_fn(params, cfg, hc).astype(jnp.float32) + pad_mask
+        logits = L.constrain(logits, ("batch", "seq", "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+def _apply_layer_train(p: P.Params, x: jax.Array, cfg: ModelConfig,
+                       kind: str, use_moe: bool, use_pallas: bool
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux_loss)."""
+    aux = jnp.float32(0)
+    h = P.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+    h, _ = _mix_train(p["mix"], h, cfg, kind, use_pallas)
+    x = x + h
+    h = P.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+    if kind == RWKV:
+        h, _ = R.channelmix_apply(p["mlp"], h)
+    elif use_moe:
+        h, moe_aux = moe_apply(p["mlp"], h, cfg.moe, cfg.act, cfg.glu)
+        aux = aux + cfg.moe.router_aux_loss_coef * moe_aux["lb_loss"] \
+            + 1e-3 * moe_aux["z_loss"]
+    else:
+        h = mlp_apply(p["mlp"], h, cfg.act, cfg.glu)
+    return x + h, aux
+
+
+def _mix_train(p, h, cfg: ModelConfig, kind: str, use_pallas: bool):
+    if kind == ATTN:
+        return A.attn_apply(p, h, cfg.attention, cfg.norm_eps,
+                            window=cfg.attention.sliding_window,
+                            use_pallas=use_pallas), None
+    if kind == LOCAL_ATTN:
+        return A.attn_apply(p, h, cfg.attention, cfg.norm_eps,
+                            window=cfg.attention.sliding_window or
+                            cfg.attention.long_context_window,
+                            use_pallas=use_pallas), None
+    if kind == RECURRENT:
+        out, _ = G.rglru_apply(p, h, cfg, use_pallas=use_pallas)
+        return out, None
+    if kind == RWKV:
+        out, _ = R.timemix_apply(p, h, cfg, use_pallas=use_pallas)
+        return out, None
+    raise ValueError(kind)
+
+
+def _apply_unit_train(unit_p: P.Params, x: jax.Array, cfg: ModelConfig,
+                      use_pallas: bool) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.float32(0)
+    for i, (kind, use_moe) in enumerate(unit_pattern(cfg)):
+        x, a = _apply_layer_train(unit_p[f"l{i}"], x, cfg, kind, use_moe,
+                                  use_pallas)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward: train
+# ---------------------------------------------------------------------------
+def forward_train(params: P.Params, cfg: ModelConfig, batch: Dict[str, Any],
+                  use_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B,S,d), moe_aux_scalar).
+
+    batch: tokens (B,S_text); optional 'prefix' (B,P,d) early-fusion
+    embeddings (vlm); optional 'frames' (B,F,d) encoder stub input (audio).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.frontend.kind == "vision" and "prefix" in batch:
+        pre = batch["prefix"].astype(x.dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        x = L.constrain(x, ("batch", "seq", "embed"))
+    if cfg.attention.rope_theta == 0:
+        S = x.shape[1]
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"], use_pallas)
+
+    n_units, n_tail = unit_counts(cfg)
+    unit_fn = functools.partial(_apply_unit_train, cfg=cfg,
+                                use_pallas=use_pallas)
+    if cfg.remat == "full":
+        unit_fn = jax.checkpoint(unit_fn)
+
+    if cfg.is_encdec:
+        # enc-dec: cross-attention between self-attn and mlp; scan over
+        # (unit, cross) pairs.  Units are single layers for whisper.
+        def body(carry, ps):
+            x, aux = carry
+            up, cp = ps
+            h = P.rmsnorm_apply(up["l0"]["norm1"], x, cfg.norm_eps)
+            h, _ = _mix_train(up["l0"]["mix"], h, cfg, ATTN, use_pallas)
+            x = x + h
+            h = P.rmsnorm_apply(cp["norm"], x, cfg.norm_eps)
+            x = x + cross_attend(cp["attn"], h, enc_out, cfg, use_pallas)
+            h = P.rmsnorm_apply(up["l0"]["norm2"], x, cfg.norm_eps)
+            x = x + mlp_apply(up["l0"]["mlp"], h, cfg.act, cfg.glu)
+            return (x, aux), None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                                   (params["units"],
+                                    params["cross"]["layers"]))
+    else:
+        def body(carry, up):
+            x, aux = carry
+            x, a = unit_fn(up, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                                   params["units"])
+        for i in range(n_tail):
+            kind, use_moe = unit_pattern(cfg)[i]
+            x, a = _apply_layer_train(params["tail"][f"l{i}"], x, cfg, kind,
+                                      use_moe, use_pallas)
+            aux = aux + a
+    x = P.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def cross_attend(p: P.Params, h: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig, use_pallas: bool) -> jax.Array:
+    """Decoder cross-attention: queries from h, keys/values from enc_out."""
+    B, S, _ = h.shape
+    F = enc_out.shape[1]
+    acfg = cfg.attention
+    q = P.dense_apply(p["q"], h, h.dtype).reshape(B, S, acfg.num_heads,
+                                                  acfg.head_dim)
+    k = P.dense_apply(p["k"], enc_out, h.dtype).reshape(
+        B, F, acfg.num_kv_heads, acfg.head_dim)
+    v = P.dense_apply(p["v"], enc_out, h.dtype).reshape(
+        B, F, acfg.num_kv_heads, acfg.head_dim)
+    out = A.blocked_attention(q, k, v, causal=False, window=None,
+                              q_block=512, kv_block=min(512, F))
+    out = out.reshape(B, S, acfg.num_heads * acfg.head_dim)
+    return P.dense_apply(p["o"], out, h.dtype)
+
+
+def encode(params: P.Params, cfg: ModelConfig, frames: jax.Array,
+           use_pallas: bool = False) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings (B,F,d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = L.constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        h = P.rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+        h = A.attn_apply(lp["attn"], h, cfg.attention, cfg.norm_eps,
+                         causal=False, window=None, use_pallas=use_pallas)
+        x = x + h
+        h = P.rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act, cfg.glu)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return P.rmsnorm_apply(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def loss_fn(params: P.Params, cfg: ModelConfig, batch: Dict[str, Any],
+            use_pallas: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, aux = forward_train(params, cfg, batch, use_pallas)
+    labels = batch["labels"]
+    if cfg.frontend.kind == "vision" and "prefix" in batch:
+        # loss only over text positions (after the patch prefix)
+        Ptok = batch["prefix"].shape[1]
+        h = h[:, Ptok:, :]
+    loss = xent_loss(params, cfg, h, labels, batch.get("mask"))
+    total = loss + aux
+    return total, {"xent": loss, "moe_aux": aux}

@@ -1,0 +1,153 @@
+"""Optimizers from scratch (no optax): SGD, Adam, AdamW + schedules + clip.
+
+API mirrors optax minimally: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  All state lives in pytrees so the whole thing jits and
+shards like the params do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.models.params import global_norm
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def make_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    base = cfg.lr
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / jnp.maximum(cfg.warmup_steps, 1))
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                            0.0, 1.0)
+            decay = 1.0 - frac
+        elif cfg.schedule == "cosine":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                            0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            raise ValueError(cfg.schedule)
+        return base * warm * decay
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(cfg: OptimizerConfig, momentum: float = 0.0) -> Optimizer:
+    sched = make_schedule(cfg)
+
+    def init(params):
+        mom = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = sched(state.step)
+        if momentum:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g,
+                                 state.momentum, grads)
+            upd = jax.tree.map(lambda m: (-lr * m).astype(m.dtype), new_m)
+            return upd, SGDState(state.step + 1, new_m)
+        upd = jax.tree.map(lambda g: (-lr * g).astype(g.dtype), grads)
+        return upd, SGDState(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(cfg: OptimizerConfig, weight_decay: Optional[float] = None,
+         state_dtype: Optional[str] = None) -> Optimizer:
+    """Adam/AdamW.  ``state_dtype`` overrides the moment dtype (bf16 for the
+    very large architectures — see DESIGN.md memory budget)."""
+    sched = make_schedule(cfg)
+    wd = cfg.weight_decay if weight_decay is None else weight_decay
+
+    def init(params):
+        dt = jnp.dtype(state_dtype) if state_dtype else None
+        z = lambda p: jnp.zeros(p.shape, dt or p.dtype)  # noqa: E731
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params=None):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        step = state.step + 1
+        lr = sched(state.step)
+        b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+        mu = jax.tree.map(lambda m, g: (b1 * m + (1 - b1) * g).astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32))).astype(v.dtype),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if wd and p is not None:
+                step_ = step_ + wd * p.astype(jnp.float32)
+            return (-lr * step_).astype(p.dtype if p is not None else m.dtype)
+
+        if params is None:
+            params = jax.tree.map(lambda m: None, mu)
+        upd = jax.tree.map(u, mu, nu, params)
+        return upd, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig, state_dtype: Optional[str] = None
+                   ) -> Optimizer:
+    if cfg.name == "sgd":
+        return sgd(cfg)
+    if cfg.name in ("adam", "adamw"):
+        return adam(cfg, state_dtype=state_dtype)
+    raise ValueError(cfg.name)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,6 @@
+from repro.sharding.logical import (activate_mesh, constrain, current_mesh,
+                                    current_rules, mesh_axis_sizes, rules_for,
+                                    sharding_for, spec_for)
+
+__all__ = ["activate_mesh", "constrain", "current_mesh", "current_rules",
+           "mesh_axis_sizes", "rules_for", "sharding_for", "spec_for"]

@@ -1,0 +1,85 @@
+"""Checkpointing: msgpack-serialised pytrees with shape/dtype manifest.
+
+No orbax offline; this covers the need: save/restore params + optimizer
+state + step, atomically (tmp + rename), with a keep-last-k policy.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    arr = np.asarray(jax.device_get(x))
+    return {b"dtype": str(arr.dtype).encode(),
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    return jnp.asarray(arr.reshape(d[b"shape"]))
+
+
+def save(path: str, tree: Any, step: int = 0) -> str:
+    """Atomic save of a pytree; returns the final path."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {b"step": step,
+               b"treedef": str(treedef).encode(),
+               b"leaves": [_pack_leaf(x) for x in leaves]}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+    return path
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree.flatten(like)
+    got = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    assert len(got) == len(leaves), (len(got), len(leaves))
+    for a, b in zip(got, leaves):
+        assert a.shape == b.shape, (a.shape, b.shape)
+    return jax.tree.unflatten(treedef, got), int(payload[b"step"])
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.msgpack")
+
+    def save(self, tree: Any, step: int) -> str:
+        p = save(self._path(step), tree, step)
+        self._gc()
+        return p
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(f[5:13]) for f in os.listdir(self.dir)
+                       if f.startswith("ckpt_") and f.endswith(".msgpack"))
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like: Any) -> Optional[Tuple[Any, int]]:
+        s = self.latest_step()
+        if s is None:
+            return None
+        return restore(self._path(s), like)
+
+    def _gc(self):
+        steps = sorted(int(f[5:13]) for f in os.listdir(self.dir)
+                       if f.startswith("ckpt_") and f.endswith(".msgpack"))
+        for s in steps[:-self.keep]:
+            os.remove(self._path(s))

@@ -1,0 +1,38 @@
+"""Shared fixtures for the Tol-FL test suite.
+
+NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+and benches must see the single real CPU device (brief, step 0).  The
+multi-device distributed tests spawn subprocesses that set the flag
+themselves (tests/test_distributed.py).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.data import commsml, federated
+
+
+@pytest.fixture(scope="session")
+def tiny_ae_cfg():
+    """Small autoencoder for fast simulator tests."""
+    return AutoencoderConfig(input_dim=commsml.N_FEATURES,
+                             hidden=(32, 16), code_dim=8, dropout=0.2)
+
+
+@pytest.fixture(scope="session")
+def tiny_commsml():
+    """Small Comms-ML draw: (X, y) with 200 samples/class."""
+    return commsml.generate(seed=0, samples_per_class=200)
+
+
+@pytest.fixture(scope="session")
+def tiny_split(tiny_commsml):
+    """10 devices, 5 clusters, class 3 anomalous."""
+    X, y = tiny_commsml
+    return federated.make_split(X, y, num_devices=10, num_clusters=5,
+                                anomaly_classes=[3], seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_padded(tiny_split):
+    return federated.pad_devices(tiny_split)

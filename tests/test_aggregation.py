@@ -1,0 +1,178 @@
+"""Unit + property tests for the Tol-FL aggregation algebra.
+
+The paper's central mathematical claim (Section III): the hierarchical
+streaming weighted mean equals the direct sample-weighted mean regardless
+of the clustering k — model updates are *independent of k*.  We
+property-test exactly that.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+jax.config.update("jax_enable_x64", False)
+
+
+def direct_mean(gs, ns):
+    tot = np.sum(ns)
+    return np.tensordot(ns / tot, gs, axes=1)
+
+
+# ---------------------------------------------------------------------------
+# combine_pair
+# ---------------------------------------------------------------------------
+def test_combine_pair_basic():
+    n, g = agg.combine_pair(jnp.float32(2), jnp.ones(3),
+                            jnp.float32(2), 3 * jnp.ones(3))
+    assert float(n) == 4.0
+    np.testing.assert_allclose(np.asarray(g), 2.0, rtol=1e-6)
+
+
+def test_combine_pair_zero_absorbed():
+    """A zero-count operand is a no-op (the failure-masking path)."""
+    n, g = agg.combine_pair(jnp.float32(5), 2 * jnp.ones(4),
+                            jnp.float32(0), 99 * jnp.ones(4))
+    assert float(n) == 5.0
+    np.testing.assert_allclose(np.asarray(g), 2.0, rtol=1e-6)
+
+
+def test_combine_pair_both_zero():
+    n, g = agg.combine_pair(jnp.float32(0), jnp.zeros(2),
+                            jnp.float32(0), jnp.ones(2))
+    assert float(n) == 0.0
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_combine_pair_pytree():
+    tree_a = {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)}
+    tree_b = {"w": 3 * jnp.ones((2, 2)), "b": 2 * jnp.ones(2)}
+    n, g = agg.combine_pair(jnp.float32(1), tree_a, jnp.float32(1), tree_b)
+    np.testing.assert_allclose(np.asarray(g["w"]), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g["b"]), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming == direct (the k-invariance core)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    dim=st.integers(1, 16),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_streaming_equals_direct(k, dim, seed):
+    rng = np.random.default_rng(seed)
+    gs = rng.standard_normal((k, dim)).astype(np.float32)
+    ns = rng.uniform(0.5, 100.0, k).astype(np.float32)
+    _, g_stream = agg.streaming_weighted_mean(list(jnp.asarray(gs)),
+                                              list(jnp.asarray(ns)))
+    want = direct_mean(gs, ns)
+    np.testing.assert_allclose(np.asarray(g_stream), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(2, 8),
+    dim=st.integers(1, 16),
+    n_zero=st.integers(1, 3),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_streaming_with_dead_devices(k, dim, n_zero, seed):
+    """Zero-weighted (failed) devices drop out of the mean exactly."""
+    rng = np.random.default_rng(seed)
+    gs = rng.standard_normal((k, dim)).astype(np.float32)
+    ns = rng.uniform(0.5, 100.0, k).astype(np.float32)
+    dead = rng.choice(k, size=min(n_zero, k - 1), replace=False)
+    ns[dead] = 0.0
+    _, g_stream = agg.streaming_weighted_mean(list(jnp.asarray(gs)),
+                                              list(jnp.asarray(ns)))
+    live = ns > 0
+    want = direct_mean(gs[live], ns[live])
+    np.testing.assert_allclose(np.asarray(g_stream), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 10), seed=st.integers(0, 2 ** 31 - 1))
+def test_stacked_matches_sequential(k, seed):
+    rng = np.random.default_rng(seed)
+    gs = jnp.asarray(rng.standard_normal((k, 7)).astype(np.float32))
+    ns = jnp.asarray(rng.uniform(0.1, 10.0, k).astype(np.float32))
+    n1, g1 = agg.streaming_weighted_mean(list(gs), list(ns))
+    n2, g2 = agg.stacked_streaming_mean(gs, ns)
+    np.testing.assert_allclose(float(n1), float(n2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_weighted_mean_direct():
+    gs = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    ns = jnp.asarray([1.0, 3.0])
+    g = agg.weighted_mean(gs, ns)
+    np.testing.assert_allclose(np.asarray(g), [2.5, 3.5], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cluster_reduce + full hierarchy == flat mean (paper k-invariance)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(
+    members=st.integers(1, 4),
+    k=st.integers(1, 5),
+    dim=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_k_invariance_hierarchical(members, k, dim, seed):
+    """cluster_reduce -> streaming chain == flat weighted mean over all
+    devices, for ANY clustering (the paper's 'independent of k')."""
+    n_dev = members * k
+    rng = np.random.default_rng(seed)
+    gs = rng.standard_normal((n_dev, dim)).astype(np.float32)
+    ns = rng.uniform(0.5, 50.0, n_dev).astype(np.float32)
+    cluster_ids = jnp.asarray(np.arange(n_dev) // members)
+    cg, cn = agg.cluster_reduce(jnp.asarray(gs), jnp.asarray(ns),
+                                cluster_ids, k)
+    _, g_hier = agg.stacked_streaming_mean(cg, cn)
+    want = direct_mean(gs, ns)
+    np.testing.assert_allclose(np.asarray(g_hier), want, rtol=5e-4,
+                               atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_k_invariance_across_k(seed):
+    """The combined gradient is numerically identical for every divisor k
+    of N (FL k=1 == Tol-FL k=2,4 == SBT k=N up to float error)."""
+    n_dev, dim = 8, 12
+    rng = np.random.default_rng(seed)
+    gs = jnp.asarray(rng.standard_normal((n_dev, dim)).astype(np.float32))
+    ns = jnp.asarray(rng.uniform(1.0, 20.0, n_dev).astype(np.float32))
+    results = []
+    for k in (1, 2, 4, 8):
+        ids = jnp.asarray(np.arange(n_dev) // (n_dev // k))
+        cg, cn = agg.cluster_reduce(gs, ns, ids, k)
+        _, g = agg.stacked_streaming_mean(cg, cn)
+        results.append(np.asarray(g))
+    for r in results[1:]:
+        np.testing.assert_allclose(r, results[0], rtol=5e-4, atol=5e-5)
+
+
+def test_cluster_reduce_counts():
+    gs = jnp.ones((4, 3))
+    ns = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    ids = jnp.asarray([0, 0, 1, 1])
+    cg, cn = agg.cluster_reduce(gs, ns, ids, 2)
+    np.testing.assert_allclose(np.asarray(cn), [3.0, 7.0], rtol=1e-6)
+    assert cg.shape == (2, 3)
+
+
+def test_cluster_reduce_weighting():
+    gs = jnp.asarray([[0.0], [10.0]])
+    ns = jnp.asarray([9.0, 1.0])
+    ids = jnp.asarray([0, 0])
+    cg, cn = agg.cluster_reduce(gs, ns, ids, 1)
+    np.testing.assert_allclose(np.asarray(cg), [[1.0]], rtol=1e-6)

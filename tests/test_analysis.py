@@ -1,0 +1,138 @@
+"""Roofline / cost-model analysis layer tests."""
+import numpy as np
+import pytest
+
+from repro.analysis import costmodel as CM
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     build_roofline, collective_bytes,
+                                     model_flops_for)
+from repro.configs import ARCHS, INPUT_SHAPES
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes parser
+# ---------------------------------------------------------------------------
+SAMPLE_HLO = """
+HloModule test
+  %x = f32[16,128]{1,0} all-reduce(%a), replica_groups={}
+  %y = bf16[8,64]{1,0} all-gather(%b), dimensions={0}
+  %z = (f32[4]{0}, f32[4]{0}) all-reduce(%c, %d), to_apply=%add
+  %w = f32[32]{0} collective-permute(%e), source_target_pairs={{0,1}}
+  %s = f32[2,2]{1,0} all-reduce-start(%f), to_apply=%add
+  %t = f32[2,2]{1,0} all-reduce-done(%s)
+  %u = f32[100]{0} reduce-scatter(%g), dimensions={0}
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["all-reduce"] == 16 * 128 * 4 + 2 * 4 * 4 + 2 * 2 * 4
+    assert out["all-gather"] == 8 * 64 * 2
+    assert out["collective-permute"] == 32 * 4
+    assert out["reduce-scatter"] == 100 * 4
+
+
+def test_collective_bytes_counts_async_once():
+    """-start/-done pairs are one transfer."""
+    out = collective_bytes(SAMPLE_HLO)
+    # the start op contributes 2x2x4; the done op must not double it
+    assert out["all-reduce"] - (16 * 128 * 4 + 2 * 4 * 4) == 16
+
+
+def test_collective_bytes_empty():
+    assert sum(collective_bytes("HloModule empty").values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 flops_per_chip=PEAK_FLOPS,       # 1 second of compute
+                 bytes_per_chip=HBM_BW / 2,       # 0.5 s memory
+                 coll_bytes_per_chip=ICI_BW / 4,  # 0.25 s collective
+                 coll_breakdown={}, model_flops=PEAK_FLOPS * 256 / 2)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_modes():
+    cfg = ARCHS["qwen1.5-0.5b"]
+    tr = model_flops_for(cfg, INPUT_SHAPES["train_4k"], "train")
+    pf = model_flops_for(cfg, INPUT_SHAPES["prefill_32k"], "prefill")
+    dc = model_flops_for(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    # train: 6ND over B*S tokens; decode: 2ND over B tokens
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6.0 * n * 4096 * 256)
+    assert pf == pytest.approx(2.0 * n * 32768 * 32)
+    assert dc == pytest.approx(2.0 * n * 128)
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model invariants
+# ---------------------------------------------------------------------------
+def costs(arch="qwen3-8b", shape="train_4k", **kw):
+    args = dict(model_shards=16, data_shards=16, schedule="tolfl_ring",
+                num_clusters=4, pods=1)
+    args.update(kw)
+    return CM.step_costs(ARCHS[arch], INPUT_SHAPES[shape], 256, **args)
+
+
+def test_ring_chain_cost_linear_in_k():
+    """coll(k) - coll(k') == (k - k') * grad_share for the ring chain."""
+    c2 = costs(num_clusters=2).coll_bytes
+    c4 = costs(num_clusters=4).coll_bytes
+    c8 = costs(num_clusters=8).coll_bytes
+    step1 = c4 - c2
+    step2 = (c8 - c4) / 2
+    assert step1 == pytest.approx(step2, rel=1e-6)
+    assert step1 > 0
+
+
+def test_bf16_sync_halves_grad_payload():
+    base = costs().coll_bytes
+    narrow = costs(grad_sync_dtype="bfloat16").coll_bytes
+    assert narrow < base
+    # grad-dependent share exactly halves: delta = grad_terms/2
+    gshare_f32 = ARCHS["qwen3-8b"].param_count() * 4 / 16
+    k_terms = 2.0 + (4 - 1) + 2.0       # psum + chain + broadcast, k=4
+    assert base - narrow == pytest.approx(k_terms * gshare_f32 / 2, rel=1e-6)
+
+
+def test_microbatch_divides_activation_bytes():
+    b1 = costs().hbm_bytes
+    b4 = costs(microbatches=4).hbm_bytes
+    assert b4 < b1
+
+
+def test_param_cast_halves_fsdp_gather():
+    base = costs(arch="llama4-maverick-400b-a17b", schedule="tolfl_psum",
+                 fsdp=True).coll_bytes
+    cast = costs(arch="llama4-maverick-400b-a17b", schedule="tolfl_psum",
+                 fsdp=True, param_cast_dtype="bfloat16").coll_bytes
+    P = ARCHS["llama4-maverick-400b-a17b"].param_count()
+    passes = 4.0    # remat=full
+    assert base - cast == pytest.approx(passes * P * 2 / 16, rel=1e-6)
+
+
+def test_decode_memory_dominated_by_weights_and_cache():
+    cb = costs(shape="decode_32k")
+    # decode flops tiny relative to train
+    assert cb.flops < costs().flops / 100
+
+
+def test_psum_schedule_cheaper_than_ring():
+    ring = costs(schedule="tolfl_ring").coll_bytes
+    psum = costs(schedule="tolfl_psum").coll_bytes
+    assert psum <= ring
+
+
+def test_long_context_caps_attention_flops():
+    full = CM.forward_flops(ARCHS["qwen3-8b"], 1, 524288, "decode",
+                            long_ctx=False)
+    capped = CM.forward_flops(ARCHS["qwen3-8b"], 1, 524288, "decode",
+                              long_ctx=True)
+    assert capped["attention"] < full["attention"]

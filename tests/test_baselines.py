@@ -1,0 +1,45 @@
+"""Clustered-FL baseline tests (FedGroup / IFCA / FeSEM)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import MultiModelConfig, run_multimodel
+from repro.core.failure import NO_FAILURE, FailureSpec
+
+ROUNDS = 30
+
+
+def run(ae_cfg, padded, split, scheme, failure=NO_FAILURE):
+    dx, counts = padded
+    cfg = MultiModelConfig(scheme=scheme, num_devices=10, num_models=3,
+                           rounds=ROUNDS, lr=1e-3, dropout=True, seed=0)
+    return run_multimodel(ae_cfg, dx, counts, split.test_x, split.test_y,
+                          cfg, failure)
+
+
+@pytest.mark.parametrize("scheme", ["fedgroup", "ifca", "fesem"])
+def test_baseline_learns(scheme, tiny_ae_cfg, tiny_padded, tiny_split):
+    res = run(tiny_ae_cfg, tiny_padded, tiny_split, scheme)
+    assert res.best_auroc > 0.6, (scheme, res.best_auroc)
+    assert res.multi_auroc > 0.6, (scheme, res.multi_auroc)
+    assert res.loss_curve[-1] < res.loss_curve[0]
+    assert res.assignments.shape == (10,)
+    assert set(np.unique(res.assignments)).issubset({0, 1, 2})
+
+
+@pytest.mark.parametrize("scheme", ["fedgroup", "ifca", "fesem"])
+def test_baseline_multi_geq_best_usually(scheme, tiny_ae_cfg, tiny_padded,
+                                         tiny_split):
+    """Paper Tables: the dagger (multi-model oracle) column is at least
+    close to the starred (best single instance) column."""
+    res = run(tiny_ae_cfg, tiny_padded, tiny_split, scheme)
+    assert res.multi_auroc > res.best_auroc - 0.1
+
+
+@pytest.mark.parametrize("scheme", ["ifca", "fesem"])
+def test_baseline_survives_failures(scheme, tiny_ae_cfg, tiny_padded,
+                                    tiny_split):
+    for kind in ("client", "server"):
+        res = run(tiny_ae_cfg, tiny_padded, tiny_split, scheme,
+                  FailureSpec(epoch=ROUNDS // 2, kind=kind))
+        assert np.isfinite(res.best_auroc)
+        assert res.best_auroc > 0.5, (scheme, kind, res.best_auroc)

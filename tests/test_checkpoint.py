@@ -1,0 +1,67 @@
+"""Checkpoint save/restore roundtrip + manager policy tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import CheckpointManager, restore, save
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 4)),
+                       "b": jnp.zeros(4, jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree()
+    p = save(str(tmp_path / "ckpt.msgpack"), tree, step=7)
+    got, step = restore(p, jax.tree.map(jnp.zeros_like, tree))
+    assert step == 7
+    assert trees_equal(got, tree)
+    # dtypes preserved (incl. bfloat16)
+    assert got["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_restore_shape_mismatch_rejected(tmp_path):
+    tree = make_tree()
+    p = save(str(tmp_path / "c.msgpack"), tree)
+    bad = {"params": {"w": jnp.zeros((2, 2)), "b": jnp.zeros(4)},
+           "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(AssertionError):
+        restore(p, bad)
+
+
+def test_no_tmp_left_behind(tmp_path):
+    save(str(tmp_path / "c.msgpack"), make_tree())
+    assert sorted(os.listdir(tmp_path)) == ["c.msgpack"]
+
+
+def test_manager_keep_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = make_tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(tree, s)
+    files = sorted(os.listdir(tmp_path))
+    assert files == ["ckpt_00000003.msgpack", "ckpt_00000004.msgpack"]
+    assert mgr.latest_step() == 4
+
+
+def test_manager_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    assert mgr.restore_latest(make_tree()) is None
+    t1 = make_tree(1)
+    t2 = make_tree(2)
+    mgr.save(t1, 10)
+    mgr.save(t2, 20)
+    got, step = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t2))
+    assert step == 20
+    assert trees_equal(got, t2)

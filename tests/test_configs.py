@@ -1,0 +1,95 @@
+"""Assigned-architecture config validation (brief: exact specs).
+
+Every config must carry the exact architecture parameters from the
+assignment table and cite its source.
+"""
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES
+from repro.configs.registry import get_arch
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+ASSIGNED_SPECS = {
+    "recurrentgemma-9b":         (38, 4096, 16, 1, 12288, 256000),
+    "rwkv6-7b":                  (32, 4096, None, None, 14336, 65536),
+    "whisper-large-v3":          (32, 1280, 20, 20, 5120, 51866),
+    "internlm2-1.8b":            (24, 2048, 16, 8, 8192, 92544),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "internvl2-26b":             (48, 6144, 48, 8, 16384, 92553),
+    "llama4-scout-17b-a16e":     (48, 5120, 40, 8, 8192, 202048),
+    "qwen3-8b":                  (36, 4096, 32, 8, 12288, 151936),
+    "granite-3-2b":              (40, 2048, 32, 8, 8192, 49155),
+    "qwen1.5-0.5b":              (24, 1024, 16, 16, 2816, 151936),
+}
+
+
+def test_all_assigned_present():
+    assert set(ASSIGNED) == set(ASSIGNED_SPECS) == set(ARCHS)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED_SPECS))
+def test_config_matches_assignment(arch):
+    L, d, H, KVH, ff, V = ASSIGNED_SPECS[arch]
+    cfg = ARCHS[arch]
+    assert cfg.num_layers == L, "layers"
+    assert cfg.d_model == d, "d_model"
+    assert cfg.d_ff == ff, "d_ff"
+    assert cfg.vocab_size == V, "vocab"
+    if H is not None:          # rwkv6 is attention-free
+        assert cfg.attention.num_heads == H, "heads"
+        assert cfg.attention.num_kv_heads == KVH, "kv heads"
+    assert cfg.citation, f"{arch} must cite its source"
+
+
+def test_family_specific_markers():
+    assert ARCHS["qwen3-8b"].attention.qk_norm               # qk_norm
+    assert ARCHS["qwen1.5-0.5b"].attention.qkv_bias          # QKV bias
+    assert ARCHS["recurrentgemma-9b"].recurrent.block_pattern  # hybrid
+    assert ARCHS["rwkv6-7b"].family == "ssm"
+    assert ARCHS["llama4-maverick-400b-a17b"].moe.num_experts == 128
+    assert ARCHS["llama4-maverick-400b-a17b"].moe.num_experts_per_tok == 1
+    assert ARCHS["llama4-scout-17b-a16e"].moe.num_experts == 16
+    assert ARCHS["whisper-large-v3"].is_encdec
+    assert ARCHS["whisper-large-v3"].encoder_seq == 1500
+    assert ARCHS["internvl2-26b"].frontend.kind == "vision"
+
+
+def test_hybrid_pattern_ratio():
+    """RecurrentGemma: RG-LRU + local attn at 1:2 attn:recurrent."""
+    pat = ARCHS["recurrentgemma-9b"].layer_pattern
+    assert len(pat) == 38
+    n_rec = sum(1 for p in pat if p == "rec")
+    n_att = sum(1 for p in pat if p == "local")
+    assert n_rec == 2 * n_att + (1 if len(pat) % 3 else 0) or n_rec >= 2 * n_att
+
+
+def test_param_counts_near_nominal():
+    """Analytic parameter counts land near the names' nominal sizes."""
+    def bn(arch):
+        return ARCHS[arch].param_count() / 1e9
+
+    assert 7.0 < bn("qwen3-8b") < 10.0
+    assert 0.4 < bn("qwen1.5-0.5b") < 0.8
+    assert 1.5 < bn("internlm2-1.8b") < 2.4
+    assert 2.0 < bn("granite-3-2b") < 3.5
+    assert 6.5 < bn("rwkv6-7b") < 9.0
+    assert 8.0 < bn("recurrentgemma-9b") < 11.0
+    assert 250 < bn("llama4-maverick-400b-a17b") < 450
+    # active params: maverick ~17B
+    assert 10 < ARCHS["llama4-maverick-400b-a17b"].active_param_count() / 1e9 < 25
+
+
+def test_input_shapes_table():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+    assert INPUT_SHAPES["long_500k"].mode == "decode"
+
+
+def test_get_arch_unknown():
+    with pytest.raises(KeyError):
+        get_arch("gpt-5")

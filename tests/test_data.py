@@ -1,0 +1,142 @@
+"""Data substrate tests: Comms-ML generator, reference sets, federated
+splits, token pipeline."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import commsml, federated, reference
+from repro.data.pipeline import TokenPipeline
+
+
+# ---------------------------------------------------------------------------
+# Comms-ML generator
+# ---------------------------------------------------------------------------
+def test_commsml_shapes():
+    X, y = commsml.generate(seed=0, samples_per_class=50)
+    assert X.shape == (4 * 50, commsml.N_FEATURES)
+    assert X.dtype == np.float32
+    assert set(y.tolist()) == {0, 1, 2, 3}
+
+
+def test_commsml_deterministic():
+    X1, _ = commsml.generate(seed=3, samples_per_class=20)
+    X2, _ = commsml.generate(seed=3, samples_per_class=20)
+    np.testing.assert_array_equal(X1, X2)
+    X3, _ = commsml.generate(seed=4, samples_per_class=20)
+    assert not np.array_equal(X1, X3)
+
+
+def test_commsml_classes_separable():
+    """Anomaly classes must be statistically distinct from class 0 —
+    otherwise the whole experiment is vacuous."""
+    X, y = commsml.generate(seed=0, samples_per_class=200)
+    mu0 = X[y == 0].mean(0)
+    for c in (2, 3):
+        muc = X[y == c].mean(0)
+        assert np.linalg.norm(muc - mu0) > 1.0
+
+
+def test_commsml_standardised_on_class0():
+    X, y = commsml.generate(seed=0, samples_per_class=300)
+    np.testing.assert_allclose(X[y == 0].mean(0), 0.0, atol=0.05)
+    np.testing.assert_allclose(X[y == 0].std(0), 1.0, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Reference datasets
+# ---------------------------------------------------------------------------
+def test_reference_shapes():
+    for name, spec in reference.SPECS.items():
+        X, y = reference.generate(name, seed=0, samples_per_class=5)
+        dim = int(np.prod(spec.shape))
+        assert X.shape == (5 * spec.n_classes, dim), name
+        assert len(set(y.tolist())) == spec.n_classes
+
+
+def test_reference_class_structure():
+    """Same-class samples are closer than cross-class samples."""
+    X, y = reference.generate("fmnist", seed=0, samples_per_class=20)
+    a = X[y == 0]
+    within = np.linalg.norm(a - a.mean(0), axis=1).mean()
+    across = np.linalg.norm(X[y == 1] - a.mean(0), axis=1).mean()
+    assert across > within
+
+
+# ---------------------------------------------------------------------------
+# Federated split
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    members=st.integers(1, 3),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_split_partitions(members, k, seed):
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    n_dev = members * k
+    split = federated.make_split(X, y, n_dev, k, anomaly_classes=[3],
+                                 seed=seed)
+    assert split.num_devices == n_dev
+    assert len(split.clusters) == k
+    # every device has data (3 normal classes over <=4 clusters)
+    counts = split.sample_counts()
+    assert counts.sum() > 0
+    # test set contains all anomaly samples, labelled 1
+    assert (split.test_y == 1).sum() == 60
+    assert (split.test_y == 0).sum() > 0
+
+
+def test_split_no_anomaly_in_train():
+    """Training devices must never see anomalous data (one-class setup)."""
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    split = federated.make_split(X, y, 6, 3, anomaly_classes=[3], seed=0)
+    anom = X[y == 3]
+    anom_set = {a.tobytes() for a in anom}
+    for d in split.device_data:
+        for row in d:
+            assert row.tobytes() not in anom_set
+
+
+def test_pad_devices_roundtrip():
+    X, y = commsml.generate(seed=0, samples_per_class=30)
+    split = federated.make_split(X, y, 6, 3, anomaly_classes=[3], seed=0)
+    padded, counts = federated.pad_devices(split)
+    assert padded.shape[0] == 6
+    np.testing.assert_array_equal(counts, split.sample_counts())
+    for i, d in enumerate(split.device_data):
+        np.testing.assert_array_equal(padded[i, :len(d)], d)
+        assert np.all(padded[i, len(d):] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Token pipeline
+# ---------------------------------------------------------------------------
+def test_token_pipeline_shapes():
+    p = TokenPipeline(vocab_size=1000, seq_len=64, global_batch=8,
+                      num_groups=4)
+    batch = next(p.batches())
+    assert batch["tokens"].shape == (8, 64)
+    assert batch["labels"].shape == (8, 64)
+    assert batch["tokens"].dtype == np.int32
+    # next-token alignment
+    assert batch["tokens"].max() < 1000
+
+
+def test_token_pipeline_label_shift():
+    p = TokenPipeline(vocab_size=500, seq_len=32, global_batch=4)
+    b = next(p.batches())
+    # tokens/labels come from one (seq_len+1) doc: labels are the shift
+    # (verifiable because both are slices of the same underlying array)
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_token_pipeline_groups_nontrivially_different():
+    """Non-IID: group motif inventories differ."""
+    p = TokenPipeline(vocab_size=1000, seq_len=128, global_batch=4,
+                      num_groups=2, seed=0)
+    assert not np.array_equal(p.motifs[0], p.motifs[1])
+
+
+def test_token_pipeline_num_steps():
+    p = TokenPipeline(vocab_size=100, seq_len=16, global_batch=2)
+    batches = list(p.batches(num_steps=3))
+    assert len(batches) == 3

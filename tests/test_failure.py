@@ -1,0 +1,95 @@
+"""Failure-model semantics (paper Section II / IV-B).
+
+* dead member  -> only its own weight zeroed; cluster continues.
+* dead head    -> the whole cluster's weight zeroed (worst case).
+* FL (k=1) head death == server death -> everyone zeroed.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.failure import (NO_FAILURE, FailureSpec, alive_mask,
+                                effective_weights, surviving_fraction)
+from repro.core.topology import Topology
+
+
+def test_no_failure_all_alive():
+    topo = Topology(8, 4)
+    m = alive_mask(NO_FAILURE, topo, jnp.int32(100))
+    np.testing.assert_array_equal(np.asarray(m), np.ones(8))
+    w = effective_weights(m, topo)
+    np.testing.assert_array_equal(np.asarray(w), np.ones(8))
+
+
+def test_failure_fires_at_epoch():
+    topo = Topology(8, 4)
+    spec = FailureSpec(epoch=50, kind="client", device=3)
+    before = np.asarray(alive_mask(spec, topo, jnp.int32(49)))
+    after = np.asarray(alive_mask(spec, topo, jnp.int32(50)))
+    np.testing.assert_array_equal(before, np.ones(8))
+    assert after[3] == 0.0 and after.sum() == 7
+
+
+def test_client_failure_removes_only_member():
+    topo = Topology(8, 4)                  # clusters {0,1},{2,3},{4,5},{6,7}
+    spec = FailureSpec(epoch=0, kind="client")   # defaults to dev 1 (member)
+    alive = alive_mask(spec, topo, jnp.int32(10))
+    w = np.asarray(effective_weights(alive, topo))
+    assert w[1] == 0.0
+    assert w.sum() == 7.0                  # everyone else keeps training
+
+
+def test_server_failure_kills_whole_cluster():
+    topo = Topology(8, 4)
+    spec = FailureSpec(epoch=0, kind="server")   # defaults to head 0
+    alive = alive_mask(spec, topo, jnp.int32(10))
+    w = np.asarray(effective_weights(alive, topo))
+    # head 0 dead => members {0,1} both gone; clusters 1..3 unaffected
+    np.testing.assert_array_equal(w, [0, 0, 1, 1, 1, 1, 1, 1])
+
+
+def test_fl_server_failure_kills_everyone():
+    """FL = Tol-FL(k=1): the single head IS the server."""
+    topo = Topology(8, 1)
+    spec = FailureSpec(epoch=0, kind="server")
+    alive = alive_mask(spec, topo, jnp.int32(10))
+    w = np.asarray(effective_weights(alive, topo))
+    np.testing.assert_array_equal(w, np.zeros(8))
+
+
+def test_sbt_any_failure_loses_one():
+    """SBT = Tol-FL(k=N): every device is its own head; any single death
+    costs exactly one device (the paper's robustness argument)."""
+    topo = Topology(8, 8)
+    for dev in range(8):
+        spec = FailureSpec(epoch=0, kind="server", device=dev)
+        alive = alive_mask(spec, topo, jnp.int32(1))
+        w = np.asarray(effective_weights(alive, topo))
+        assert w.sum() == 7.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    members=st.integers(1, 5),
+    k=st.integers(1, 5),
+    data=st.data(),
+)
+def test_worst_case_loss_bounded_by_cluster(members, k, data):
+    """Paper IV-B: worst-case single failure loses at most one cluster."""
+    topo = Topology(members * k, k)
+    dev = data.draw(st.integers(0, topo.num_devices - 1))
+    spec = FailureSpec(epoch=0, kind="server", device=dev)
+    alive = alive_mask(spec, topo, jnp.int32(1))
+    w = np.asarray(effective_weights(alive, topo))
+    lost = topo.num_devices - w.sum()
+    if topo.is_head(dev):
+        assert lost == topo.members_per_cluster
+    else:
+        assert lost == 1
+
+
+def test_surviving_fraction():
+    topo = Topology(8, 4)
+    alive = np.ones(8, np.float32)
+    alive[0] = 0  # head of cluster 0
+    assert surviving_fraction(alive, topo) == 0.75

@@ -1,0 +1,66 @@
+"""AUROC / ROC metric tests (exact rank-statistic vs brute force)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.training.metrics import auroc, roc_curve
+
+
+def brute_auroc(scores, labels):
+    pos = scores[labels.astype(bool)]
+    neg = scores[~labels.astype(bool)]
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return (wins + 0.5 * ties) / (len(pos) * len(neg))
+
+
+def test_perfect_detector():
+    scores = np.array([0.1, 0.2, 0.9, 0.8])
+    labels = np.array([0, 0, 1, 1])
+    assert auroc(scores, labels) == 1.0
+
+
+def test_inverted_detector():
+    scores = np.array([0.9, 0.8, 0.1, 0.2])
+    labels = np.array([0, 0, 1, 1])
+    assert auroc(scores, labels) == 0.0
+
+
+def test_random_detector_half():
+    scores = np.array([0.5, 0.5, 0.5, 0.5])
+    labels = np.array([0, 0, 1, 1])
+    assert auroc(scores, labels) == 0.5
+
+
+def test_degenerate_labels_nan():
+    assert np.isnan(auroc(np.array([1.0, 2.0]), np.array([1, 1])))
+    assert np.isnan(auroc(np.array([1.0, 2.0]), np.array([0, 0])))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(4, 60),
+    n_pos=st.integers(1, 3),
+    ties=st.booleans(),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_auroc_matches_brute_force(n, n_pos, ties, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.standard_normal(n)
+    if ties:  # quantise to force ties
+        scores = np.round(scores, 1)
+    labels = np.zeros(n, np.int32)
+    labels[rng.choice(n, min(n_pos, n - 1), replace=False)] = 1
+    got = auroc(scores, labels)
+    want = brute_auroc(scores, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_roc_curve_endpoints():
+    rng = np.random.default_rng(0)
+    scores = rng.standard_normal(100)
+    labels = (rng.random(100) < 0.3).astype(np.int32)
+    fpr, tpr = roc_curve(scores, labels)
+    assert fpr.min() >= 0 and fpr.max() <= 1
+    assert tpr.min() >= 0 and tpr.max() <= 1
+    # the lowest threshold admits everything
+    assert fpr[0] == 1.0 and tpr[0] == 1.0

@@ -1,0 +1,274 @@
+"""Model-component unit tests: blocked attention, RoPE, xent, MoE routing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+from repro.models import attention as A
+from repro.models import params as P
+from repro.models.moe import _capacity, _dispatch_mask, moe_apply, moe_init
+from repro.models.transformer import (divisor_block, padded_vocab,
+                                      sinusoidal_positions, xent_loss)
+
+
+# ---------------------------------------------------------------------------
+# blocked attention vs naive
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 16), (True, 100)])
+def test_blocked_attention_matches_naive(causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 96, 4, 16))
+    k = jax.random.normal(ks[1], (2, 96, 2, 16))
+    v = jax.random.normal(ks[2], (2, 96, 2, 16))
+    got = A.blocked_attention(q, k, v, causal=causal, window=window,
+                              q_block=32, kv_block=32)
+    want = A.naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_attention_non_divisible_seq():
+    """divisor_block: odd seq lengths (whisper 1500) must still tile."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 60, 2, 8))
+    k = jax.random.normal(ks[1], (1, 60, 2, 8))
+    v = jax.random.normal(ks[2], (1, 60, 2, 8))
+    got = A.blocked_attention(q, k, v, causal=False, q_block=512,
+                              kv_block=512)
+    want = A.naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_divisor_block():
+    assert divisor_block(1500, 512) == 500
+    assert divisor_block(4096, 512) == 512
+    assert divisor_block(7, 512) == 7
+    assert divisor_block(1, 4) == 1
+    for S, t in [(1500, 512), (96, 32), (13, 8)]:
+        b = divisor_block(S, t)
+        assert S % b == 0 and b <= max(t, 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s_mult=st.integers(1, 6),
+    kvh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    qb=st.sampled_from([16, 32, 512]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_blocked_attention_property(b, s_mult, kvh, g, d, causal, qb, seed):
+    """Random (shape x GQA x mask x block) sweep against the naive oracle."""
+    S = 16 * s_mult
+    H = kvh * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, S, H, d))
+    k = jax.random.normal(ks[1], (b, S, kvh, d))
+    v = jax.random.normal(ks[2], (b, S, kvh, d))
+    got = A.blocked_attention(q, k, v, causal=causal, q_block=qb,
+                              kv_block=qb)
+    want = A.naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16))
+    cos, sin = A.rope_freqs(16, 1e4, jnp.arange(8))
+    y = A.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    D = 32
+    q = jax.random.normal(jax.random.PRNGKey(3), (D,))
+    k = jax.random.normal(jax.random.PRNGKey(4), (D,))
+
+    def dot_at(m, n):
+        cm, sm = A.rope_freqs(D, 1e4, jnp.asarray([m]))
+        cn, sn = A.rope_freqs(D, 1e4, jnp.asarray([n]))
+        qr = A.apply_rope(q[None, None, None, :], cm, sm)
+        kr = A.apply_rope(k[None, None, None, :], cn, sn)
+        return float(jnp.sum(qr * kr))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(7, 7), dot_at(0, 0), rtol=1e-4)
+
+
+def test_rope_position_zero_identity():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, 16))
+    cos, sin = A.rope_freqs(16, 1e4, jnp.zeros((1,)))
+    y = A.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode attention vs full recompute
+# ---------------------------------------------------------------------------
+def test_decode_attention_matches_full():
+    """One-token decode against a cache == last row of full attention."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, S, H, KVH, D = 1, 17, 4, 2, 16
+    q_full = jax.random.normal(ks[0], (B, S, H, D))
+    k_full = jax.random.normal(ks[1], (B, S, KVH, D))
+    v_full = jax.random.normal(ks[2], (B, S, KVH, D))
+    want = A.naive_attention(q_full, k_full, v_full, causal=True)[:, -1:]
+    got = A.decode_attention(q_full[:, -1:], k_full[:, :-1], v_full[:, :-1],
+                             k_full[:, -1:], v_full[:, -1:])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# xent loss
+# ---------------------------------------------------------------------------
+def naive_xent(params, cfg, h, labels):
+    w = params["embed"]["table"].astype(jnp.float32)
+    logits = h.astype(jnp.float32) @ w.T
+    logits = logits.at[..., cfg.vocab_size:].set(-1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def test_xent_matches_naive():
+    cfg = ModelConfig(vocab_size=300, d_model=32)
+    Vp = padded_vocab(cfg)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    params = {"embed": {"table": jax.random.normal(ks[0], (Vp, 32)) * 0.1}}
+    h = jax.random.normal(ks[1], (2, 24, 32))
+    labels = jax.random.randint(ks[2], (2, 24), 0, 300)
+    got = xent_loss(params, cfg, h, labels, chunk=8)
+    want = naive_xent(params, cfg, h, labels)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_xent_mask_excludes_positions():
+    cfg = ModelConfig(vocab_size=100, d_model=16)
+    Vp = padded_vocab(cfg)
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    params = {"embed": {"table": jax.random.normal(ks[0], (Vp, 16)) * 0.1}}
+    h = jax.random.normal(ks[1], (1, 16, 16))
+    labels = jax.random.randint(ks[2], (1, 16), 0, 100)
+    mask = jnp.zeros((1, 16)).at[:, :8].set(1.0)
+    got = xent_loss(params, cfg, h, labels, mask=mask, chunk=4)
+    want = naive_xent(params, cfg, h[:, :8], labels[:, :8])
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_xent_never_targets_padded_vocab():
+    """Loss must be computed over the true vocab only: a model that puts
+    all mass on padded ids must score badly, not well."""
+    cfg = ModelConfig(vocab_size=100, d_model=16)
+    Vp = padded_vocab(cfg)
+    table = jnp.zeros((Vp, 16)).at[cfg.vocab_size:, :].set(10.0)
+    params = {"embed": {"table": table}}
+    h = jnp.ones((1, 4, 16))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    lv = float(xent_loss(params, cfg, h, labels, chunk=4))
+    assert lv > 1.0     # ~log(100): padded ids are masked out of the lse
+
+
+# ---------------------------------------------------------------------------
+# MoE routing
+# ---------------------------------------------------------------------------
+def test_dispatch_top1_selects_argmax():
+    cfg = MoEConfig(num_experts=4, num_experts_per_tok=1,
+                    capacity_factor=4.0)
+    logits = jnp.asarray([[[0.1, 3.0, -1.0, 0.0],
+                           [2.0, 0.0, 0.0, 0.0]]])     # (1,2,4)
+    C = _capacity(2, cfg)
+    dispatch, combine, probs = _dispatch_mask(logits, cfg, C)
+    # token 0 -> expert 1, token 1 -> expert 0
+    assert float(dispatch[0, 0, 1].sum()) == 1.0
+    assert float(dispatch[0, 1, 0].sum()) == 1.0
+    # combine weights = softmax gate of the chosen expert
+    p = jax.nn.softmax(logits, -1)
+    np.testing.assert_allclose(float(combine[0, 0, 1].sum()),
+                               float(p[0, 0, 1]), rtol=1e-5)
+
+
+def test_dispatch_capacity_drops_overflow():
+    """All tokens want expert 0; only `capacity` survive."""
+    cfg = MoEConfig(num_experts=2, num_experts_per_tok=1,
+                    capacity_factor=0.5)
+    T = 8
+    logits = jnp.zeros((1, T, 2)).at[..., 0].set(5.0)
+    C = _capacity(T, cfg)                         # = 2
+    dispatch, _, _ = _dispatch_mask(logits, cfg, C)
+    assert float(dispatch[..., 0, :].sum()) == C
+    assert float(dispatch[..., 1, :].sum()) == 0.0
+
+
+def test_dispatch_topk_distinct_experts():
+    cfg = MoEConfig(num_experts=4, num_experts_per_tok=2,
+                    capacity_factor=4.0)
+    logits = jax.random.normal(jax.random.PRNGKey(9), (1, 6, 4))
+    C = _capacity(6, cfg)
+    dispatch, _, _ = _dispatch_mask(logits, cfg, C)
+    per_token = np.asarray(dispatch.sum((-1, -2)))   # assignments per token
+    assert np.all(per_token <= 2.0 + 1e-6)
+    # each token's two routes hit different experts
+    per_tok_exp = np.asarray(dispatch.sum(-1))       # (1, T, E)
+    assert np.all(per_tok_exp <= 1.0 + 1e-6)
+
+
+def test_moe_apply_shapes_and_aux():
+    cfg = MoEConfig(num_experts=4, num_experts_per_tok=1,
+                    capacity_factor=2.0)
+    p, _ = moe_init(jax.random.PRNGKey(10), 16, 32, cfg, True, "float32")
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, 16))
+    out, aux = moe_apply(p, x, cfg, "silu", True, chunk=8)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux["lb_loss"]))
+    assert np.isfinite(float(aux["z_loss"]))
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # Switch LB lower bound ~1
+
+
+def test_moe_balanced_router_lb_near_one():
+    """Uniform router => load-balance loss at its minimum (== 1)."""
+    cfg = MoEConfig(num_experts=4, num_experts_per_tok=1,
+                    capacity_factor=4.0)
+    T = 64
+    # logits that route tokens uniformly: one-hot rotating
+    logits = jnp.eye(4)[jnp.arange(T) % 4][None] * 10.0
+    C = _capacity(T, cfg)
+    dispatch, combine, probs = _dispatch_mask(logits, cfg, C)
+    frac_tokens = jnp.mean(jnp.sum(dispatch, -1), (0, 1))
+    frac_probs = jnp.mean(probs, (0, 1))
+    lb = 4 * float(jnp.sum(frac_tokens * frac_probs))
+    np.testing.assert_allclose(lb, 1.0, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# misc param layers
+# ---------------------------------------------------------------------------
+def test_rmsnorm_unit_scale():
+    p, _ = P.rmsnorm_init(8, "float32")
+    x = jax.random.normal(jax.random.PRNGKey(12), (3, 8)) * 5
+    y = P.rmsnorm_apply(p, x, 1e-6)
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_sinusoidal_positions_shapes():
+    pe = sinusoidal_positions(16, 32)
+    assert pe.shape == (16, 32)
+    pe_off = sinusoidal_positions(8, 32, offset=8)
+    np.testing.assert_allclose(np.asarray(pe[8:]), np.asarray(pe_off),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,124 @@
+"""Paper-scale simulator integration tests (Tables III-V orderings).
+
+Quantities are scaled down (10 devices, few rounds, small AE) but the
+paper's qualitative claims are asserted:
+
+* failure-free: all schemes learn (AUROC well above chance);
+* client failure: training continues, performance close to failure-free;
+* server failure: Tol-FL degrades gracefully (loses one cluster) while
+  FL collapses to isolated training — Tol-FL > FL (Table V ordering).
+"""
+import numpy as np
+import pytest
+
+from repro.core.failure import NO_FAILURE, FailureSpec
+from repro.core.simulate import (SimConfig, comm_transfers_per_round,
+                                 run_simulation, round_time_model)
+
+ROUNDS = 40
+LR = 1e-3
+SERVER_FAIL_EPOCH = 5   # early failure => many post-failure rounds (the
+                        # regime where Table V's ~8% gap appears)
+
+
+def run(ae_cfg, padded, split, scheme, k, failure=NO_FAILURE, seed=0):
+    dx, counts = padded
+    cfg = SimConfig(scheme=scheme, num_devices=10, num_clusters=k,
+                    rounds=ROUNDS, lr=LR, dropout=True, seed=seed)
+    return run_simulation(ae_cfg, dx, counts, split.test_x, split.test_y,
+                          cfg, failure)
+
+
+@pytest.fixture(scope="module")
+def failure_free(tiny_ae_cfg, tiny_padded, tiny_split):
+    return {
+        "batch": run(tiny_ae_cfg, tiny_padded, tiny_split, "batch", 1),
+        "fl": run(tiny_ae_cfg, tiny_padded, tiny_split, "fl", 1),
+        "tolfl": run(tiny_ae_cfg, tiny_padded, tiny_split, "tolfl", 5),
+        "sbt": run(tiny_ae_cfg, tiny_padded, tiny_split, "sbt", 10),
+    }
+
+
+def test_all_schemes_learn(failure_free):
+    """Table III: every scheme reaches strong AUROC without failures."""
+    for name, res in failure_free.items():
+        assert res.final_auroc > 0.7, (name, res.final_auroc)
+        assert res.loss_curve[-1] < res.loss_curve[0], name
+
+
+def test_client_failure_training_continues(tiny_ae_cfg, tiny_padded,
+                                           tiny_split, failure_free):
+    """Table IV: client failure costs little — training continues."""
+    fail = FailureSpec(epoch=ROUNDS // 2, kind="client")
+    for scheme, k in (("fl", 1), ("tolfl", 5)):
+        res = run(tiny_ae_cfg, tiny_padded, tiny_split, scheme, k, fail)
+        base = failure_free[scheme].final_auroc
+        assert res.final_auroc > base - 0.10, (scheme, res.final_auroc, base)
+
+
+def test_server_failure_tolfl_beats_fl(tiny_ae_cfg, tiny_padded, tiny_split):
+    """Table V / Fig 4: under server failure Tol-FL keeps collaborative
+    training (loses one cluster); FL falls back to isolated devices."""
+    fail = FailureSpec(epoch=SERVER_FAIL_EPOCH, kind="server")
+    tolfl = run(tiny_ae_cfg, tiny_padded, tiny_split, "tolfl", 5, fail)
+    fl = run(tiny_ae_cfg, tiny_padded, tiny_split, "fl", 1, fail)
+    assert fl.iso_active                       # FL used the fallback path
+    assert not tolfl.iso_active
+    assert tolfl.auroc_used > fl.auroc_used, (
+        tolfl.auroc_used, fl.auroc_used)
+
+
+def test_server_failure_tolfl_still_learns(tiny_ae_cfg, tiny_padded,
+                                           tiny_split):
+    fail = FailureSpec(epoch=SERVER_FAIL_EPOCH, kind="server")
+    res = run(tiny_ae_cfg, tiny_padded, tiny_split, "tolfl", 5, fail)
+    # 4 of 5 clusters keep training collaboratively => detection stays strong
+    assert res.final_auroc > 0.8
+
+
+def test_batch_server_failure_freezes():
+    """Centralised batch: server failure => the model stops improving.
+    (Behavioural contract; cheap standalone check.)"""
+    # batch has 1 device which IS the server; alive mask zeroes the update
+    from repro.core.topology import Topology
+    from repro.core.failure import alive_mask, effective_weights
+    import jax.numpy as jnp
+    topo = Topology(1, 1)
+    spec = FailureSpec(epoch=5, kind="server")
+    w = effective_weights(alive_mask(spec, topo, jnp.int32(6)), topo)
+    assert float(w.sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Resource-usage models (Table II / VI)
+# ---------------------------------------------------------------------------
+def test_comm_cost_ordering():
+    """Table VI: SBT O(N) < Tol-FL O(N+k) < FL O(2N)."""
+    n, k = 10, 4
+    sbt = comm_transfers_per_round("sbt", n, k)
+    tolfl = comm_transfers_per_round("tolfl", n, k)
+    fl = comm_transfers_per_round("fl", n, k)
+    assert sbt < tolfl < fl
+    assert fl == 2 * n
+    assert sbt == n - 1
+    assert tolfl == n + k - 1
+
+
+def test_tolfl_comm_interpolates():
+    """k=1 -> FL-like; k=N -> SBT-like (+broadcast bookkeeping)."""
+    n = 12
+    costs = [comm_transfers_per_round("tolfl", n, k) for k in (1, 3, 6, 12)]
+    assert costs == sorted(costs)          # monotone in k
+
+
+def test_round_time_parallel_beats_sequential():
+    """Fig 5 ordering: FL (parallel) < Tol-FL < SBT (sequential) in time,
+    all < centralised batch for large sample counts."""
+    args = dict(n=10, k=4, samples=50000, model_bytes=400_000,
+                flops_per_sample=1e6)
+    t_batch = round_time_model("batch", **args)
+    t_fl = round_time_model("fl", **args)
+    t_tolfl = round_time_model("tolfl", **args)
+    t_sbt = round_time_model("sbt", **args)
+    assert t_fl < t_tolfl < t_sbt
+    assert t_fl < t_batch

@@ -1,0 +1,158 @@
+"""End-to-end system tests: the real training launcher, specs consistency,
+and the mesh helpers."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_launcher(*extra, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, "-m", "repro.launch.train", "--steps", "6",
+           "--batch", "4", "--seq", "64", "--data-axis", "1"] + list(extra)
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def parse_losses(stdout):
+    return [float(l.split("loss")[1].split()[0])
+            for l in stdout.splitlines() if l.startswith("step")]
+
+
+def test_train_launcher_runs_and_learns():
+    proc = run_launcher("--arch", "qwen1.5-0.5b", "--steps", "10")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    losses = parse_losses(proc.stdout)
+    assert len(losses) == 10
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]          # the synthetic corpus is learnable
+
+
+def test_train_launcher_psum_schedule():
+    proc = run_launcher("--arch", "granite-3-2b", "--schedule", "tolfl_psum")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    losses = parse_losses(proc.stdout)
+    assert len(losses) == 6 and all(np.isfinite(losses))
+
+
+def test_train_launcher_with_failure_injection():
+    proc = run_launcher("--arch", "qwen1.5-0.5b", "--fail-epoch", "3",
+                        "--fail-kind", "server")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    losses = parse_losses(proc.stdout)
+    assert len(losses) == 6 and all(np.isfinite(losses))
+
+
+def test_train_launcher_checkpointing(tmp_path):
+    proc = run_launcher("--arch", "qwen1.5-0.5b", "--steps", "10",
+                        "--ckpt-dir", str(tmp_path))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert any(f.startswith("ckpt_") for f in os.listdir(tmp_path))
+
+
+def test_serve_launcher_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "qwen1.5-0.5b", "--batch", "2", "--prompt", "16", "--tokens", "4"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "decode:" in proc.stdout and "prefill:" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# launch specs consistency
+# ---------------------------------------------------------------------------
+def test_state_specs_match_init_state():
+    """The dry-run state ShapeDtypeStructs must exactly mirror what
+    init_state would materialise."""
+    from repro.configs import ARCHS, OptimizerConfig
+    from repro.core import distributed as D
+    from repro.launch import specs as SP
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import logical as L
+
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    ocfg = OptimizerConfig()
+    mesh = make_host_mesh(data=1, model=1)
+    rules = L.rules_for("replicated_data")
+    spec_tree = SP.state_specs(cfg, ocfg, mesh, rules)
+    shape_tree = jax.eval_shape(lambda k: D.init_state(k, cfg, ocfg),
+                                jax.random.PRNGKey(0))
+    flat_spec = jax.tree.leaves(spec_tree)
+    flat_shape = jax.tree.leaves(shape_tree)
+    assert len(flat_spec) == len(flat_shape)
+    for a, b in zip(flat_spec, flat_shape):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_input_specs_cover_all_arch_shape_combos():
+    """Every (arch x shape) pair must produce lowering-ready specs."""
+    from repro.configs import ARCHS, INPUT_SHAPES
+    from repro.launch import specs as SP
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import logical as L
+
+    mesh = make_host_mesh(data=1, model=1)
+    rules = L.rules_for("replicated_data")
+    for arch, cfg in ARCHS.items():
+        for name, shape in INPUT_SHAPES.items():
+            if shape.mode == "train":
+                b = SP.train_batch_specs(cfg, shape, mesh, rules)
+                assert "tokens" in b and "labels" in b
+                if cfg.frontend.kind == "vision":
+                    assert "prefix" in b
+                if cfg.is_encdec:
+                    assert "frames" in b
+            elif shape.mode == "prefill":
+                b = SP.prefill_specs(cfg, shape, mesh, rules)
+                assert b["tokens"].shape[0] == shape.global_batch
+            else:
+                d = SP.decode_specs(cfg, shape, mesh, rules,
+                                    long_context=(name == "long_500k"))
+                assert d["tokens"].shape == (shape.global_batch, 1)
+                assert "cache" in d
+
+
+def test_production_mesh_contract():
+    """make_production_mesh builds the brief's meshes.  On this 1-CPU host
+    we can't construct 256 devices, so assert the function contract (the
+    dry-run constructs them for real under the 512-device flag)."""
+    from repro.launch import mesh as M
+    import inspect
+    src = inspect.getsource(M.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src.replace("'", '"')
+
+
+def test_long500k_decode_cache_subquadratic():
+    """long_500k decode must NOT materialise a 500k-token KV cache for
+    archs with a sub-quadratic path (the brief's requirement)."""
+    from repro.configs import ARCHS
+    from repro.serving.decode import cache_shape
+
+    # hybrid: local-attn layers cap at the 2048 window; recurrent O(1)
+    cs = cache_shape(ARCHS["recurrentgemma-9b"], 1, 524288,
+                     long_context=True)
+    for leaf in jax.tree.leaves(cs):
+        assert 524288 not in leaf.shape
+
+    # ssm: O(1) state only
+    cs = cache_shape(ARCHS["rwkv6-7b"], 1, 524288, long_context=True)
+    for leaf in jax.tree.leaves(cs):
+        assert 524288 not in leaf.shape
+
+    # dense long-context variant: ring capped at long_context_window
+    cs = cache_shape(ARCHS["qwen3-8b"], 1, 524288, long_context=True)
+    for leaf in jax.tree.leaves(cs):
+        assert 524288 not in leaf.shape

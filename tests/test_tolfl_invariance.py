@@ -1,0 +1,64 @@
+"""The paper's headline mathematical property, end-to-end: Tol-FL model
+updates are INDEPENDENT of the cluster count k (Section III — "model
+updates from a round of training are independent of k and result in
+identical outputs").
+
+We run the full simulator with k in {1 (FL), 2, 5, 10 (SBT)} on identical
+data/seeds and assert bit-near-identical loss trajectories, plus
+streaming-vs-direct combine equality.
+"""
+import numpy as np
+import pytest
+
+from repro.core.failure import NO_FAILURE
+from repro.core.simulate import SimConfig, run_simulation
+from repro.data import federated
+
+
+ROUNDS = 12
+
+
+def run(ae_cfg, padded, split, scheme, k, combine="streaming", seed=0):
+    dx, counts = padded
+    cfg = SimConfig(scheme=scheme, num_devices=10, num_clusters=k,
+                    rounds=ROUNDS, lr=1e-3, dropout=False, seed=seed,
+                    combine=combine)
+    return run_simulation(ae_cfg, dx, counts, split.test_x, split.test_y,
+                          cfg, NO_FAILURE)
+
+
+@pytest.fixture(scope="module")
+def curves(tiny_ae_cfg, tiny_padded, tiny_split):
+    out = {}
+    for scheme, k in (("fl", 1), ("tolfl", 2), ("tolfl", 5), ("sbt", 10)):
+        out[(scheme, k)] = run(tiny_ae_cfg, tiny_padded, tiny_split,
+                               scheme, k)
+    return out
+
+
+def test_k_invariance_loss_curves(curves):
+    base = curves[("fl", 1)].loss_curve
+    for key, res in curves.items():
+        np.testing.assert_allclose(
+            res.loss_curve, base, rtol=1e-4, atol=1e-5,
+            err_msg=f"k-invariance violated for {key}")
+
+
+def test_k_invariance_auroc(curves):
+    base = curves[("fl", 1)].final_auroc
+    for key, res in curves.items():
+        np.testing.assert_allclose(res.final_auroc, base, atol=1e-3,
+                                   err_msg=str(key))
+
+
+def test_streaming_equals_direct_combine(tiny_ae_cfg, tiny_padded,
+                                         tiny_split):
+    a = run(tiny_ae_cfg, tiny_padded, tiny_split, "tolfl", 5, "streaming")
+    b = run(tiny_ae_cfg, tiny_padded, tiny_split, "tolfl", 5, "direct")
+    np.testing.assert_allclose(a.loss_curve, b.loss_curve, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_loss_decreases(curves):
+    for key, res in curves.items():
+        assert res.loss_curve[-1] < res.loss_curve[0], key

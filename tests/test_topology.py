@@ -1,0 +1,79 @@
+"""Topology bookkeeping invariants (cluster structure, ring permutations)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology, special_cases
+
+
+@st.composite
+def topo_strategy(draw):
+    k = draw(st.integers(1, 16))
+    members = draw(st.integers(1, 16))
+    return Topology(k * members, k)
+
+
+@settings(max_examples=50, deadline=None)
+@given(topo=topo_strategy())
+def test_clusters_partition_devices(topo):
+    seen = [d for c in topo.clusters for d in c]
+    assert sorted(seen) == list(range(topo.num_devices))
+    assert len(topo.clusters) == topo.num_clusters
+    sizes = {len(c) for c in topo.clusters}
+    assert sizes == {topo.members_per_cluster}
+
+
+@settings(max_examples=50, deadline=None)
+@given(topo=topo_strategy())
+def test_heads_are_first_members(topo):
+    assert topo.heads == [c[0] for c in topo.clusters]
+    for h in topo.heads:
+        assert topo.is_head(h)
+    non_heads = set(range(topo.num_devices)) - set(topo.heads)
+    for d in non_heads:
+        assert not topo.is_head(d)
+
+
+@settings(max_examples=50, deadline=None)
+@given(topo=topo_strategy())
+def test_cluster_of_consistent(topo):
+    for ci, devs in enumerate(topo.clusters):
+        for d in devs:
+            assert topo.cluster_of(d) == ci
+    ids = topo.device_cluster_array()
+    assert ids.shape == (topo.num_devices,)
+    np.testing.assert_array_equal(
+        ids, [topo.cluster_of(d) for d in range(topo.num_devices)])
+
+
+@settings(max_examples=50, deadline=None)
+@given(topo=topo_strategy())
+def test_ring_perms_chain_heads(topo):
+    perms = topo.ring_perms()
+    assert len(perms) == topo.num_clusters - 1
+    h = topo.heads
+    for i, p in enumerate(perms):
+        assert p == [(h[i], h[i + 1])]
+
+
+@settings(max_examples=50, deadline=None)
+@given(topo=topo_strategy())
+def test_head_mask(topo):
+    m = topo.head_mask()
+    assert m.sum() == topo.num_clusters
+    np.testing.assert_array_equal(np.where(m)[0], topo.heads)
+
+
+def test_special_cases():
+    sc = special_cases(12)
+    assert sc["fl"].num_clusters == 1           # FL = Tol-FL(k=1)
+    assert sc["sbt"].num_clusters == 12         # SBT = Tol-FL(k=N)
+    assert sc["fl"].heads == [0]
+    assert sc["sbt"].heads == list(range(12))
+
+
+def test_uneven_clusters_rejected():
+    with pytest.raises(AssertionError):
+        Topology(10, 3)
+    with pytest.raises(AssertionError):
+        Topology(4, 5)
