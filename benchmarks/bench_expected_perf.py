@@ -23,12 +23,13 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.bench_failure_auroc import run_cell
+from benchmarks.bench_failure_auroc import run_single_campaign
 
 # scheme -> (N devices, heads H) for the scenario weighting
 TOPOLOGY = {
     "tolfl": (10, 5),      # k=5 cluster heads (commsml prep uses k=2;
-                           # heads taken from the prep inside run_cell)
+                           # heads taken from the prep inside the
+                           # campaign cell)
     "fl": (11, 1),         # 10 clients + 1 dedicated server
     "batch": (1, 1),       # the server IS the system
 }
@@ -48,14 +49,10 @@ def run(reps: int = 1, rounds: int = 40, dataset: str = "commsml"
         ) -> List[str]:
     cells: Dict[str, Dict[str, float]] = {}
     for method in ("tolfl", "fl", "batch"):
-        cells[method] = {}
-        for kind in ("none", "client", "server"):
-            if method == "batch" and kind == "client":
-                # no clients to lose; same as failure-free
-                cells[method][kind] = cells[method]["none"]
-                continue
-            c = run_cell(dataset, method, kind, reps, rounds)
-            cells[method][kind] = c["mean"]
+        # one batched campaign per scheme covers all three conditions
+        # (batch's client failure aliases failure-free inside the cell)
+        stats = run_single_campaign(dataset, method, reps, rounds)
+        cells[method] = {kind: s["mean"] for kind, s in stats.items()}
 
     lines = [f"# E[AUROC] = sum_s p_s J_s ({dataset}, {rounds} rounds); "
              "paper section IV-B",

@@ -3,6 +3,10 @@
 FL (k=1) server death -> remaining N-1 devices train isolated (their mean
 test loss is reported); SBT (k=N) loses one device and keeps training
 collaboratively.  Emits the two loss curves as CSV.
+
+Driven by the batched campaign engine: each scheme's scenario batch
+(here a single server-failure trace) is one compiled call, and the
+per-scenario loss / isolated-loss curves come back stacked.
 """
 from __future__ import annotations
 
@@ -11,8 +15,9 @@ from typing import List
 import numpy as np
 
 from benchmarks.datasets import prepare
+from repro.core.campaign import run_campaign
 from repro.core.failure import FailureSpec
-from repro.core.simulate import SimConfig, run_simulation
+from repro.core.simulate import SimConfig
 
 ROUNDS = 80
 FAIL_AT = 20
@@ -24,15 +29,16 @@ def run(dataset: str = "fmnist", rounds: int = ROUNDS) -> List[str]:
     out = {}
     for scheme in ("fl", "sbt"):
         cfg = SimConfig(scheme=scheme, num_devices=10, rounds=rounds,
-                        lr=prep.lr, local_epochs=prep.local_epochs, seed=0)
-        r = run_simulation(prep.ae_cfg, prep.device_x, prep.counts,
-                           prep.test_x, prep.test_y, cfg, failure)
+                        lr=prep.lr, local_epochs=prep.local_epochs)
+        res = run_campaign(prep.ae_cfg, prep.device_x, prep.counts,
+                           prep.test_x, prep.test_y, cfg, [failure],
+                           seeds=[0])
         # for fl the paper plots the isolated devices' average loss after
         # the failure point
         curve = np.where(np.arange(rounds) >= FAIL_AT,
-                         r.iso_loss_curve, r.loss_curve) \
-            if r.iso_active else r.loss_curve
-        out[scheme] = (curve, r.auroc_used)
+                         res.iso_loss_curves[0], res.loss_curves[0]) \
+            if res.iso_active[0] else res.loss_curves[0]
+        out[scheme] = (curve, float(res.auroc_used[0]))
     lines = [f"# Fig 4: server failure at round {FAIL_AT} ({dataset}); "
              f"final AUROC: fl={out['fl'][1]:.3f} sbt={out['sbt'][1]:.3f}",
              "round,fl_isolated_loss,sbt_collaborative_loss"]

@@ -17,6 +17,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer reps/rounds (CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI path: one batched micro-"
+                         "campaign (scripts/ci.sh)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: kernels|roofline|comm|"
                          "curves|time|expected|auroc")
@@ -24,6 +27,14 @@ def main(argv=None) -> int:
 
     t_all = time.time()
     sections = []
+
+    if args.smoke:
+        from benchmarks import bench_failure_auroc
+        lines = bench_failure_auroc.run_smoke()
+        print("\n===== smoke: batched failure micro-campaign =====")
+        print("\n".join(lines))
+        print(f"\nsmoke done in {time.time()-t_all:.0f}s")
+        return 0
 
     def want(name):
         return args.only in (None, name)

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + one batched failure micro-campaign.
+# Run from the repo root:  bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== smoke micro-campaign =="
+python -m benchmarks.run --smoke

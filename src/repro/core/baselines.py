@@ -18,6 +18,12 @@ oracle score).
 Failure semantics: a *client* failure removes that device; a *server*
 failure kills the aggregator of group 0 — that instance freezes and its
 devices stop contributing (they keep their last model for evaluation).
+
+Default targets differ by encoding: a legacy ``FailureSpec`` with
+``device=None`` kills device N-1 here (there are no cluster heads to
+anchor the Tol-FL default), while a ``FailureTrace`` carries explicit
+device ids resolved against the Tol-FL topology at construction time.
+Pass an explicit ``device`` when comparing the two encodings.
 """
 from __future__ import annotations
 
@@ -29,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.failure import NO_FAILURE, FailureSpec
+from repro.core.failure import (Failure, FailureTrace, KIND_CODES,
+                                NO_FAILURE, PAD_EPOCH, trace_alive_mask)
 from repro.core.simulate import SimConfig
 from repro.models import autoencoder as AE
 from repro.training.metrics import auroc
@@ -87,7 +94,7 @@ def _kmeans_groups(vectors: np.ndarray, m: int, seed: int,
 def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                    device_counts: np.ndarray, test_x: np.ndarray,
                    test_y: np.ndarray, cfg: MultiModelConfig,
-                   failure: FailureSpec = NO_FAILURE) -> MultiModelResult:
+                   failure: Failure = NO_FAILURE) -> MultiModelResult:
     N, M = cfg.num_devices, cfg.num_models
     key = jax.random.PRNGKey(cfg.seed)
     local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
@@ -114,20 +121,50 @@ def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     else:
         assign0 = jnp.arange(N) % M
 
-    # failure target: "server" kills group 0's aggregator
-    tgt_device = failure.device if failure.device is not None else N - 1
+    # Failure semantics: "client" events remove that device; "server"
+    # events kill the aggregator of group 0 (no head devices exist
+    # here).  A FailureTrace carries per-event kinds, so client events
+    # drive the device mask and server events drive the group-0 mask —
+    # multiple events and recoveries compose like in the Tol-FL engine.
+    if isinstance(failure, FailureTrace):
+        knd = np.asarray(failure.kinds)
+        client_tr = FailureTrace(
+            epochs=jnp.where(knd == KIND_CODES["client"],
+                             failure.epochs, PAD_EPOCH),
+            devices=failure.devices,
+            alive_after=failure.alive_after,
+            kinds=failure.kinds)
+        # server events all target group 0, whatever device they named
+        server_tr = FailureTrace(
+            epochs=jnp.where(knd == KIND_CODES["server"],
+                             failure.epochs, PAD_EPOCH),
+            devices=jnp.zeros_like(failure.devices),
+            alive_after=failure.alive_after,
+            kinds=failure.kinds)
 
-    def dev_alive(epoch):
-        if failure.kind != "client":
-            return jnp.ones((N,), jnp.float32)
-        dead = (jnp.arange(N) == tgt_device) & (epoch >= failure.epoch)
-        return (~dead).astype(jnp.float32)
+        def dev_alive(epoch):
+            return trace_alive_mask(client_tr, N, epoch)
 
-    def group_alive(epoch):
-        if failure.kind != "server":
-            return jnp.ones((M,), jnp.float32)
-        dead = (jnp.arange(M) == 0) & (epoch >= failure.epoch)
-        return (~dead).astype(jnp.float32)
+        def group_alive(epoch):
+            return trace_alive_mask(server_tr, M, epoch)
+    else:
+        # legacy single-event spec: the default client target is the
+        # last device (no topology heads here)
+        tgt_device = (failure.device if failure.device is not None
+                      else N - 1)
+
+        def dev_alive(epoch):
+            if failure.kind != "client":
+                return jnp.ones((N,), jnp.float32)
+            dead = ((jnp.arange(N) == tgt_device)
+                    & (epoch >= failure.epoch))
+            return (~dead).astype(jnp.float32)
+
+        def group_alive(epoch):
+            if failure.kind != "server":
+                return jnp.ones((M,), jnp.float32)
+            dead = (jnp.arange(M) == 0) & (epoch >= failure.epoch)
+            return (~dead).astype(jnp.float32)
 
     def device_losses(models_, x, v, k_):
         """(M,) local loss of each model instance on one device's data."""

@@ -1,0 +1,194 @@
+"""Batched Monte-Carlo failure-campaign engine.
+
+The paper's robustness claims ("a range of realistic settings that
+consider client as well as server failure") need *scenario diversity*:
+grids of failure traces x seeds, not one hand-picked event per run.
+This module sweeps such grids at hardware speed: for one static
+``SimConfig`` (scheme, k, rounds, ...) every (trace, seed) scenario in
+the batch runs through ONE ``jit(vmap(core))`` executable — the core is
+the exact same round-loop :func:`repro.core.simulate.run_simulation`
+uses, so per-scenario results match the single-shot simulator
+(``tests/test_campaign.py`` asserts equality and the single compile).
+
+Typical use::
+
+    traces = [FailureTrace.none(),
+              FailureTrace.from_spec(FailureSpec(10, "server"), topo)]
+    res = run_campaign(ae_cfg, dx, counts, test_x, test_y,
+                       SimConfig(scheme="tolfl", num_clusters=5),
+                       traces, seeds=range(8))
+    res.summary()["auroc_used_mean"]
+
+Different schemes / k imply different topologies (different array
+shapes), so a (scheme x k) grid is a Python loop of batched calls —
+:func:`sweep_grid` — with one compile per cell, not per scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core.failure import Failure, as_trace, stack_traces
+from repro.core.simulate import (SimConfig, _build_core, _prepare_arrays,
+                                 iso_mean_auroc)
+from repro.training.metrics import auroc
+
+#: incremented each time a batched campaign core is (re)traced — lets
+#: tests assert that a whole campaign costs exactly one compile.
+TRACE_COUNT = 0
+
+
+@dataclass
+class CampaignResult:
+    """Stacked per-scenario results of one batched campaign.
+
+    Scenario b is (trace ``trace_index[b]``, seed ``seed[b]``); arrays
+    are aligned on that leading axis."""
+    cfg: SimConfig
+    trace_index: np.ndarray        # (B,) int — index into the trace list
+    seed: np.ndarray               # (B,) int
+    auroc_used: np.ndarray         # (B,) paper-reported AUROC
+    final_auroc: np.ndarray        # (B,) global-model AUROC
+    iso_auroc: np.ndarray          # (B,) isolated-mean AUROC (nan if n/a)
+    iso_active: np.ndarray         # (B,) bool — FL fallback engaged
+    loss_curves: np.ndarray        # (B, rounds)
+    iso_loss_curves: np.ndarray    # (B, rounds)
+    rounds_to_loss: np.ndarray     # (B,) float, nan when never reached
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.auroc_used)
+
+    def select(self, trace_index: int) -> np.ndarray:
+        """auroc_used of every scenario using trace ``trace_index``."""
+        return self.auroc_used[self.trace_index == trace_index]
+
+    def summary(self) -> Dict[str, float]:
+        """Mean / std / normal-approx 95% CI of the reported AUROC plus
+        mean rounds-to-loss (over scenarios that reached the target)."""
+        a = self.auroc_used
+        b = len(a)
+        mean = float(np.mean(a))
+        std = float(np.std(a))
+        half = 1.96 * std / np.sqrt(b) if b > 1 else float("nan")
+        r2l = self.rounds_to_loss[np.isfinite(self.rounds_to_loss)]
+        return {
+            "num_scenarios": float(b),
+            "auroc_used_mean": mean,
+            "auroc_used_std": std,
+            "auroc_used_ci95_lo": mean - half,
+            "auroc_used_ci95_hi": mean + half,
+            "rounds_to_loss_mean": (float(np.mean(r2l)) if len(r2l)
+                                    else float("nan")),
+        }
+
+
+def _scenario_grid(num_traces: int, seeds: Sequence[int]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Full cross product: trace-major, seed-minor."""
+    seeds = np.asarray(list(seeds), np.int32)
+    trace_idx = np.repeat(np.arange(num_traces, dtype=np.int32),
+                          len(seeds))
+    seed_arr = np.tile(seeds, num_traces)
+    return trace_idx, seed_arr
+
+
+def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+                 device_counts: np.ndarray, test_x: np.ndarray,
+                 test_y: np.ndarray, cfg: SimConfig,
+                 traces: Sequence[Failure], seeds: Sequence[int],
+                 target_loss: Optional[float] = None) -> CampaignResult:
+    """Run every (trace x seed) scenario in one jitted, vmapped call.
+
+    ``traces`` may mix legacy :class:`FailureSpec`s and
+    :class:`FailureTrace`s; all are normalised to traces and stacked.
+    ``cfg.seed`` is ignored — seeds come from the grid."""
+    topo = cfg.topology()
+    norm = [as_trace(t, topo) for t in traces]
+    trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
+    if len(trace_idx) == 0:
+        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
+    stacked = stack_traces(norm)
+    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+
+    dx, counts, valid = _prepare_arrays(cfg, device_x, device_counts)
+    tx = jnp.asarray(test_x)
+    assert dx.shape[0] == topo.num_devices, (dx.shape, topo.num_devices)
+    core = _build_core(ae_cfg, dataclasses.replace(cfg, seed=0),
+                       score_history=False)
+
+    def scenario(trace, seed):
+        global TRACE_COUNT
+        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
+        return core(dx, counts, valid, tx, trace, seed)
+
+    # data arrays are closed over, so the jit is per-campaign: the whole
+    # (trace x seed) batch shares ONE compile (asserted by tests), and a
+    # fresh campaign with different data cannot see a stale closure.
+    batched = jax.jit(jax.vmap(scenario, in_axes=(0, 0)))
+    out = batched(batch_traces, jnp.asarray(seed_arr))
+
+    return _post_process(cfg, out, trace_idx, seed_arr, test_y,
+                         target_loss)
+
+
+def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
+                  ) -> CampaignResult:
+    losses = np.asarray(out.losses)                    # (B, R)
+    iso_losses = np.asarray(out.iso_losses)
+    finals = np.asarray(out.final_scores)              # (B, T)
+    iso_scores = np.asarray(out.iso_final_scores)      # (B, N, T')
+    final_alive = np.asarray(out.final_alive)          # (B, N)
+    server_dead = np.asarray(out.server_dead) > 0      # (B,)
+    B = losses.shape[0]
+
+    final_auroc = np.array([auroc(finals[b], test_y) for b in range(B)])
+    track_iso = (cfg.scheme == "fl")
+    iso_auroc = np.full(B, np.nan)
+    iso_active = np.zeros(B, bool)
+    if track_iso:
+        for b in range(B):
+            if server_dead[b]:
+                iso_active[b] = True
+                iso_auroc[b] = iso_mean_auroc(iso_scores[b],
+                                              final_alive[b], test_y)
+    auroc_used = np.where(iso_active, iso_auroc, final_auroc)
+
+    r2l = np.full(B, np.nan)
+    if target_loss is not None:
+        for b in range(B):
+            hit = np.where(losses[b] <= target_loss)[0]
+            if len(hit):
+                r2l[b] = hit[0] + 1
+
+    return CampaignResult(cfg=cfg, trace_index=trace_idx, seed=seed_arr,
+                          auroc_used=auroc_used, final_auroc=final_auroc,
+                          iso_auroc=iso_auroc, iso_active=iso_active,
+                          loss_curves=losses, iso_loss_curves=iso_losses,
+                          rounds_to_loss=r2l)
+
+
+def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+               device_counts: np.ndarray, test_x: np.ndarray,
+               test_y: np.ndarray, base: SimConfig,
+               scheme_ks: Sequence[Tuple[str, int]],
+               traces: Sequence[Failure], seeds: Sequence[int],
+               target_loss: Optional[float] = None
+               ) -> Dict[Tuple[str, int], CampaignResult]:
+    """(scheme x k) grid of batched campaigns — one compile per cell.
+
+    Returns {(scheme, k): CampaignResult}; every cell covers the full
+    (trace x seed) scenario batch."""
+    out: Dict[Tuple[str, int], CampaignResult] = {}
+    for scheme, k in scheme_ks:
+        cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
+        out[(scheme, k)] = run_campaign(ae_cfg, device_x, device_counts,
+                                        test_x, test_y, cfg, traces,
+                                        seeds, target_loss)
+    return out

@@ -39,6 +39,30 @@ from repro.optim.optimizers import apply_updates, make_optimizer
 from repro.sharding import logical as L
 
 
+#: Newer jax exposes ``jax.shard_map(..., axis_names=...)`` whose
+#: partial-manual lowering is robust.  On 0.4.x the experimental API's
+#: partial-auto mode fatally trips XLA:CPU's SPMD partitioner on any
+#: ``ppermute`` inside the region (manual-subgroup reshard check), so
+#: there we fall back to a FULLY manual region: the non-federated axes
+#: are replicated into every shard (in_specs never mention them), each
+#: shard redundantly computes the whole model — correct, but without
+#: model-parallel compute savings on that legacy path.
+_FULL_MANUAL_FALLBACK = not hasattr(jax, "shard_map")
+
+
+def _partial_manual_shard_map(f, mesh: Mesh, in_specs, out_specs, manual):
+    """Partial-manual shard_map across jax versions: manual over the
+    federated ``manual`` axes, auto (GSPMD) over the rest where the
+    backend supports it (see ``_FULL_MANUAL_FALLBACK``)."""
+    if not _FULL_MANUAL_FALLBACK:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual), check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def data_axis_size(mesh: Mesh) -> int:
     sizes = L.mesh_axis_sizes(mesh)
     return sizes.get("data", 1)
@@ -207,9 +231,14 @@ def make_ring_train_step(mcfg: ModelConfig, tolfl: TolFLConfig,
     psum_dt = sync_dt if (sync_dt is not None
                           and jax.default_backend() == "tpu") else None
 
-    def agg_shard(grads, n, loss):
-        """Runs per shard inside shard_map: hierarchical Tol-FL combine."""
-        di = jax.lax.axis_index("data")
+    def agg_shard(grads, n, loss, di, pi):
+        """Runs per shard inside shard_map: hierarchical Tol-FL combine.
+
+        ``di``/``pi`` are the shard's data/pod indices, fed in as a
+        sharded iota operand rather than ``jax.lax.axis_index`` — the
+        latter lowers to PartitionId, which XLA's SPMD partitioner
+        rejects in the partial-manual (auto over "model") region on
+        CPU."""
         # ---- intra-cluster FedAvg (parallel psum over member groups) ----
         # normalise BEFORE the reduce: r = n_i / sum n stays in [0, 1], so
         # the psum payload is well-scaled even under bf16 grad sync
@@ -241,7 +270,6 @@ def make_ring_train_step(mcfg: ModelConfig, tolfl: TolFLConfig,
         # ---- outer SBT ring over pods ----
         at_last = (di == last_head).astype(jnp.float32)
         if has_pod and tolfl.pod_ring:
-            pi = jax.lax.axis_index("pod")
             for hop in range(p_sz - 1):
                 perm = [(hop, hop + 1)]
                 recv_n = jax.lax.ppermute(carry_n, "pod", perm)
@@ -289,13 +317,19 @@ def make_ring_train_step(mcfg: ModelConfig, tolfl: TolFLConfig,
         n_fin = jax.lax.psum(carry_n * is_final, axes)
         return g_fin, l_fin, n_fin
 
-    def per_shard(params, batch, alive):
-        with L.manual_axes(manual):
-            return _per_shard(params, batch, alive)
+    # with the full-manual fallback every mesh axis is inside the
+    # region, so sharding constraints must omit them all
+    ctx_axes = (tuple(mesh.axis_names) if _FULL_MANUAL_FALLBACK
+                else manual)
 
-    def _per_shard(params, batch, alive):
-        di = jax.lax.axis_index("data")
-        gi = di + (d_sz * jax.lax.axis_index("pod") if has_pod else 0)
+    def per_shard(params, batch, alive, gidx):
+        with L.manual_axes(ctx_axes):
+            return _per_shard(params, batch, alive, gidx)
+
+    def _per_shard(params, batch, alive, gidx):
+        gi = gidx[0]                  # this shard's global group index
+        di = gi % d_sz
+        pi = gi // d_sz
 
         def local_loss(p):
             total, metrics = T.loss_fn(p, mcfg, batch, use_pallas)
@@ -338,7 +372,7 @@ def make_ring_train_step(mcfg: ModelConfig, tolfl: TolFLConfig,
                 params)
         w = effective_weights(alive, topo_glob)[gi]
         n = w * batch["tokens"].size
-        g_fin, l_fin, n_fin = agg_shard(grads, n, lv)
+        g_fin, l_fin, n_fin = agg_shard(grads, n, lv, di, pi)
         if tolfl.grad_sync_dtype:
             # restore f32 master grads for the optimizer
             g_fin = jax.tree.map(lambda g_: g_.astype(jnp.float32), g_fin)
@@ -351,11 +385,12 @@ def make_ring_train_step(mcfg: ModelConfig, tolfl: TolFLConfig,
         # leading batch dim over the federated axes
         batch_specs = jax.tree.map(
             lambda v: PS(manual, *([None] * (v.ndim - 1))), batch)
-        sm = jax.shard_map(per_shard, mesh=mesh,
-                           in_specs=(PS(), batch_specs, PS()),
-                           out_specs=out_specs, axis_names=set(manual),
-                           check_vma=False)
-        g, loss, n_tot = sm(state["params"], batch, alive)
+        sm = _partial_manual_shard_map(per_shard, mesh,
+                                       (PS(), batch_specs, PS(),
+                                        PS(manual)),
+                                       out_specs, manual)
+        gidx = jnp.arange(p_sz * d_sz, dtype=jnp.int32)
+        g, loss, n_tot = sm(state["params"], batch, alive, gidx)
         has_update = (n_tot > 0).astype(jnp.float32)
         g = jax.tree.map(lambda x: x * has_update.astype(x.dtype), g)
         updates, new_opt = opt.update(g, state["opt"], state["params"])

@@ -1,22 +1,35 @@
-"""Failure model (paper Section II / IV-B).
+"""Failure model (paper Section II / IV-B) and timed failure traces.
 
-Any one networked device may become unreachable at any stage; failures are
+Any networked device may become unreachable at any stage; failures are
 client (cluster member) or server (cluster head / FL server).  The model
 is *in-graph*: an ``alive`` mask enters the jitted step and per-device
 effective weights are derived from it, so one compiled executable covers
 every failure scenario — which is exactly the property the paper wants
 (training persists without reconfiguration).
 
+Two encodings exist:
+
+* :class:`FailureSpec` — the legacy single-event form (kept for
+  back-compat; every consumer that accepted a spec still does).
+* :class:`FailureTrace` — a fixed-shape array encoding of up to ``M``
+  timed failure/recovery events.  Because every field is a same-shape
+  array, traces are a registered pytree: they can be stacked on a
+  leading axis and ``vmap``-ed, which is what lets
+  :mod:`repro.core.campaign` sweep whole grids of scenarios through ONE
+  compiled executable.
+
 Semantics (paper IV-B):
 * dead member  -> its samples leave the weighted mean; cluster continues.
 * dead head    -> the entire cluster leaves training (worst case).
 * FL (k=1) head death == server death -> no aggregation is possible; the
   engine falls back to isolated local training (paper Section V-C).
+* recovery (churn) -> a later event may bring a device back; the most
+  recent event targeting a device wins.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +37,18 @@ import numpy as np
 
 from repro.core.topology import Topology
 
+#: default number of event slots in a trace (fixed shape => one compile)
+MAX_EVENTS = 8
+#: sentinel epoch for unused event slots — never fires
+PAD_EPOCH = 1 << 30
+#: event-kind codes carried in the trace arrays (baselines interpret
+#: "server" events as aggregator death because they have no head devices)
+KIND_CODES = {"none": 0, "client": 1, "server": 2}
+
 
 @dataclass(frozen=True)
 class FailureSpec:
-    """A single failure event injected during training."""
+    """A single failure event injected during training (legacy form)."""
     epoch: int                 # fires at the START of this epoch/round
     kind: str                  # "client" | "server" | "none"
     device: Optional[int] = None   # explicit device id; defaults per kind
@@ -43,17 +64,121 @@ class FailureSpec:
         return c0[-1] if len(c0) > 1 else c0[0]
 
 
-NO_FAILURE = FailureSpec(epoch=1 << 30, kind="none")
+NO_FAILURE = FailureSpec(epoch=PAD_EPOCH, kind="none")
 
 
-def alive_mask(spec: FailureSpec, topo: Topology, epoch: jax.Array
+@dataclass(frozen=True)
+class FailureEvent:
+    """One timed event of a :class:`FailureTrace`."""
+    epoch: int
+    kind: str                      # "client" | "server"
+    device: Optional[int] = None   # explicit device id; defaults per kind
+    recover: bool = False          # True -> the device comes back
+
+    def target(self, topo: Topology) -> int:
+        return FailureSpec(self.epoch, self.kind, self.device).target(topo)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class FailureTrace:
+    """Up to M timed events as fixed-shape arrays (a vmappable pytree).
+
+    Events are stored sorted by epoch (stable); unused slots carry
+    ``PAD_EPOCH`` / device -1 and never match.  ``alive_after[j]`` is the
+    device's state once event j fires (0 = dead, 1 = recovered)."""
+    epochs: jax.Array       # (M,) int32
+    devices: jax.Array      # (M,) int32, -1 in padding slots
+    alive_after: jax.Array  # (M,) float32 in {0, 1}
+    kinds: jax.Array        # (M,) int32 KIND_CODES
+
+    @property
+    def max_events(self) -> int:
+        return self.epochs.shape[-1]
+
+    @staticmethod
+    def none(max_events: int = MAX_EVENTS) -> "FailureTrace":
+        return FailureTrace(
+            epochs=jnp.full((max_events,), PAD_EPOCH, jnp.int32),
+            devices=jnp.full((max_events,), -1, jnp.int32),
+            alive_after=jnp.ones((max_events,), jnp.float32),
+            kinds=jnp.zeros((max_events,), jnp.int32))
+
+    @classmethod
+    def from_events(cls, events: Sequence[FailureEvent], topo: Topology,
+                    max_events: int = MAX_EVENTS) -> "FailureTrace":
+        """Build a trace; events are stably sorted by epoch, so events
+        that target the same device AT THE SAME epoch apply in their
+        list order — the LAST-listed one wins.  That tie-break is part
+        of the contract (tests pin it); generated trace grids should
+        avoid same-epoch duplicates unless they mean it."""
+        events = [e for e in events if e.kind != "none"]
+        assert len(events) <= max_events, (len(events), max_events)
+        events = sorted(events, key=lambda e: e.epoch)   # stable
+        ep = np.full((max_events,), PAD_EPOCH, np.int32)
+        dev = np.full((max_events,), -1, np.int32)
+        alv = np.ones((max_events,), np.float32)
+        knd = np.zeros((max_events,), np.int32)
+        for j, e in enumerate(events):
+            ep[j] = e.epoch
+            dev[j] = e.target(topo)
+            alv[j] = 1.0 if e.recover else 0.0
+            knd[j] = KIND_CODES[e.kind]
+        return cls(jnp.asarray(ep), jnp.asarray(dev), jnp.asarray(alv),
+                   jnp.asarray(knd))
+
+    @classmethod
+    def from_spec(cls, spec: FailureSpec, topo: Topology,
+                  max_events: int = MAX_EVENTS) -> "FailureTrace":
+        if spec.kind == "none":
+            return cls.none(max_events)
+        ev = FailureEvent(spec.epoch, spec.kind, spec.device)
+        return cls.from_events([ev], topo, max_events)
+
+
+Failure = Union[FailureSpec, FailureTrace]
+
+
+def as_trace(failure: Failure, topo: Topology,
+             max_events: int = MAX_EVENTS) -> FailureTrace:
+    """Normalise either failure encoding to a trace."""
+    if isinstance(failure, FailureTrace):
+        return failure
+    return FailureTrace.from_spec(failure, topo, max_events)
+
+
+def stack_traces(traces: Sequence[FailureTrace]) -> FailureTrace:
+    """Stack same-shape traces on a leading axis for ``vmap``."""
+    ms = {t.max_events for t in traces}
+    assert len(ms) == 1, f"mixed max_events: {ms}"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
+
+
+def trace_alive_mask(trace: FailureTrace, num_devices: int, epoch: jax.Array
+                     ) -> jax.Array:
+    """(num_devices,) float alive mask at ``epoch`` (traced).
+
+    Events are epoch-sorted, so a fold over the static M slots leaves
+    each device with the state of its most recent fired event."""
+    active = (epoch >= trace.epochs)                       # (M,)
+    hits = trace.devices[:, None] == jnp.arange(num_devices)[None, :]
+    alive = jnp.ones((num_devices,), jnp.float32)
+    for j in range(trace.max_events):                      # M is small
+        fire = active[j] & hits[j]
+        alive = jnp.where(fire, trace.alive_after[j], alive)
+    return alive
+
+
+def alive_mask(failure: Failure, topo: Topology, epoch: jax.Array
                ) -> jax.Array:
     """(N,) float mask of devices still alive at ``epoch`` (traced)."""
     n = topo.num_devices
-    if spec.kind == "none":
+    if isinstance(failure, FailureTrace):
+        return trace_alive_mask(failure, n, epoch)
+    if failure.kind == "none":
         return jnp.ones((n,), jnp.float32)
-    tgt = spec.target(topo)
-    dead = (jnp.arange(n) == tgt) & (epoch >= spec.epoch)
+    tgt = failure.target(topo)
+    dead = (jnp.arange(n) == tgt) & (epoch >= failure.epoch)
     return (~dead).astype(jnp.float32)
 
 

@@ -7,6 +7,17 @@ one jitted ``lax.scan`` over rounds: device gradients via ``vmap``, the
 Tol-FL combine via the shared algebra in :mod:`repro.core.aggregation`,
 failures via in-graph masks from :mod:`repro.core.failure`.
 
+The round loop is factored into a pure *core* function whose only
+dynamic inputs are (data arrays, failure trace, seed).  The core is
+built once per static configuration (``_core_cache``), jitted, and
+shared by
+
+* :func:`run_simulation` — the single-scenario entry point (a repeated
+  call with a new trace/seed reuses the compiled executable), and
+* :mod:`repro.core.campaign` — which ``vmap``s the same core over a
+  stacked batch of (trace, seed) scenarios so an entire Monte-Carlo
+  sweep is ONE compile.
+
 FL server failure triggers the paper's fallback: remaining devices
 continue training *isolated* local models (Section V-C / Fig 4); the
 reported metric then averages the independent devices, exactly as the
@@ -18,8 +29,9 @@ Multi-model baselines (FedGroup / IFCA / FeSEM) live in
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +39,9 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import aggregation as agg
-from repro.core.failure import NO_FAILURE, FailureSpec, alive_mask, \
-    effective_weights
+from repro.core.failure import (Failure, FailureSpec, FailureTrace,
+                                NO_FAILURE, as_trace, effective_weights,
+                                trace_alive_mask)
 from repro.core.topology import Topology
 from repro.models import autoencoder as AE
 from repro.training.metrics import auroc
@@ -68,6 +81,17 @@ class SimResult:
     rounds_to_loss: Optional[int] = None
 
 
+class SimOutputs(NamedTuple):
+    """Raw in-graph outputs of one simulated scenario (pre-AUROC)."""
+    losses: jax.Array            # (rounds,) global-model test loss
+    iso_losses: jax.Array        # (rounds,) mean isolated test loss
+    final_scores: jax.Array      # (T,) anomaly scores of the final model
+    iso_final_scores: jax.Array  # (N, T) per-device isolated scores
+    final_alive: jax.Array       # (N,) alive mask at the last round
+    server_dead: jax.Array       # () 1.0 iff every cluster head is dead
+    score_hist: jax.Array        # (rounds, T) or (0,) if not tracked
+
+
 def _device_grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
     def local_loss(params, x, valid, key):
         x_hat = AE.forward(params, ae_cfg, x,
@@ -98,107 +122,171 @@ def _local_delta_fn(ae_cfg: AutoencoderConfig, cfg: SimConfig):
     return delta
 
 
-def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
-                   device_counts: np.ndarray, test_x: np.ndarray,
-                   test_y: np.ndarray, cfg: SimConfig,
-                   failure: FailureSpec = NO_FAILURE,
-                   target_loss: Optional[float] = None) -> SimResult:
-    """device_x: (N, n_max, D) padded; device_counts: (N,)."""
+def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+                score_history: bool):
+    """Pure scenario function: (dx, counts, valid, tx, trace, seed)
+    -> :class:`SimOutputs`.  Everything else is closed over statically;
+    the FL isolated-fallback branch exists whenever scheme == "fl" and is
+    gated in-graph by the trace, so one graph serves every trace."""
     topo = cfg.topology()
     N = topo.num_devices
+    cluster_ids = jnp.asarray(topo.device_cluster_array())
+    heads = jnp.asarray(np.array(topo.heads))
+    k = topo.num_clusters
+    delta_fn = _local_delta_fn(ae_cfg, cfg)
+    track_iso = (cfg.scheme == "fl")
+
+    def core(dx, counts, valid, tx, trace: FailureTrace, seed):
+        key = jax.random.PRNGKey(seed)
+        params, _ = AE.init_params(key, ae_cfg)
+
+        def test_loss(p):
+            s = AE.anomaly_scores(p, ae_cfg, tx)
+            return jnp.mean(s)
+
+        def round_fn(carry, epoch):
+            params, iso_params, rkey = carry
+            rkey, dkey = jax.random.split(rkey)
+            alive = trace_alive_mask(trace, N, epoch)
+            w = effective_weights(alive, topo)
+            dkeys = jax.random.split(dkey, N)
+            gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
+                params, dx, valid, dkeys)
+            ns = counts * w
+            # ---- Tol-FL hierarchical combine (Algorithm 1) ----
+            cluster_gs, n_c = agg.cluster_reduce(gs, ns, cluster_ids, k)
+            if cfg.combine == "streaming":
+                n_tot, g = agg.stacked_streaming_mean(cluster_gs, n_c)
+            else:
+                g = agg.weighted_mean(cluster_gs, n_c)
+                n_tot = jnp.sum(n_c)
+            has_update = (n_tot > 0).astype(jnp.float32)
+            new_params = jax.tree.map(
+                lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
+
+            # ---- isolated fallback (fl server failure) ----
+            if track_iso:
+                head_alive = alive[heads]
+                failed_now = 1.0 - jnp.max(head_alive)   # all heads dead
+                # track the global model until failure, then diverge per
+                # device
+                iso_params = jax.tree.map(
+                    lambda ip, p_: jnp.where(failed_now > 0, ip,
+                                             jnp.broadcast_to(p_, ip.shape)),
+                    iso_params, params)
+                iso_gs = jax.vmap(delta_fn, in_axes=(0, 0, 0, 0))(
+                    iso_params, dx, valid, dkeys)
+                iso_step = failed_now * alive   # only alive devices train
+                iso_params = jax.tree.map(
+                    lambda ip, g_: ip - cfg.lr * iso_step.reshape(
+                        (-1,) + (1,) * (g_.ndim - 1)) * g_,
+                    iso_params, iso_gs)
+                iso_tl = jnp.mean(jax.vmap(test_loss)(iso_params))
+            else:
+                iso_tl = jnp.float32(0)
+
+            tl = test_loss(new_params)
+            if score_history:
+                scores = AE.anomaly_scores(new_params, ae_cfg, tx)
+            else:
+                scores = jnp.zeros((0,), jnp.float32)
+            return (new_params, iso_params, rkey), (tl, scores, iso_tl)
+
+        iso0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy()
+            if cfg.scheme != "batch"
+            else jnp.broadcast_to(p, (1,) + p.shape),
+            params)
+        (final_params, iso_params, _), (losses, score_hist, iso_losses) = \
+            jax.lax.scan(round_fn, (params, iso0, key),
+                         jnp.arange(cfg.rounds))
+
+        final_alive = trace_alive_mask(trace, N, jnp.int32(cfg.rounds - 1))
+        server_dead = 1.0 - jnp.max(final_alive[heads])
+        final_scores = AE.anomaly_scores(final_params, ae_cfg, tx)
+        if track_iso:
+            iso_final_scores = jax.vmap(
+                lambda p: AE.anomaly_scores(p, ae_cfg, tx))(iso_params)
+        else:
+            iso_final_scores = jnp.zeros((N, 0), jnp.float32)
+        return SimOutputs(losses, iso_losses, final_scores,
+                          iso_final_scores, final_alive, server_dead,
+                          score_hist)
+
+    return core
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_core_cached(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+                        score_history: bool):
+    return jax.jit(_build_core(ae_cfg, cfg, score_history))
+
+
+def _jitted_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+                 score_history: bool):
+    """Compiled single-scenario core, cached on static config (the seed
+    field of ``cfg`` is ignored — seed is a dynamic argument)."""
+    return _jitted_core_cached(ae_cfg, dataclasses.replace(cfg, seed=0),
+                               score_history)
+
+
+def _prepare_arrays(cfg: SimConfig, device_x: np.ndarray,
+                    device_counts: np.ndarray):
+    """Scheme-aware device arrays: batch centralises all data onto the
+    single server device."""
     if cfg.scheme == "batch":
-        # centralise all data onto the single server device
         flat = np.concatenate([device_x[i, :device_counts[i]]
                                for i in range(len(device_counts))], 0)
         device_x = flat[None]
         device_counts = np.array([len(flat)])
-    assert device_x.shape[0] == N, (device_x.shape, N)
-
-    key = jax.random.PRNGKey(cfg.seed)
-    params, _ = AE.init_params(key, ae_cfg)
     dx = jnp.asarray(device_x)
     counts = jnp.asarray(device_counts, jnp.float32)
     valid = (jnp.arange(device_x.shape[1])[None, :]
              < counts[:, None]).astype(jnp.float32)     # (N, n_max)
+    return dx, counts, valid
+
+
+def iso_mean_auroc(iso_scores: np.ndarray, final_alive: np.ndarray,
+                   test_y: np.ndarray) -> float:
+    """Paper Fig 4 reporting: mean AUROC over the *alive* isolated
+    devices (the dead server keeps its frozen model and is excluded)."""
+    per_dev = [auroc(iso_scores[i], test_y)
+               for i in range(iso_scores.shape[0]) if final_alive[i] > 0]
+    return float(np.mean(per_dev)) if per_dev else float("nan")
+
+
+def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+                   device_counts: np.ndarray, test_x: np.ndarray,
+                   test_y: np.ndarray, cfg: SimConfig,
+                   failure: Failure = NO_FAILURE,
+                   target_loss: Optional[float] = None) -> SimResult:
+    """device_x: (N, n_max, D) padded; device_counts: (N,).
+
+    ``failure`` may be a legacy single-event :class:`FailureSpec` or a
+    multi-event :class:`FailureTrace`."""
+    topo = cfg.topology()
+    N = topo.num_devices
+    trace = as_trace(failure, topo)
+    dx, counts, valid = _prepare_arrays(cfg, device_x, device_counts)
+    assert dx.shape[0] == N, (dx.shape, N)
     tx = jnp.asarray(test_x)
-    cluster_ids = jnp.asarray(topo.device_cluster_array())
-    k = topo.num_clusters
-    delta_fn = _local_delta_fn(ae_cfg, cfg)
-    fl_server_fallback = (cfg.scheme == "fl" and failure.kind == "server")
 
-    def test_loss(p):
-        s = AE.anomaly_scores(p, ae_cfg, tx)
-        return jnp.mean(s)
+    core = _jitted_core(ae_cfg, cfg, True)
+    out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
 
-    def round_fn(carry, epoch):
-        params, iso_params, rkey = carry
-        rkey, dkey = jax.random.split(rkey)
-        alive = alive_mask(failure, topo, epoch)
-        w = effective_weights(alive, topo)
-        dkeys = jax.random.split(dkey, N)
-        gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
-            params, dx, valid, dkeys)
-        ns = counts * w
-        # ---- Tol-FL hierarchical combine (Algorithm 1) ----
-        cluster_gs, n_c = agg.cluster_reduce(gs, ns, cluster_ids, k)
-        if cfg.combine == "streaming":
-            n_tot, g = agg.stacked_streaming_mean(cluster_gs, n_c)
-        else:
-            g = agg.weighted_mean(cluster_gs, n_c)
-            n_tot = jnp.sum(n_c)
-        has_update = (n_tot > 0).astype(jnp.float32)
-        new_params = jax.tree.map(
-            lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
-
-        # ---- isolated fallback (fl server failure) ----
-        if fl_server_fallback:
-            failed_now = jnp.asarray(epoch >= failure.epoch, jnp.float32)
-            # track the global model until failure, then diverge per device
-            iso_params = jax.tree.map(
-                lambda ip, p_: jnp.where(failed_now > 0, ip,
-                                         jnp.broadcast_to(p_, ip.shape)),
-                iso_params, params)
-            iso_gs = jax.vmap(delta_fn, in_axes=(0, 0, 0, 0))(
-                iso_params, dx, valid, dkeys)
-            iso_step = failed_now * alive   # only alive devices train
-            iso_params = jax.tree.map(
-                lambda ip, g_: ip - cfg.lr * iso_step.reshape(
-                    (-1,) + (1,) * (g_.ndim - 1)) * g_,
-                iso_params, iso_gs)
-            iso_tl = jnp.mean(jax.vmap(test_loss)(iso_params))
-        else:
-            iso_tl = jnp.float32(0)
-
-        tl = test_loss(new_params)
-        scores = AE.anomaly_scores(new_params, ae_cfg, tx)
-        return (new_params, iso_params, rkey), (tl, scores, iso_tl)
-
-    iso0 = jax.tree.map(
-        lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy()
-        if cfg.scheme != "batch" else jnp.broadcast_to(p, (1,) + p.shape),
-        params)
-    (final_params, iso_params, _), (losses, scores_all, iso_losses) = \
-        jax.lax.scan(round_fn, (params, iso0, key),
-                     jnp.arange(cfg.rounds))
-
-    losses = np.asarray(losses)
-    iso_losses = np.asarray(iso_losses)
-    scores_all = np.asarray(scores_all)
+    losses = np.asarray(out.losses)
+    iso_losses = np.asarray(out.iso_losses)
+    scores_all = np.asarray(out.score_hist)
     aurocs = np.array([auroc(s, test_y) for s in scores_all])
     final = float(aurocs[-1])
 
     # isolated final AUROC: mean over alive devices of per-device AUROC
+    fl_server_fallback = (cfg.scheme == "fl"
+                          and bool(np.asarray(out.server_dead) > 0))
     iso_final = float("nan")
     if fl_server_fallback:
-        per_dev = []
-        tgt = failure.target(topo)
-        for i in range(N):
-            if i == tgt:
-                continue
-            p_i = jax.tree.map(lambda x: x[i], iso_params)
-            s = np.asarray(AE.anomaly_scores(p_i, ae_cfg, tx))
-            per_dev.append(auroc(s, test_y))
-        iso_final = float(np.mean(per_dev))
+        iso_final = iso_mean_auroc(np.asarray(out.iso_final_scores),
+                                   np.asarray(out.final_alive), test_y)
 
     used = iso_final if fl_server_fallback else final
     r2l = None

@@ -179,6 +179,10 @@ def constrain(x: jax.Array, axes: Sequence[Optional[str]],
              else (tuple(q for q in p if q not in manual) or None
                    if isinstance(p, tuple) else p))
             for p in spec])
+    if all(p is None for p in spec):
+        # fully-replicated constraint is a no-op; skipping it also keeps
+        # fully-manual shard_map regions (every axis manual) legal
+        return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 

@@ -1,0 +1,105 @@
+"""Optional-``hypothesis`` shim: the property tests run either way.
+
+``hypothesis`` is an *optional* test dependency (see tests/README.md).
+When it is installed, this module re-exports the real ``given`` /
+``settings`` / ``st`` unchanged.  When it is missing, a minimal
+deterministic fallback stands in so the suite still COLLECTS and the
+invariants are still EXERCISED: each ``@given`` test runs a bounded
+number of examples drawn from a PRNG seeded by the test name (stable
+across runs — failures are reproducible, there is no shrinking).
+
+Only the strategy surface this suite uses is implemented:
+``st.integers``, ``st.booleans``, ``st.sampled_from``, ``st.data``,
+``st.composite``.
+"""
+from __future__ import annotations
+
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    #: fallback example budget — enough to exercise the property, small
+    #: enough to keep tier-1 fast (real hypothesis uses max_examples)
+    FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example_from(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data`` fixture."""
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example_from(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class st:                                        # noqa: N801
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def draw_with(rng):
+                    return fn(lambda s: s.example_from(rng),
+                              *args, **kwargs)
+                return _Strategy(draw_with)
+            return build
+
+    def given(**strategies):
+        def decorate(fn):
+            # NOT functools.wraps: __wrapped__ would make pytest
+            # introspect the original signature and demand fixtures
+            # for the strategy parameters.
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", 1 << 30),
+                        FALLBACK_MAX_EXAMPLES)
+                # deterministic per-test seed: reproducible failures
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    fn(**{name: s.example_from(rng)
+                          for name, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=None, **_ignored):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return decorate

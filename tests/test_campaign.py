@@ -1,0 +1,159 @@
+"""Batched campaign engine == a loop of single ``run_simulation`` calls.
+
+The acceptance contract (ISSUE 1): a campaign of >= 32 (trace x seed)
+scenarios for scheme="tolfl" runs through ONE jitted/vmapped executable
+(compile-count assertion) and matches the per-scenario simulator to
+<= 1e-5 on ``auroc_used``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import campaign
+from repro.core.campaign import run_campaign, sweep_grid
+from repro.core.failure import (NO_FAILURE, FailureEvent, FailureSpec,
+                                FailureTrace)
+from repro.core.simulate import SimConfig, run_simulation
+from repro.data import commsml, federated
+
+ROUNDS = 5
+SEEDS = range(4)
+
+
+@pytest.fixture(scope="module")
+def small_ae():
+    return AutoencoderConfig(input_dim=commsml.N_FEATURES, hidden=(16,),
+                             code_dim=4, dropout=0.2)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    split = federated.make_split(X, y, num_devices=10, num_clusters=5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    return dx, counts, split.test_x, split.test_y
+
+
+def _tolfl_cfg():
+    return SimConfig(scheme="tolfl", num_devices=10, num_clusters=5,
+                     rounds=ROUNDS, lr=1e-3, dropout=False)
+
+
+def _traces(cfg):
+    """8 scenarios: none, timed client/server failures, multi-event and
+    recovery traces — the kind of grid the single-event seed could not
+    express."""
+    topo = cfg.topology()
+    return [
+        NO_FAILURE,
+        FailureSpec(epoch=1, kind="client"),
+        FailureSpec(epoch=3, kind="client"),
+        FailureSpec(epoch=1, kind="server"),
+        FailureSpec(epoch=3, kind="server"),
+        FailureTrace.from_events([FailureEvent(1, "client"),
+                                  FailureEvent(2, "server")], topo),
+        FailureTrace.from_events(
+            [FailureEvent(1, "client"),
+             FailureEvent(3, "client", recover=True)], topo),
+        FailureTrace.from_events([FailureEvent(0, "server", device=2),
+                                  FailureEvent(2, "client", device=7)],
+                                 topo),
+    ]
+
+
+@pytest.fixture(scope="module")
+def tolfl_campaign(small_ae, small_data):
+    dx, counts, tx, ty = small_data
+    cfg = _tolfl_cfg()
+    before = campaign.TRACE_COUNT
+    res = run_campaign(small_ae, dx, counts, tx, ty, cfg, _traces(cfg),
+                       seeds=SEEDS, target_loss=2430.0)
+    return res, campaign.TRACE_COUNT - before
+
+
+def test_campaign_covers_grid(tolfl_campaign):
+    res, _ = tolfl_campaign
+    assert res.num_scenarios == 8 * len(SEEDS) >= 32
+    assert res.loss_curves.shape == (res.num_scenarios, ROUNDS)
+    assert np.isfinite(res.auroc_used).all()
+
+
+def test_campaign_single_compile(tolfl_campaign):
+    """The whole >=32-scenario batch must trace the scenario core
+    exactly once: one compiled executable serves every trace."""
+    res, n_traces = tolfl_campaign
+    assert res.num_scenarios >= 32
+    assert n_traces == 1, f"core traced {n_traces}x; expected 1"
+
+
+def test_campaign_matches_per_scenario_simulate(tolfl_campaign, small_ae,
+                                                small_data):
+    """Same seeds -> same results as a Python loop of single runs."""
+    res, _ = tolfl_campaign
+    dx, counts, tx, ty = small_data
+    cfg = _tolfl_cfg()
+    traces = _traces(cfg)
+    for b in range(res.num_scenarios):
+        scfg = dataclasses.replace(cfg, seed=int(res.seed[b]))
+        single = run_simulation(small_ae, dx, counts, tx, ty, scfg,
+                                traces[res.trace_index[b]])
+        np.testing.assert_allclose(res.auroc_used[b], single.auroc_used,
+                                   atol=1e-5)
+        np.testing.assert_allclose(res.loss_curves[b], single.loss_curve,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_campaign_fl_fallback_matches_simulate(small_ae, small_data):
+    """The in-graph FL server-death fallback survives vmapping."""
+    dx, counts, tx, ty = small_data
+    cfg = SimConfig(scheme="fl", num_devices=10, num_clusters=1,
+                    rounds=ROUNDS, lr=1e-3, dropout=False)
+    traces = [NO_FAILURE, FailureSpec(epoch=1, kind="server")]
+    res = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                       seeds=[0, 1])
+    assert list(res.iso_active) == [False, False, True, True]
+    for b in range(res.num_scenarios):
+        scfg = dataclasses.replace(cfg, seed=int(res.seed[b]))
+        single = run_simulation(small_ae, dx, counts, tx, ty, scfg,
+                                traces[res.trace_index[b]])
+        assert single.iso_active == bool(res.iso_active[b])
+        np.testing.assert_allclose(res.auroc_used[b], single.auroc_used,
+                                   atol=1e-5)
+
+
+def test_summary_statistics(tolfl_campaign):
+    res, _ = tolfl_campaign
+    s = res.summary()
+    assert s["num_scenarios"] == res.num_scenarios
+    np.testing.assert_allclose(s["auroc_used_mean"],
+                               res.auroc_used.mean(), rtol=1e-12)
+    assert (s["auroc_used_ci95_lo"] <= s["auroc_used_mean"]
+            <= s["auroc_used_ci95_hi"])
+    # target_loss was chosen reachable for at least some scenarios
+    assert np.isfinite(res.rounds_to_loss).any()
+    assert s["rounds_to_loss_mean"] >= 1
+
+
+def test_select_by_trace(tolfl_campaign):
+    res, _ = tolfl_campaign
+    per_trace = [res.select(i) for i in range(8)]
+    assert all(len(p) == len(SEEDS) for p in per_trace)
+    # the failure-free scenarios should not be the worst of the grid
+    assert per_trace[0].mean() >= res.auroc_used.min()
+
+
+def test_sweep_grid_cells(small_ae, small_data):
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=3, lr=1e-3, dropout=False)
+    cells = sweep_grid(small_ae, dx, counts, tx, ty, base,
+                       scheme_ks=[("tolfl", 5), ("tolfl", 2), ("sbt", 10)],
+                       traces=[NO_FAILURE,
+                               FailureSpec(epoch=1, kind="server")],
+                       seeds=[0])
+    assert set(cells) == {("tolfl", 5), ("tolfl", 2), ("sbt", 10)}
+    for res in cells.values():
+        assert res.num_scenarios == 2
+        assert np.isfinite(res.auroc_used).all()

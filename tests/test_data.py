@@ -1,7 +1,7 @@
 """Data substrate tests: Comms-ML generator, reference sets, federated
 splits, token pipeline."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data import commsml, federated, reference
 from repro.data.pipeline import TokenPipeline

@@ -63,10 +63,13 @@ SCRIPT = textwrap.dedent("""
         with L.activate_mesh(mesh, rules):
             step = D.make_train_step(cfg, tolfl, ocfg, mesh)
             new_state, metrics = jax.jit(step)(state, batch, alive)
-        flat = jnp.concatenate([x.ravel().astype(jnp.float32)
-                                for x in jax.tree.leaves(
-                                    new_state["params"])])
-        return np.asarray(flat), metrics
+        # flatten leaf-by-leaf on the HOST: eager jnp.concatenate over
+        # differently-sharded leaves (replicated ring vs model-sharded
+        # psum outputs) scrambles block order on this jax/CPU version
+        flat = np.concatenate([
+            np.asarray(jax.device_get(x)).astype(np.float32).ravel()
+            for x in jax.tree.leaves(new_state["params"])])
+        return flat, metrics
 
     results = {}
     for name, alive in [("none", np.ones(4)),

@@ -6,7 +6,7 @@
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.failure import (NO_FAILURE, FailureSpec, alive_mask,
                                 effective_weights, surviving_fraction)

@@ -1,0 +1,166 @@
+"""FailureTrace <-> FailureSpec equivalence and weight invariants.
+
+The trace encoding must be a strict generalisation: a single-event
+trace reproduces the legacy spec semantics BIT-IDENTICALLY (alive masks
+and effective weights), and the derived per-device weights always
+normalise to 1 over the surviving clusters or vanish entirely when
+every head is dead.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.failure import (MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
+                                FailureEvent, FailureSpec, FailureTrace,
+                                alive_mask, as_trace, effective_weights,
+                                stack_traces, trace_alive_mask)
+from repro.core.topology import Topology
+
+TOPOLOGIES = [(8, 4), (8, 1), (8, 8), (6, 3), (10, 5), (1, 1)]
+
+
+# ---------------------------------------------------------------------------
+# single-event trace == legacy spec, bit-identically
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,k", TOPOLOGIES)
+@pytest.mark.parametrize("kind", ["none", "client", "server"])
+@pytest.mark.parametrize("fail_epoch", [0, 3])
+def test_single_event_trace_matches_spec(n, k, kind, fail_epoch):
+    topo = Topology(n, k)
+    spec = (NO_FAILURE if kind == "none"
+            else FailureSpec(epoch=fail_epoch, kind=kind))
+    trace = as_trace(spec, topo)
+    for epoch in [0, fail_epoch - 1, fail_epoch, fail_epoch + 1, 1000]:
+        a_spec = np.asarray(alive_mask(spec, topo, jnp.int32(epoch)))
+        a_tr = np.asarray(alive_mask(trace, topo, jnp.int32(epoch)))
+        np.testing.assert_array_equal(a_tr, a_spec)
+        w_spec = np.asarray(effective_weights(jnp.asarray(a_spec), topo))
+        w_tr = np.asarray(effective_weights(jnp.asarray(a_tr), topo))
+        np.testing.assert_array_equal(w_tr, w_spec)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_idx=st.integers(0, len(TOPOLOGIES) - 1),
+       kind=st.sampled_from(["client", "server"]),
+       fail_epoch=st.integers(0, 20),
+       query=st.integers(0, 25),
+       data=st.data())
+def test_explicit_device_trace_matches_spec(n_idx, kind, fail_epoch,
+                                            query, data):
+    n, k = TOPOLOGIES[n_idx]
+    topo = Topology(n, k)
+    dev = data.draw(st.integers(0, n - 1))
+    spec = FailureSpec(epoch=fail_epoch, kind=kind, device=dev)
+    trace = as_trace(spec, topo)
+    a_spec = np.asarray(alive_mask(spec, topo, jnp.int32(query)))
+    a_tr = np.asarray(alive_mask(trace, topo, jnp.int32(query)))
+    np.testing.assert_array_equal(a_tr, a_spec)
+
+
+# ---------------------------------------------------------------------------
+# multi-event semantics
+# ---------------------------------------------------------------------------
+def test_two_failures_compose():
+    topo = Topology(8, 4)
+    trace = FailureTrace.from_events(
+        [FailureEvent(3, "client", device=1),
+         FailureEvent(5, "server", device=2)], topo)
+    np.testing.assert_array_equal(
+        np.asarray(trace_alive_mask(trace, 8, jnp.int32(2))), np.ones(8))
+    a4 = np.asarray(trace_alive_mask(trace, 8, jnp.int32(4)))
+    np.testing.assert_array_equal(a4, [1, 0, 1, 1, 1, 1, 1, 1])
+    a5 = np.asarray(trace_alive_mask(trace, 8, jnp.int32(5)))
+    np.testing.assert_array_equal(a5, [1, 0, 0, 1, 1, 1, 1, 1])
+    # head 2 dead kills cluster {2,3}; member 1 only kills itself
+    w = np.asarray(effective_weights(jnp.asarray(a5), topo))
+    np.testing.assert_array_equal(w, [1, 0, 0, 0, 1, 1, 1, 1])
+
+
+def test_recovery_restores_device():
+    topo = Topology(4, 2)
+    trace = FailureTrace.from_events(
+        [FailureEvent(2, "client", device=3),
+         FailureEvent(6, "client", device=3, recover=True)], topo)
+    assert float(trace_alive_mask(trace, 4, jnp.int32(1))[3]) == 1.0
+    assert float(trace_alive_mask(trace, 4, jnp.int32(2))[3]) == 0.0
+    assert float(trace_alive_mask(trace, 4, jnp.int32(5))[3]) == 0.0
+    assert float(trace_alive_mask(trace, 4, jnp.int32(6))[3]) == 1.0
+    assert float(trace_alive_mask(trace, 4, jnp.int32(99))[3]) == 1.0
+
+
+def test_events_sorted_regardless_of_input_order():
+    topo = Topology(4, 2)
+    ev = [FailureEvent(6, "client", device=3, recover=True),
+          FailureEvent(2, "client", device=3)]
+    trace = FailureTrace.from_events(ev, topo)          # out of order
+    assert float(trace_alive_mask(trace, 4, jnp.int32(7))[3]) == 1.0
+    assert float(trace_alive_mask(trace, 4, jnp.int32(3))[3]) == 0.0
+
+
+def test_same_epoch_ties_last_listed_wins():
+    """Contract: same-device same-epoch events apply in list order."""
+    topo = Topology(4, 2)
+    fail = FailureEvent(5, "client", device=3)
+    recover = FailureEvent(5, "client", device=3, recover=True)
+    dead = FailureTrace.from_events([recover, fail], topo)
+    alive = FailureTrace.from_events([fail, recover], topo)
+    assert float(trace_alive_mask(dead, 4, jnp.int32(5))[3]) == 0.0
+    assert float(trace_alive_mask(alive, 4, jnp.int32(5))[3]) == 1.0
+
+
+def test_padding_slots_never_fire():
+    topo = Topology(4, 2)
+    trace = FailureTrace.none()
+    assert trace.max_events == MAX_EVENTS
+    assert int(np.asarray(trace.epochs)[0]) == PAD_EPOCH
+    m = np.asarray(trace_alive_mask(trace, 4, jnp.int32(10 ** 9)))
+    np.testing.assert_array_equal(m, np.ones(4))
+
+
+def test_stack_traces_shapes():
+    topo = Topology(8, 4)
+    traces = [FailureTrace.none(),
+              as_trace(FailureSpec(3, "server"), topo),
+              as_trace(FailureSpec(5, "client"), topo)]
+    stacked = stack_traces(traces)
+    assert stacked.epochs.shape == (3, MAX_EVENTS)
+    assert stacked.devices.shape == (3, MAX_EVENTS)
+
+
+# ---------------------------------------------------------------------------
+# weight normalisation invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(members=st.integers(1, 4), k=st.integers(1, 5),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_weights_normalise_over_alive_clusters(members, k, seed):
+    """Normalised sample weights sum to 1 over surviving clusters, and
+    devices in a dead cluster carry exactly zero weight."""
+    topo = Topology(members * k, k)
+    n = topo.num_devices
+    rng = np.random.default_rng(seed)
+    alive = (rng.random(n) > 0.4).astype(np.float32)
+    counts = rng.uniform(1.0, 50.0, n).astype(np.float32)
+    w = np.asarray(effective_weights(jnp.asarray(alive), topo))
+    ns = w * counts
+    head_alive = alive[np.asarray(topo.heads)]
+    cluster_ids = topo.device_cluster_array()
+    # dead-head clusters contribute exactly nothing
+    for i in range(n):
+        if head_alive[cluster_ids[i]] == 0 or alive[i] == 0:
+            assert ns[i] == 0.0
+    tot = ns.sum()
+    if tot > 0:
+        np.testing.assert_allclose((ns / tot).sum(), 1.0, rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(ns, np.zeros(n))
+
+
+def test_all_heads_dead_zeroes_everything():
+    topo = Topology(6, 3)
+    alive = np.ones(6, np.float32)
+    alive[np.asarray(topo.heads)] = 0.0
+    w = np.asarray(effective_weights(jnp.asarray(alive), topo))
+    np.testing.assert_array_equal(w, np.zeros(6))

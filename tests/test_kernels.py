@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
@@ -243,6 +243,54 @@ def test_tolfl_combine_padding():
     want = ref.tolfl_combine_reference(gs, ns)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("k,p,block", [
+    (1, 5, 4096),      # k == 1: the mean is the single gradient
+    (1, 257, 64),      # k == 1 with padding (P % block != 0)
+    (4, 130, 32),      # non-default block, P % block != 0
+    (3, 64, 16),       # non-default block, exact multiple
+    (8, 97, 128),      # block > P (clamped to P)
+])
+def test_tolfl_combine_edge_shapes(k, p, block):
+    """P % block != 0 padding, k == 1, and non-default blocks all match
+    the streaming reference exactly."""
+    rng = np.random.default_rng(k * 1000 + p)
+    gs = jnp.asarray(rng.standard_normal((k, p)).astype(np.float32))
+    ns = jnp.asarray(rng.uniform(0.1, 50.0, k).astype(np.float32))
+    got = tolfl_combine(gs, ns, block=block, interpret=True)
+    assert got.shape == (p,)
+    want = ref.tolfl_combine_reference(gs, ns)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    if k == 1:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(gs[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_tolfl_combine_all_zero_counts():
+    """All clusters dead (every sample count zero): the combine must be
+    an exact zero update, not NaN — the failure-masking path."""
+    rng = np.random.default_rng(3)
+    gs = jnp.asarray(rng.standard_normal((4, 50)).astype(np.float32))
+    ns = jnp.zeros((4,), jnp.float32)
+    got = np.asarray(tolfl_combine(gs, ns, block=16, interpret=True))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_array_equal(got, np.zeros(50, np.float32))
+    want = np.asarray(ref.tolfl_combine_reference(gs, ns))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tolfl_combine_partial_zero_counts():
+    """Dead clusters are absorbed as no-ops; survivors renormalise."""
+    rng = np.random.default_rng(4)
+    gs = rng.standard_normal((5, 33)).astype(np.float32)
+    ns = np.array([0.0, 2.0, 0.0, 3.0, 0.0], np.float32)
+    got = tolfl_combine(jnp.asarray(gs), jnp.asarray(ns), block=8,
+                        interpret=True)
+    want = (ns[1] * gs[1] + ns[3] * gs[3]) / (ns[1] + ns[3])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                               atol=2e-5)
 
 
 def test_tolfl_combine_tree():

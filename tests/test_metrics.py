@@ -1,6 +1,6 @@
 """AUROC / ROC metric tests (exact rank-statistic vs brute force)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.training.metrics import auroc, roc_curve
 

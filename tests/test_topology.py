@@ -1,7 +1,7 @@
 """Topology bookkeeping invariants (cluster structure, ring permutations)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.topology import Topology, special_cases
 
