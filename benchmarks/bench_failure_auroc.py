@@ -5,17 +5,18 @@ Columns mirror the paper: Tol-FL, FedGroup*/dagger, IFCA*/dagger,
 FeSEM*/dagger, FL, Batch (Batch omitted for server failure, as in
 Table V).  Results are mean +- std over ``reps`` seeds.
 
-Single-model schemes run through the batched campaign engine: per
+Every scheme runs through the batched campaign engine: per
 (dataset, scheme) ONE jitted/vmapped call covers the full
 (3 failure traces x reps seeds) grid — the seed's version compiled and
-ran every (scheme, failure, rep) cell separately.  Randomness across
-reps comes from the simulation seed (init/dropout); the dataset draw is
+ran every (scheme, failure, rep) cell separately, and until PR 2 the
+multi-model baselines still looped per cell.  Randomness across reps
+comes from the simulation seed (init/dropout); the dataset draw is
 fixed at seed 0 so all scenarios in a batch share one data tensor.
-Multi-model baselines keep a per-cell loop (their M-model state is a
-different program) and still pass legacy single-event ``FailureSpec``s
-— their default failure targets differ from the trace encoding's (see
-:mod:`repro.core.baselines`), so switching them to traces would change
-the Table IV casualty device.
+The multi-model cells pass legacy single-event ``FailureSpec``s, which
+the campaign normalises with the baseline default targets (client
+failure kills device N-1; see
+:func:`repro.core.baselines.as_multimodel_trace`) — the Table IV
+casualty device matches the seed's looped version.
 """
 from __future__ import annotations
 
@@ -25,8 +26,10 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 from benchmarks.datasets import ALL, prepare
-from repro.core.baselines import MultiModelConfig, run_multimodel
-from repro.core.campaign import CampaignResult, run_campaign
+from repro.core.baselines import MultiModelConfig
+from repro.core.campaign import (CampaignResult, MultiCampaignResult,
+                                 mean_ci95, run_campaign,
+                                 run_multimodel_campaign)
 from repro.core.failure import FailureSpec, NO_FAILURE, as_trace
 from repro.core.simulate import SimConfig
 
@@ -41,7 +44,10 @@ def _failure(kind: str, rounds: int = ROUNDS) -> FailureSpec:
 
 
 def _stats(vals: Sequence[float]) -> Dict[str, float]:
-    return {"mean": float(np.mean(vals)), "std": float(np.std(vals))}
+    """Mean +- SAMPLE std (ddof=1) over seeds — ddof=0 under-reports
+    the spread of small-rep campaigns (0 std for reps=1 is kept)."""
+    mean, std, _ = mean_ci95(np.asarray(vals))
+    return {"mean": mean, "std": std}
 
 
 def run_single_campaign(dataset: str, scheme: str, reps: int,
@@ -77,27 +83,31 @@ def run_single_campaign(dataset: str, scheme: str, reps: int,
     return {kind: _stats(res.select(i)) for kind, i in kind_idx.items()}
 
 
-def run_multi_cell(dataset: str, method: str, fail_kind: str, reps: int,
-                   rounds: int = ROUNDS) -> Dict[str, float]:
+def run_multi_campaign(dataset: str, method: str, reps: int,
+                       rounds: int = ROUNDS,
+                       kinds: Sequence[str] = FAIL_KINDS
+                       ) -> Dict[str, Dict[str, float]]:
+    """The requested failure conditions x reps seeds for one multi-model
+    baseline in ONE jit(vmap) call; returns
+    {fail_kind: {mean, std, multi_mean, multi_std}}."""
     prep = prepare(dataset, seed=0)
     # multi-model engines take one local step per round: give them the
     # same TOTAL local-step budget (rounds x E), failure at the same
     # relative midpoint
     mm_rounds = rounds * prep.local_epochs
-    vals: List[float] = []
-    extra: List[float] = []
-    for rep in range(reps):
-        cfg = MultiModelConfig(scheme=method, num_devices=10,
-                               num_models=min(prep.clusters, 3),
-                               rounds=mm_rounds, lr=prep.lr, seed=rep)
-        r = run_multimodel(prep.ae_cfg, prep.device_x, prep.counts,
-                           prep.test_x, prep.test_y, cfg,
-                           _failure(fail_kind, mm_rounds))
-        vals.append(r.best_auroc)
-        extra.append(r.multi_auroc)
-    out = _stats(vals)
-    out["multi_mean"] = float(np.mean(extra))
-    out["multi_std"] = float(np.std(extra))
+    cfg = MultiModelConfig(scheme=method, num_devices=10,
+                           num_models=min(prep.clusters, 3),
+                           rounds=mm_rounds, lr=prep.lr)
+    traces = [_failure(kind, mm_rounds) for kind in kinds]
+    res: MultiCampaignResult = run_multimodel_campaign(
+        prep.ae_cfg, prep.device_x, prep.counts, prep.test_x, prep.test_y,
+        cfg, traces, seeds=range(reps))
+    out: Dict[str, Dict[str, float]] = {}
+    for i, kind in enumerate(kinds):
+        cell = _stats(res.select(i, "best"))
+        multi = _stats(res.select(i, "multi"))
+        cell["multi_mean"], cell["multi_std"] = multi["mean"], multi["std"]
+        out[kind] = cell
     return out
 
 
@@ -120,9 +130,13 @@ def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
                   f"{len(kinds) * reps} scenarios in "
                   f"{time.time()-t0:.0f}s", flush=True)
         for m in multi:
+            t0 = time.time()
+            cells = run_multi_campaign(ds, m, reps, rounds)
             for kind in FAIL_KINDS:
-                multi_cells[(ds, m, kind)] = run_multi_cell(
-                    ds, m, kind, reps, rounds)
+                multi_cells[(ds, m, kind)] = cells[kind]
+            print(f"# multi campaign {ds}/{m}: "
+                  f"{len(FAIL_KINDS) * reps} scenarios in "
+                  f"{time.time()-t0:.0f}s", flush=True)
 
     lines = []
     for fail_kind, table in (("none", "Table III (no failure)"),
@@ -154,8 +168,9 @@ def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
 
 
 def run_smoke(rounds: int = 8, reps: int = 2) -> List[str]:
-    """CI micro-campaign: one batched (3 traces x reps seeds) Tol-FL
-    sweep on a small Comms-ML draw; seconds, not minutes."""
+    """CI micro-campaigns: one batched (3 traces x reps seeds) Tol-FL
+    sweep plus one batched multi-model (IFCA) sweep on a small Comms-ML
+    draw; seconds, not minutes."""
     prep = prepare("commsml", seed=0, scale=0.25)
     cfg = SimConfig(scheme="tolfl", num_devices=10,
                     num_clusters=prep.clusters, rounds=rounds,
@@ -175,6 +190,21 @@ def run_smoke(rounds: int = 8, reps: int = 2) -> List[str]:
     lines.append(f"overall,{s['auroc_used_mean']:.3f},"
                  f"{s['auroc_used_std']:.3f}")
     assert np.isfinite(res.auroc_used).all(), "smoke campaign produced NaN"
+
+    mcfg = MultiModelConfig(scheme="ifca", num_devices=10, num_models=2,
+                            rounds=rounds, lr=prep.lr)
+    t0 = time.time()
+    mres = run_multimodel_campaign(prep.ae_cfg, prep.device_x, prep.counts,
+                                   prep.test_x, prep.test_y, mcfg, traces,
+                                   seeds=range(reps))
+    lines.append(f"# smoke multi-model micro-campaign (ifca): "
+                 f"{mres.num_scenarios} scenarios, 1 compile, "
+                 f"{time.time()-t0:.1f}s")
+    lines.append("fail_kind,best_auroc_mean,multi_auroc_mean")
+    for i, kind in enumerate(FAIL_KINDS):
+        lines.append(f"{kind},{mres.select(i, 'best').mean():.3f},"
+                     f"{mres.select(i, 'multi').mean():.3f}")
+    assert np.isfinite(mres.best_auroc).all(), "multi smoke produced NaN"
     return lines
 
 

@@ -29,9 +29,12 @@ def main(argv=None) -> int:
     sections = []
 
     if args.smoke:
-        from benchmarks import bench_failure_auroc
+        from benchmarks import bench_expected_perf, bench_failure_auroc
         lines = bench_failure_auroc.run_smoke()
-        print("\n===== smoke: batched failure micro-campaign =====")
+        print("\n===== smoke: batched failure micro-campaigns =====")
+        print("\n".join(lines))
+        lines = bench_expected_perf.run_smoke()
+        print("\n===== smoke: sampled failure-rate micro-sweep =====")
         print("\n".join(lines))
         print(f"\nsmoke done in {time.time()-t_all:.0f}s")
         return 0

@@ -1,14 +1,17 @@
-"""Failure-scenario sweep: the paper's Tables III / IV / V in miniature.
+"""Failure-rate sweep: the paper's robustness story, Monte-Carlo style.
 
-Compares Tol-FL against FL, SBT, centralised Batch, and the clustered
-baselines (FedGroup / IFCA / FeSEM) on Comms-ML under three conditions:
-no failure, client failure, and server / cluster-head failure.
+Instead of hand-listing one scenario per column, this example *samples*
+grids of multi-event failure-and-recovery traces at increasing
+per-device failure rates (:func:`repro.core.failure.sample_traces`) and
+sweeps every scheme over them — paper Section IV-B's expected
+performance E[AUROC](p), with the canonical no/client/server-failure
+conditions (Tables III/IV/V in miniature) kept as the p-column anchors.
 
-The single-model schemes drive the batched campaign engine
-(:mod:`repro.core.campaign`): per scheme, ONE jitted/vmapped call runs
-the whole (3 scenarios x seeds) grid — the previous version of this
-example compiled and ran every (scheme, scenario, seed) cell one at a
-time.
+Everything is batched: per single-model scheme, ONE jitted/vmapped call
+runs the whole (canonical + sampled traces) x seeds grid, and the
+multi-model baselines (FedGroup / IFCA / FeSEM) run their grid through
+one call of the vmapped multi-model campaign core — the seed's version
+looped Python over every (scheme, scenario, seed) cell.
 
 Run:  PYTHONPATH=src python examples/failure_scenarios.py [--rounds 60]
 """
@@ -17,15 +20,27 @@ import argparse
 import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.baselines import MultiModelConfig, run_multimodel
-from repro.core.campaign import run_campaign
-from repro.core.failure import NO_FAILURE, FailureSpec
+from repro.core.baselines import MultiModelConfig
+from repro.core.campaign import (mean_ci95, run_campaign,
+                                 run_multimodel_campaign)
+from repro.core.baselines import as_multimodel_trace
+from repro.core.failure import (NO_FAILURE, FailureSpec, as_trace,
+                                sample_rate_grid)
 from repro.core.simulate import SimConfig
 from repro.data import commsml, federated
 
 SINGLE = [("Tol-FL", "tolfl", 5), ("FL", "fl", 1), ("SBT", "sbt", 10),
           ("Batch", "batch", 1)]
 MULTI = ["fedgroup", "ifca", "fesem"]
+P_GRID = (0.05, 0.2, 0.4)
+
+
+COL = 21
+
+
+def fmt(vals):
+    mean, std, _ = mean_ci95(np.asarray(vals))
+    return f"{f'{mean:.3f} +- {std:.3f}':<{COL}}"
 
 
 def main():
@@ -34,6 +49,7 @@ def main():
     ap.add_argument("--devices", type=int, default=10)
     ap.add_argument("--samples", type=int, default=400)
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--traces-per-p", type=int, default=4)
     args = ap.parse_args()
 
     X, y = commsml.generate(seed=0, samples_per_class=args.samples)
@@ -42,53 +58,76 @@ def main():
     dx, counts = federated.pad_devices(split)
     ae = AutoencoderConfig()
 
-    scenarios = [
+    canonical = [
         ("no failure", NO_FAILURE),
         ("client fail", FailureSpec(epoch=args.rounds // 4, kind="client")),
         ("server fail", FailureSpec(epoch=args.rounds // 4, kind="server")),
     ]
-
-    header = f"{'scheme':<12}" + "".join(f"{s:<22}" for s, _ in scenarios)
+    p_labels = [f"E[AUROC] p={p:.2f}" for p in P_GRID]
+    header = (f"{'scheme':<12}"
+              + "".join(f"{s:<{COL}}" for s, _ in canonical)
+              + "".join(f"{s:<{COL}}" for s in p_labels))
     print(header)
     print("-" * len(header))
 
     for label, scheme, k in SINGLE:
         cfg = SimConfig(scheme=scheme, num_devices=args.devices,
                         num_clusters=k, rounds=args.rounds, lr=1e-3)
-        # batch centralises everything: a client failure removes
-        # nothing, and its column prints n/a — don't train that cell
-        cols = [(i, s, f) for i, (s, f) in enumerate(scenarios)
+        # per scheme: canonical traces + sampled grids per failure rate
+        # (deduplicated — identical draws, including all-none draws
+        # aliasing the canonical no-failure trace, train once), all in
+        # one batched campaign.  batch centralises everything: a client
+        # failure removes nothing, so its column prints n/a.
+        topo = cfg.topology()
+        head = [as_trace(f, topo, 2 * topo.num_devices)
+                for _, f in canonical
                 if not (scheme == "batch" and f.kind == "client")]
+        traces, draws = sample_rate_grid(
+            np.random.default_rng(0), topo, P_GRID, args.rounds,
+            args.traces_per_p, base_traces=head)
         res = run_campaign(ae, dx, counts, split.test_x, split.test_y,
-                           cfg, [f for _, _, f in cols],
-                           seeds=range(args.seeds))
-        cells = {i: res.select(j) for j, (i, _, _) in enumerate(cols)}
-        row = f"{label:<12}"
-        for i, (sname, fail) in enumerate(scenarios):
-            if i not in cells:
-                row += f"{'n/a (no clients)':<22}"
+                           cfg, traces, seeds=range(args.seeds))
+        row, j = f"{label:<12}", 0
+        for sname, fail in canonical:
+            if scheme == "batch" and fail.kind == "client":
+                row += f"{'n/a (no clients)':<{COL}}"
                 continue
-            vals = cells[i]
-            row += f"{vals.mean():.3f} +- {vals.std():.3f}       "
+            row += fmt(res.select(j))
+            j += 1
+        for p in P_GRID:
+            vals = np.concatenate([res.select(i) for i in draws[p]])
+            row += fmt(vals)
         print(row)
 
     for scheme in MULTI:
+        mcfg = MultiModelConfig(scheme=scheme, num_devices=args.devices,
+                                num_models=3, rounds=args.rounds, lr=1e-3)
+        # multi-model engines have no cluster heads: sample against the
+        # FL topology (device 0 = the aggregator -> server events) and
+        # normalise the canonical specs with the baseline default targets
+        topo = SimConfig(scheme="fl", num_devices=args.devices).topology()
+        head = [as_multimodel_trace(f, args.devices, 2 * args.devices)
+                for _, f in canonical]
+        traces, draws = sample_rate_grid(
+            np.random.default_rng(0), topo, P_GRID, args.rounds,
+            args.traces_per_p, base_traces=head)
+        res = run_multimodel_campaign(ae, dx, counts, split.test_x,
+                                      split.test_y, mcfg, traces,
+                                      seeds=range(args.seeds))
         row = f"{scheme + '*':<12}"
-        for sname, fail in scenarios:
-            vals = []
-            for seed in range(args.seeds):
-                cfg = MultiModelConfig(scheme=scheme,
-                                       num_devices=args.devices,
-                                       num_models=3, rounds=args.rounds,
-                                       lr=1e-3, seed=seed)
-                r = run_multimodel(ae, dx, counts, split.test_x,
-                                   split.test_y, cfg, fail)
-                vals.append(r.best_auroc)
-            row += f"{np.mean(vals):.3f} +- {np.std(vals):.3f}       "
+        for j, _ in enumerate(canonical):
+            row += fmt(res.select(j, "best"))
+        for p in P_GRID:
+            vals = np.concatenate([res.select(i, "best")
+                                   for i in draws[p]])
+            row += fmt(vals)
         print(row)
 
     print("\n* = best single instance of a multi-model scheme (paper's "
           "starred columns)")
+    print("E[AUROC] p=x columns: mean over sampled multi-event failure-"
+          "and-recovery traces\nwhere every device independently fails "
+          "with probability x (section IV-B).")
     print("Expected ordering (paper Table V): under server failure Tol-FL "
           "stays collaborative\nwhile FL collapses to isolated devices.")
 

@@ -15,6 +15,16 @@ All train M model instances.  Reporting matches the paper's columns:
 per-sample min reconstruction error over instances (the multi-model
 oracle score).
 
+Like :mod:`repro.core.simulate`, the whole engine is a pure *core*
+function whose only dynamic inputs are ``(dx, counts, valid, tx, trace,
+seed)`` — everything else (scheme, M, rounds, ...) is closed over
+statically.  The trace split into client events (device mask) and
+server events (group mask) happens in-graph, so the core ``vmap``s over
+stacked traces: :func:`repro.core.campaign.run_multimodel_campaign`
+sweeps a whole (trace x seed) grid through ONE compiled executable,
+while :func:`run_multimodel` stays the single-scenario entry point on
+the same cached jitted core.
+
 Failure semantics: a *client* failure removes that device; a *server*
 failure kills the aggregator of group 0 — that instance freezes and its
 devices stop contributing (they keep their last model for evaluation).
@@ -27,8 +37,10 @@ Pass an explicit ``device`` when comparing the two encodings.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from dataclasses import dataclass
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +48,8 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.failure import (Failure, FailureTrace, KIND_CODES,
-                                NO_FAILURE, PAD_EPOCH, trace_alive_mask)
-from repro.core.simulate import SimConfig
+                                MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
+                                trace_alive_mask)
 from repro.models import autoencoder as AE
 from repro.training.metrics import auroc
 
@@ -61,6 +73,13 @@ class MultiModelResult:
     assignments: np.ndarray       # final device -> model map
 
 
+class MultiOutputs(NamedTuple):
+    """Raw in-graph outputs of one multi-model scenario (pre-AUROC)."""
+    losses: jax.Array             # (rounds,) per-sample-min test loss
+    final_scores: jax.Array       # (M, T) per-instance anomaly scores
+    assignments: jax.Array        # (N,) final device -> model map
+
+
 def _grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
     def local_loss(params, x, valid, key):
         x_hat = AE.forward(params, ae_cfg, x,
@@ -74,162 +93,233 @@ def _flat(tree):
     return jnp.concatenate([t.ravel() for t in jax.tree.leaves(tree)])
 
 
-def _kmeans_groups(vectors: np.ndarray, m: int, seed: int,
-                   iters: int = 20) -> np.ndarray:
-    """Tiny k-means for FedGroup's static gradient-similarity grouping."""
-    rng = np.random.default_rng(seed)
-    v = vectors / (np.linalg.norm(vectors, axis=1, keepdims=True) + 1e-9)
-    centers = v[rng.choice(len(v), m, replace=False)]
-    for _ in range(iters):
-        sim = v @ centers.T
-        assign = sim.argmax(1)
-        for j in range(m):
-            sel = v[assign == j]
-            if len(sel):
-                c = sel.mean(0)
-                centers[j] = c / (np.linalg.norm(c) + 1e-9)
-    return assign
+def _kmeans_groups(vectors: jax.Array, m: int, key: jax.Array,
+                   iters: int = 20) -> jax.Array:
+    """Tiny in-graph k-means for FedGroup's static gradient-similarity
+    grouping (cosine metric: rows are L2-normalised).
+
+    Traceable/vmappable: centers seed from a random permutation of the
+    data, and a group that empties during Lloyd iterations is RE-SEEDED
+    on a random data point instead of keeping a stale center.
+    """
+    n = vectors.shape[0]
+    if m > n:
+        raise ValueError(
+            f"FedGroup k-means needs num_models <= num_devices to seed "
+            f"distinct centers; got num_models={m} > num_devices={n}")
+    v = vectors / (jnp.linalg.norm(vectors, axis=1, keepdims=True) + 1e-9)
+    init_key, reseed_key = jax.random.split(key)
+    centers = v[jax.random.permutation(init_key, n)[:m]]
+
+    def step(centers, i):
+        assign = jnp.argmax(v @ centers.T, axis=1)
+        onehot = jax.nn.one_hot(assign, m, dtype=v.dtype)      # (n, m)
+        cnt = jnp.sum(onehot, axis=0)                          # (m,)
+        means = onehot.T @ v / jnp.maximum(cnt[:, None], 1.0)
+        means = means / (jnp.linalg.norm(means, axis=1,
+                                         keepdims=True) + 1e-9)
+        reseed = v[jax.random.randint(jax.random.fold_in(reseed_key, i),
+                                      (m,), 0, n)]
+        return jnp.where((cnt > 0)[:, None], means, reseed), None
+
+    centers, _ = jax.lax.scan(step, centers, jnp.arange(iters))
+    return jnp.argmax(v @ centers.T, axis=1)
+
+
+def as_multimodel_trace(failure: Failure, num_devices: int,
+                        max_events: int = MAX_EVENTS) -> FailureTrace:
+    """Normalise a failure to a trace with the BASELINE default targets.
+
+    A legacy single-event ``FailureSpec`` with ``device=None`` resolves
+    to device N-1 for client failures (there are no cluster heads here)
+    and to an arbitrary device for server failures (server events kill
+    group 0 whatever device they name).
+    """
+    if isinstance(failure, FailureTrace):
+        return failure
+    if failure.kind == "none":
+        return FailureTrace.none(max_events)
+    device = failure.device
+    if device is None:
+        device = num_devices - 1 if failure.kind == "client" else 0
+    ep = np.full((max_events,), PAD_EPOCH, np.int32)
+    dev = np.full((max_events,), -1, np.int32)
+    alv = np.ones((max_events,), np.float32)
+    knd = np.zeros((max_events,), np.int32)
+    ep[0], dev[0], alv[0] = failure.epoch, device, 0.0
+    knd[0] = KIND_CODES[failure.kind]
+    return FailureTrace(jnp.asarray(ep), jnp.asarray(dev),
+                        jnp.asarray(alv), jnp.asarray(knd))
+
+
+def _split_trace(trace: FailureTrace) -> Tuple[FailureTrace, FailureTrace]:
+    """In-graph split of one trace into (client events -> device mask,
+    server events -> group-0 mask).  Pure ``jnp.where`` on the kind
+    codes, so it survives ``vmap`` over stacked traces; the slots of the
+    other kind keep ``PAD_EPOCH`` and never fire."""
+    is_client = trace.kinds == KIND_CODES["client"]
+    is_server = trace.kinds == KIND_CODES["server"]
+    client_tr = FailureTrace(
+        epochs=jnp.where(is_client, trace.epochs, PAD_EPOCH),
+        devices=trace.devices,
+        alive_after=trace.alive_after,
+        kinds=trace.kinds)
+    # server events all target group 0, whatever device they named
+    server_tr = FailureTrace(
+        epochs=jnp.where(is_server, trace.epochs, PAD_EPOCH),
+        devices=jnp.zeros_like(trace.devices),
+        alive_after=trace.alive_after,
+        kinds=trace.kinds)
+    return client_tr, server_tr
+
+
+def prepare_multimodel_arrays(device_x: np.ndarray,
+                              device_counts: np.ndarray):
+    dx = jnp.asarray(device_x)
+    counts = jnp.asarray(device_counts, jnp.float32)
+    valid = (jnp.arange(device_x.shape[1])[None, :]
+             < counts[:, None]).astype(jnp.float32)
+    return dx, counts, valid
+
+
+def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
+    """Pure scenario function: (dx, counts, valid, tx, trace, seed)
+    -> :class:`MultiOutputs`, mirroring ``simulate._build_core``.
+
+    PRNG discipline: the root key splits into disjoint streams for model
+    inits, FedGroup's grouping probe (probe init / probe grads / k-means
+    seeding), and the training scan — grouping and training randomness
+    are uncorrelated.
+    """
+    N, M = cfg.num_devices, cfg.num_models
+    local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
+
+    def core(dx, counts, valid, tx, trace: FailureTrace, seed):
+        key = jax.random.PRNGKey(seed)
+        k_init, k_group, k_train = jax.random.split(key, 3)
+        # M model instances with different inits
+        models = []
+        for j in range(M):
+            p, _ = AE.init_params(jax.random.fold_in(k_init, j), ae_cfg)
+            models.append(p)
+        models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+
+        client_tr, server_tr = _split_trace(trace)
+
+        # ---- initial assignment ----
+        if cfg.scheme == "fedgroup":
+            k_probe, k_pgrad, k_km = jax.random.split(k_group, 3)
+            p0, _ = AE.init_params(k_probe, ae_cfg)
+            g0 = jax.vmap(lambda x, v, k_: _flat(grad_fn(p0, x, v, k_)),
+                          in_axes=(0, 0, 0))(
+                dx, valid, jax.random.split(k_pgrad, N))
+            assign0 = _kmeans_groups(g0, M, k_km)
+        else:
+            assign0 = jnp.arange(N) % M
+
+        def device_losses(models_, x, v, k_):
+            """(M,) local loss of each model instance on one device."""
+            return jax.vmap(lambda p: local_loss(p, x, v, k_))(models_)
+
+        def round_fn(carry, epoch):
+            models_, assign, rkey = carry
+            rkey, dkey = jax.random.split(rkey)
+            dkeys = jax.random.split(dkey, N)
+            a_dev = trace_alive_mask(client_tr, N, epoch)
+            a_grp = trace_alive_mask(server_tr, M, epoch)
+
+            # ---- (re)assignment ----
+            if cfg.scheme == "ifca":
+                losses = jax.vmap(device_losses, in_axes=(None, 0, 0, 0))(
+                    models_, dx, valid, dkeys)          # (N, M)
+                assign = jnp.argmin(losses, axis=1)
+            elif cfg.scheme == "fesem":
+                # e-step: distance between one-step-updated local params
+                # and each center, in parameter space
+                def dev_assign(x, v, k_, a):
+                    p_cur = jax.tree.map(lambda t: t[a], models_)
+                    g = grad_fn(p_cur, x, v, k_)
+                    upd = jax.tree.map(lambda p_, g_: p_ - cfg.lr * g_,
+                                       p_cur, g)
+                    fu = _flat(upd)
+                    d = jax.vmap(lambda j: jnp.sum(jnp.square(
+                        fu - _flat(jax.tree.map(lambda t: t[j],
+                                                models_)))))(jnp.arange(M))
+                    return jnp.argmin(d)
+                assign = jax.vmap(dev_assign)(dx, valid, dkeys, assign)
+            # fedgroup: static
+
+            # ---- local grads on the assigned model ----
+            def dev_grad(x, v, k_, a):
+                p_cur = jax.tree.map(lambda t: t[a], models_)
+                return grad_fn(p_cur, x, v, k_)
+            gs = jax.vmap(dev_grad)(dx, valid, dkeys, assign)
+
+            # ---- per-model weighted aggregation ----
+            onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)  # (N, M)
+            w = counts * a_dev
+            denom = onehot.T @ w                                   # (M,)
+
+            def agg_leaf(gleaf):
+                flatg = gleaf.reshape(N, -1)
+                num = onehot.T @ (flatg * w[:, None])
+                mean = num / jnp.maximum(denom[:, None], 1e-30)
+                return mean.reshape((M,) + gleaf.shape[1:])
+            g_m = jax.tree.map(agg_leaf, gs)
+            upd_gate = ((denom > 0).astype(jnp.float32) * a_grp)
+            models_ = jax.tree.map(
+                lambda p_, g_: p_ - cfg.lr * upd_gate.reshape(
+                    (-1,) + (1,) * (g_.ndim - 1)) * g_,
+                models_, g_m)
+
+            scores = jax.vmap(
+                lambda p: AE.anomaly_scores(p, ae_cfg, tx))(models_)
+            tl = jnp.mean(jnp.min(scores, axis=0))
+            return (models_, assign, rkey), tl
+
+        (models, assign, _), losses = jax.lax.scan(
+            round_fn, (models, assign0, k_train), jnp.arange(cfg.rounds))
+        final_scores = jax.vmap(
+            lambda p: AE.anomaly_scores(p, ae_cfg, tx))(models)
+        return MultiOutputs(losses, final_scores, assign)
+
+    return core
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_multimodel_core_cached(ae_cfg: AutoencoderConfig,
+                                   cfg: MultiModelConfig):
+    return jax.jit(_build_multimodel_core(ae_cfg, cfg))
+
+
+def _jitted_multimodel_core(ae_cfg: AutoencoderConfig,
+                            cfg: MultiModelConfig):
+    """Compiled single-scenario core, cached on static config (the seed
+    field of ``cfg`` is ignored — seed is a dynamic argument)."""
+    return _jitted_multimodel_core_cached(
+        ae_cfg, dataclasses.replace(cfg, seed=0))
 
 
 def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                    device_counts: np.ndarray, test_x: np.ndarray,
                    test_y: np.ndarray, cfg: MultiModelConfig,
                    failure: Failure = NO_FAILURE) -> MultiModelResult:
-    N, M = cfg.num_devices, cfg.num_models
-    key = jax.random.PRNGKey(cfg.seed)
-    local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
-    # M model instances with different inits
-    models = []
-    for j in range(M):
-        p, _ = AE.init_params(jax.random.fold_in(key, j), ae_cfg)
-        models.append(p)
-    models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+    """Single-scenario entry point on the shared cached jitted core.
 
-    dx = jnp.asarray(device_x)
-    counts = jnp.asarray(device_counts, jnp.float32)
-    valid = (jnp.arange(device_x.shape[1])[None, :]
-             < counts[:, None]).astype(jnp.float32)
+    A repeated call with a new failure/seed reuses the compiled
+    executable; :func:`repro.core.campaign.run_multimodel_campaign`
+    batches whole (trace x seed) grids through the same core.
+    """
+    trace = as_multimodel_trace(failure, cfg.num_devices)
+    dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
     tx = jnp.asarray(test_x)
+    core = _jitted_multimodel_core(ae_cfg, cfg)
+    out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
 
-    # ---- initial assignment ----
-    if cfg.scheme == "fedgroup":
-        p0, _ = AE.init_params(key, ae_cfg)
-        g0 = jax.vmap(lambda x, v, k_: _flat(grad_fn(p0, x, v, k_)),
-                      in_axes=(0, 0, 0))(dx, valid,
-                                         jax.random.split(key, N))
-        assign0 = jnp.asarray(_kmeans_groups(np.asarray(g0), M, cfg.seed))
-    else:
-        assign0 = jnp.arange(N) % M
-
-    # Failure semantics: "client" events remove that device; "server"
-    # events kill the aggregator of group 0 (no head devices exist
-    # here).  A FailureTrace carries per-event kinds, so client events
-    # drive the device mask and server events drive the group-0 mask —
-    # multiple events and recoveries compose like in the Tol-FL engine.
-    if isinstance(failure, FailureTrace):
-        knd = np.asarray(failure.kinds)
-        client_tr = FailureTrace(
-            epochs=jnp.where(knd == KIND_CODES["client"],
-                             failure.epochs, PAD_EPOCH),
-            devices=failure.devices,
-            alive_after=failure.alive_after,
-            kinds=failure.kinds)
-        # server events all target group 0, whatever device they named
-        server_tr = FailureTrace(
-            epochs=jnp.where(knd == KIND_CODES["server"],
-                             failure.epochs, PAD_EPOCH),
-            devices=jnp.zeros_like(failure.devices),
-            alive_after=failure.alive_after,
-            kinds=failure.kinds)
-
-        def dev_alive(epoch):
-            return trace_alive_mask(client_tr, N, epoch)
-
-        def group_alive(epoch):
-            return trace_alive_mask(server_tr, M, epoch)
-    else:
-        # legacy single-event spec: the default client target is the
-        # last device (no topology heads here)
-        tgt_device = (failure.device if failure.device is not None
-                      else N - 1)
-
-        def dev_alive(epoch):
-            if failure.kind != "client":
-                return jnp.ones((N,), jnp.float32)
-            dead = ((jnp.arange(N) == tgt_device)
-                    & (epoch >= failure.epoch))
-            return (~dead).astype(jnp.float32)
-
-        def group_alive(epoch):
-            if failure.kind != "server":
-                return jnp.ones((M,), jnp.float32)
-            dead = (jnp.arange(M) == 0) & (epoch >= failure.epoch)
-            return (~dead).astype(jnp.float32)
-
-    def device_losses(models_, x, v, k_):
-        """(M,) local loss of each model instance on one device's data."""
-        return jax.vmap(lambda p: local_loss(p, x, v, k_))(models_)
-
-    def round_fn(carry, epoch):
-        models_, assign, rkey = carry
-        rkey, dkey = jax.random.split(rkey)
-        dkeys = jax.random.split(dkey, N)
-        a_dev = dev_alive(epoch)
-        a_grp = group_alive(epoch)
-
-        # ---- (re)assignment ----
-        if cfg.scheme == "ifca":
-            losses = jax.vmap(device_losses, in_axes=(None, 0, 0, 0))(
-                models_, dx, valid, dkeys)          # (N, M)
-            assign = jnp.argmin(losses, axis=1)
-        elif cfg.scheme == "fesem":
-            # e-step: distance between one-step-updated local params and
-            # each center, in parameter space
-            def dev_assign(x, v, k_, a):
-                p_cur = jax.tree.map(lambda t: t[a], models_)
-                g = grad_fn(p_cur, x, v, k_)
-                upd = jax.tree.map(lambda p_, g_: p_ - cfg.lr * g_, p_cur, g)
-                fu = _flat(upd)
-                d = jax.vmap(lambda j: jnp.sum(jnp.square(
-                    fu - _flat(jax.tree.map(lambda t: t[j], models_)))))(
-                        jnp.arange(M))
-                return jnp.argmin(d)
-            assign = jax.vmap(dev_assign)(dx, valid, dkeys, assign)
-        # fedgroup: static
-
-        # ---- local grads on the assigned model ----
-        def dev_grad(x, v, k_, a):
-            p_cur = jax.tree.map(lambda t: t[a], models_)
-            return grad_fn(p_cur, x, v, k_)
-        gs = jax.vmap(dev_grad)(dx, valid, dkeys, assign)
-
-        # ---- per-model weighted aggregation ----
-        onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)  # (N, M)
-        w = counts * a_dev
-        denom = onehot.T @ w                                   # (M,)
-
-        def agg_leaf(gleaf):
-            flatg = gleaf.reshape(N, -1)
-            num = onehot.T @ (flatg * w[:, None])
-            mean = num / jnp.maximum(denom[:, None], 1e-30)
-            return mean.reshape((M,) + gleaf.shape[1:])
-        g_m = jax.tree.map(agg_leaf, gs)
-        upd_gate = ((denom > 0).astype(jnp.float32) * a_grp)
-        models_ = jax.tree.map(
-            lambda p_, g_: p_ - cfg.lr * upd_gate.reshape(
-                (-1,) + (1,) * (g_.ndim - 1)) * g_,
-            models_, g_m)
-
-        scores = jax.vmap(lambda p: AE.anomaly_scores(p, ae_cfg, tx))(
-            models_)                                           # (M, T)
-        tl = jnp.mean(jnp.min(scores, axis=0))
-        return (models_, assign, rkey), (tl, scores)
-
-    (models, assign, _), (losses, scores_hist) = jax.lax.scan(
-        round_fn, (models, assign0, key), jnp.arange(cfg.rounds))
-
-    final_scores = np.asarray(scores_hist[-1])                 # (M, T)
-    per_model = [auroc(final_scores[j], test_y) for j in range(M)]
+    final_scores = np.asarray(out.final_scores)                # (M, T)
+    per_model = [auroc(final_scores[j], test_y)
+                 for j in range(cfg.num_models)]
     multi = auroc(final_scores.min(axis=0), test_y)
     return MultiModelResult(float(np.max(per_model)), float(multi),
-                            np.asarray(losses), np.asarray(assign))
+                            np.asarray(out.losses),
+                            np.asarray(out.assignments))

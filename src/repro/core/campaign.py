@@ -19,6 +19,11 @@ Typical use::
                        traces, seeds=range(8))
     res.summary()["auroc_used_mean"]
 
+The multi-model baselines (FedGroup / IFCA / FeSEM) get the same
+treatment: :func:`run_multimodel_campaign` vmaps the pure core from
+:mod:`repro.core.baselines` over a stacked (trace x seed) grid, so the
+paper's Table III-V comparison columns also cost one compile per cell.
+
 Different schemes / k imply different topologies (different array
 shapes), so a (scheme x k) grid is a Python loop of batched calls —
 :func:`sweep_grid` — with one compile per cell, not per scenario.
@@ -34,6 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core.baselines import (MultiModelConfig, _build_multimodel_core,
+                                  as_multimodel_trace,
+                                  prepare_multimodel_arrays)
 from repro.core.failure import Failure, as_trace, stack_traces
 from repro.core.simulate import (SimConfig, _build_core, _prepare_arrays,
                                  iso_mean_auroc)
@@ -42,6 +50,24 @@ from repro.training.metrics import auroc
 #: incremented each time a batched campaign core is (re)traced — lets
 #: tests assert that a whole campaign costs exactly one compile.
 TRACE_COUNT = 0
+
+#: schemes dispatched to the multi-model engine by :func:`sweep_grid`
+MULTI_SCHEMES = ("fedgroup", "ifca", "fesem")
+
+
+def mean_ci95(vals: np.ndarray) -> Tuple[float, float, float]:
+    """(mean, sample std, normal-approx 95% CI half-width) over seeds.
+
+    Uses the SAMPLE standard deviation (ddof=1): campaigns estimate the
+    spread of a seed population from few draws, and the ddof=0
+    population formula reports over-tight intervals for small B.  A
+    single scenario has no spread estimate: std 0, CI half-width nan."""
+    b = len(vals)
+    mean = float(np.mean(vals))
+    if b <= 1:
+        return mean, 0.0, float("nan")
+    std = float(np.std(vals, ddof=1))
+    return mean, std, 1.96 * std / np.sqrt(b)
 
 
 @dataclass
@@ -57,7 +83,9 @@ class CampaignResult:
     final_auroc: np.ndarray        # (B,) global-model AUROC
     iso_auroc: np.ndarray          # (B,) isolated-mean AUROC (nan if n/a)
     iso_active: np.ndarray         # (B,) bool — FL fallback engaged
-    loss_curves: np.ndarray        # (B, rounds)
+    loss_curves: np.ndarray        # (B, rounds) REPORTED loss: global,
+    #                                but FL server-dead rounds carry the
+    #                                isolated mean (Fig 4 semantics)
     iso_loss_curves: np.ndarray    # (B, rounds)
     rounds_to_loss: np.ndarray     # (B,) float, nan when never reached
 
@@ -70,16 +98,13 @@ class CampaignResult:
         return self.auroc_used[self.trace_index == trace_index]
 
     def summary(self) -> Dict[str, float]:
-        """Mean / std / normal-approx 95% CI of the reported AUROC plus
-        mean rounds-to-loss (over scenarios that reached the target)."""
-        a = self.auroc_used
-        b = len(a)
-        mean = float(np.mean(a))
-        std = float(np.std(a))
-        half = 1.96 * std / np.sqrt(b) if b > 1 else float("nan")
+        """Mean / sample std / normal-approx 95% CI of the reported
+        AUROC plus mean rounds-to-loss (over scenarios that reached the
+        target)."""
+        mean, std, half = mean_ci95(self.auroc_used)
         r2l = self.rounds_to_loss[np.isfinite(self.rounds_to_loss)]
         return {
-            "num_scenarios": float(b),
+            "num_scenarios": float(self.num_scenarios),
             "auroc_used_mean": mean,
             "auroc_used_std": std,
             "auroc_used_ci95_lo": mean - half,
@@ -87,6 +112,41 @@ class CampaignResult:
             "rounds_to_loss_mean": (float(np.mean(r2l)) if len(r2l)
                                     else float("nan")),
         }
+
+
+@dataclass
+class MultiCampaignResult:
+    """Stacked per-scenario results of one batched multi-model campaign.
+
+    Scenario b is (trace ``trace_index[b]``, seed ``seed[b]``)."""
+    cfg: MultiModelConfig
+    trace_index: np.ndarray        # (B,) int — index into the trace list
+    seed: np.ndarray               # (B,) int
+    best_auroc: np.ndarray         # (B,) the paper's * column
+    multi_auroc: np.ndarray        # (B,) the paper's dagger column
+    loss_curves: np.ndarray        # (B, rounds) per-sample-min test loss
+    assignments: np.ndarray        # (B, N) final device -> model maps
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.best_auroc)
+
+    def select(self, trace_index: int, column: str = "best") -> np.ndarray:
+        """best/multi AUROC of every scenario using ``trace_index``."""
+        vals = {"best": self.best_auroc, "multi": self.multi_auroc}[column]
+        return vals[self.trace_index == trace_index]
+
+    def summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"num_scenarios": float(self.num_scenarios)}
+        for column in ("best", "multi"):
+            vals = {"best": self.best_auroc,
+                    "multi": self.multi_auroc}[column]
+            mean, std, half = mean_ci95(vals)
+            out[f"{column}_auroc_mean"] = mean
+            out[f"{column}_auroc_std"] = std
+            out[f"{column}_auroc_ci95_lo"] = mean - half
+            out[f"{column}_auroc_ci95_hi"] = mean + half
+        return out
 
 
 def _scenario_grid(num_traces: int, seeds: Sequence[int]
@@ -145,6 +205,7 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
     finals = np.asarray(out.final_scores)              # (B, T)
     iso_scores = np.asarray(out.iso_final_scores)      # (B, N, T')
     final_alive = np.asarray(out.final_alive)          # (B, N)
+    dead_rounds = np.asarray(out.server_dead_rounds) > 0   # (B, R)
     server_dead = np.asarray(out.server_dead) > 0      # (B,)
     B = losses.shape[0]
 
@@ -153,6 +214,9 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
     iso_auroc = np.full(B, np.nan)
     iso_active = np.zeros(B, bool)
     if track_iso:
+        # Fig 4 semantics (matching run_simulation): server-dead rounds
+        # report the isolated-mean loss, not the frozen global model's
+        losses = np.where(dead_rounds, iso_losses, losses)
         for b in range(B):
             if server_dead[b]:
                 iso_active[b] = True
@@ -174,6 +238,56 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
                           rounds_to_loss=r2l)
 
 
+def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
+                            device_x: np.ndarray,
+                            device_counts: np.ndarray, test_x: np.ndarray,
+                            test_y: np.ndarray, cfg: MultiModelConfig,
+                            traces: Sequence[Failure],
+                            seeds: Sequence[int]) -> MultiCampaignResult:
+    """Every (trace x seed) scenario of a multi-model baseline in one
+    jitted, vmapped call — the multi-model twin of :func:`run_campaign`.
+
+    ``traces`` may mix legacy :class:`FailureSpec`s and
+    :class:`FailureTrace`s; specs are normalised with the BASELINE
+    default targets (see :func:`as_multimodel_trace`).  The client/group
+    trace split happens in-graph inside the core, so one compiled
+    executable covers the whole grid.  ``cfg.seed`` is ignored — seeds
+    come from the grid."""
+    norm = [as_multimodel_trace(t, cfg.num_devices) for t in traces]
+    trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
+    if len(trace_idx) == 0:
+        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
+    stacked = stack_traces(norm)
+    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+
+    dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
+    tx = jnp.asarray(test_x)
+    assert dx.shape[0] == cfg.num_devices, (dx.shape, cfg.num_devices)
+    core = _build_multimodel_core(ae_cfg,
+                                  dataclasses.replace(cfg, seed=0))
+
+    def scenario(trace, seed):
+        global TRACE_COUNT
+        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
+        return core(dx, counts, valid, tx, trace, seed)
+
+    batched = jax.jit(jax.vmap(scenario, in_axes=(0, 0)))
+    out = batched(batch_traces, jnp.asarray(seed_arr))
+
+    finals = np.asarray(out.final_scores)              # (B, M, T)
+    B = finals.shape[0]
+    best = np.array([max(auroc(finals[b, j], test_y)
+                         for j in range(cfg.num_models))
+                     for b in range(B)])
+    multi = np.array([auroc(finals[b].min(axis=0), test_y)
+                      for b in range(B)])
+    return MultiCampaignResult(cfg=cfg, trace_index=trace_idx,
+                               seed=seed_arr, best_auroc=best,
+                               multi_auroc=multi,
+                               loss_curves=np.asarray(out.losses),
+                               assignments=np.asarray(out.assignments))
+
+
 def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                device_counts: np.ndarray, test_x: np.ndarray,
                test_y: np.ndarray, base: SimConfig,
@@ -183,12 +297,31 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                ) -> Dict[Tuple[str, int], CampaignResult]:
     """(scheme x k) grid of batched campaigns — one compile per cell.
 
-    Returns {(scheme, k): CampaignResult}; every cell covers the full
+    Single-model schemes (batch/fl/sbt/tolfl) interpret k as the cluster
+    count; multi-model baselines (:data:`MULTI_SCHEMES`) interpret k as
+    the model count M and run through
+    :func:`run_multimodel_campaign` (their cells return
+    :class:`MultiCampaignResult`, and legacy specs in ``traces`` resolve
+    to the baseline default targets).  Every cell covers the full
     (trace x seed) scenario batch."""
     out: Dict[Tuple[str, int], CampaignResult] = {}
     for scheme, k in scheme_ks:
-        cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
-        out[(scheme, k)] = run_campaign(ae_cfg, device_x, device_counts,
-                                        test_x, test_y, cfg, traces,
-                                        seeds, target_loss)
+        if scheme in MULTI_SCHEMES:
+            # multi-model engines take ONE local step per round: give
+            # them the single-model cells' TOTAL local-step budget
+            # (rounds x E) so grid columns compare equal work
+            mcfg = MultiModelConfig(scheme=scheme,
+                                    num_devices=base.num_devices,
+                                    num_models=k,
+                                    rounds=base.rounds * base.local_epochs,
+                                    lr=base.lr, dropout=base.dropout)
+            out[(scheme, k)] = run_multimodel_campaign(
+                ae_cfg, device_x, device_counts, test_x, test_y, mcfg,
+                traces, seeds)
+        else:
+            cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
+            out[(scheme, k)] = run_campaign(ae_cfg, device_x,
+                                            device_counts, test_x, test_y,
+                                            cfg, traces, seeds,
+                                            target_loss)
     return out

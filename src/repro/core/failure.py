@@ -154,6 +154,105 @@ def stack_traces(traces: Sequence[FailureTrace]) -> FailureTrace:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
+def sample_traces(rng: np.random.Generator, topo: Topology,
+                  failure_rate: float, max_events: int = MAX_EVENTS,
+                  rounds: int = 100, num_traces: int = 1,
+                  recover_prob: float = 0.5) -> list:
+    """Random multi-event failure-and-recovery traces (Section IV-B).
+
+    Monte-Carlo scenario generator for expected-performance sweeps:
+    instead of hand-listing events, each of ``num_traces`` traces draws
+    a scenario where every device independently fails with probability
+    ``failure_rate`` during the run, at a uniform random epoch in
+    ``[0, rounds)``.  A failed device is a *server* event when it is a
+    cluster head of ``topo`` (head death takes its whole cluster, and
+    for k=1 the FL server itself), else a *client* event.  With
+    probability ``recover_prob`` a failed device comes back at a later
+    uniform epoch (churn).  Events beyond ``max_events`` slots are
+    dropped (device order randomised first, so the truncation is not
+    biased toward low device ids); a failure and its recovery are kept
+    or dropped together so no trace ends on a dangling recovery.
+
+    Returns a list of :class:`FailureTrace` (stackable via
+    :func:`stack_traces` for one batched campaign).
+    """
+    assert 0.0 <= failure_rate <= 1.0, failure_rate
+    assert rounds >= 1 and max_events >= 1
+    head_set = set(topo.heads)
+    traces = []
+    for _ in range(num_traces):
+        failed = np.flatnonzero(
+            rng.random(topo.num_devices) < failure_rate)
+        rng.shuffle(failed)
+        events: list = []
+        for d in failed:
+            kind = "server" if int(d) in head_set else "client"
+            epoch = int(rng.integers(rounds))
+            recovers = (rng.random() < recover_prob) and epoch + 1 < rounds
+            need = 2 if recovers else 1
+            if len(events) + need > max_events:
+                continue
+            events.append(FailureEvent(epoch, kind, device=int(d)))
+            if recovers:
+                rec = int(rng.integers(epoch + 1, rounds))
+                events.append(FailureEvent(rec, kind, device=int(d),
+                                           recover=True))
+        traces.append(FailureTrace.from_events(events, topo, max_events))
+    return traces
+
+
+def _trace_key(t: FailureTrace) -> tuple:
+    return tuple(np.asarray(leaf).tobytes()
+                 for leaf in (t.epochs, t.devices, t.alive_after, t.kinds))
+
+
+def sample_rate_grid(rng: np.random.Generator, topo: Topology,
+                     p_grid: Sequence[float], rounds: int,
+                     traces_per_p: int, max_events: Optional[int] = None,
+                     recover_prob: float = 0.5,
+                     base_traces: Sequence[FailureTrace] = ()):
+    """Sampled traces for a failure-rate sweep, DEDUPLICATED.
+
+    Draws ``traces_per_p`` scenarios per rate via :func:`sample_traces`
+    and collapses byte-identical traces (e.g. the many all-none draws at
+    low p) to a single trained scenario.  ``max_events`` defaults to
+    ``2 * topo.num_devices`` — enough slots for every device to fail AND
+    recover, so high-p draws are never silently truncated (the default
+    ``MAX_EVENTS`` drops events for p near 1, biasing E[AUROC]
+    optimistic exactly at the crossover end of the curve).
+
+    ``base_traces`` (already at ``max_events``, e.g. canonical
+    conditions the caller also wants in the batch) are prepended to the
+    pool and join the dedup, so an all-none draw aliases a no-failure
+    base trace instead of retraining it.  Returns ``(traces, draws)``
+    with the base traces first; ``draws[p]`` lists one trace index per
+    original draw — a duplicated draw repeats its index, so per-p means
+    over ``result.select(i) for i in draws[p]`` equal the
+    undeduplicated Monte-Carlo estimate while each distinct trace
+    trains once."""
+    if max_events is None:
+        max_events = 2 * topo.num_devices
+    traces: list = []
+    draws: dict = {}
+    idx_of: dict = {}
+    for t in base_traces:
+        assert t.max_events == max_events, (t.max_events, max_events)
+        idx_of.setdefault(_trace_key(t), len(traces))
+        traces.append(t)
+    for p in p_grid:
+        idxs = []
+        for t in sample_traces(rng, topo, p, max_events=max_events,
+                               rounds=rounds, num_traces=traces_per_p,
+                               recover_prob=recover_prob):
+            key = _trace_key(t)
+            if key not in idx_of:
+                idx_of[key] = len(traces)
+                traces.append(t)
+            idxs.append(idx_of[key])
+        draws[p] = idxs
+    return traces, draws
+
+
 def trace_alive_mask(trace: FailureTrace, num_devices: int, epoch: jax.Array
                      ) -> jax.Array:
     """(num_devices,) float alive mask at ``epoch`` (traced).

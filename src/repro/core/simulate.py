@@ -74,9 +74,11 @@ class SimResult:
     final_auroc: float
     iso_auroc: float               # mean of isolated devices (fl fallback)
     auroc_used: float              # what the paper would report
-    loss_curve: np.ndarray         # (rounds,) global-model test loss
-    auroc_curve: np.ndarray        # (rounds,)
-    iso_loss_curve: np.ndarray     # (rounds,) mean isolated test loss
+    loss_curve: np.ndarray         # (rounds,) REPORTED test loss: global
+    #                                model, except that FL server-dead
+    #                                rounds carry the isolated mean (Fig 4)
+    auroc_curve: np.ndarray        # (rounds,) reported AUROC, same switch
+    iso_loss_curve: np.ndarray     # (rounds,) alive-mean isolated loss
     iso_active: bool
     rounds_to_loss: Optional[int] = None
 
@@ -84,12 +86,14 @@ class SimResult:
 class SimOutputs(NamedTuple):
     """Raw in-graph outputs of one simulated scenario (pre-AUROC)."""
     losses: jax.Array            # (rounds,) global-model test loss
-    iso_losses: jax.Array        # (rounds,) mean isolated test loss
+    iso_losses: jax.Array        # (rounds,) alive-mean isolated test loss
     final_scores: jax.Array      # (T,) anomaly scores of the final model
     iso_final_scores: jax.Array  # (N, T) per-device isolated scores
     final_alive: jax.Array       # (N,) alive mask at the last round
     server_dead: jax.Array       # () 1.0 iff every cluster head is dead
-    score_hist: jax.Array        # (rounds, T) or (0,) if not tracked
+    server_dead_rounds: jax.Array  # (rounds,) 1.0 where all heads dead
+    score_hist: jax.Array        # (rounds, T) or (rounds, 0) if untracked
+    iso_score_hist: jax.Array    # (rounds, N, T) or (rounds, 0, 0)
 
 
 def _device_grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
@@ -165,9 +169,9 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                 lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
 
             # ---- isolated fallback (fl server failure) ----
+            head_dead = 1.0 - jnp.max(alive[heads])      # all heads dead
             if track_iso:
-                head_alive = alive[heads]
-                failed_now = 1.0 - jnp.max(head_alive)   # all heads dead
+                failed_now = head_dead
                 # track the global model until failure, then diverge per
                 # device
                 iso_params = jax.tree.map(
@@ -181,7 +185,12 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                     lambda ip, g_: ip - cfg.lr * iso_step.reshape(
                         (-1,) + (1,) * (g_.ndim - 1)) * g_,
                     iso_params, iso_gs)
-                iso_tl = jnp.mean(jax.vmap(test_loss)(iso_params))
+                # Fig 4 reporting averages the surviving devices only:
+                # weight each device's test loss by its alive mask (the
+                # dead server keeps a frozen model and is excluded)
+                per_dev_tl = jax.vmap(test_loss)(iso_params)
+                iso_tl = (jnp.sum(alive * per_dev_tl)
+                          / jnp.maximum(jnp.sum(alive), 1.0))
             else:
                 iso_tl = jnp.float32(0)
 
@@ -190,14 +199,21 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                 scores = AE.anomaly_scores(new_params, ae_cfg, tx)
             else:
                 scores = jnp.zeros((0,), jnp.float32)
-            return (new_params, iso_params, rkey), (tl, scores, iso_tl)
+            if track_iso and score_history:
+                iso_scores = jax.vmap(
+                    lambda p: AE.anomaly_scores(p, ae_cfg, tx))(iso_params)
+            else:
+                iso_scores = jnp.zeros((0, 0), jnp.float32)
+            return (new_params, iso_params, rkey), (tl, scores, iso_tl,
+                                                    iso_scores, head_dead)
 
         iso0 = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy()
             if cfg.scheme != "batch"
             else jnp.broadcast_to(p, (1,) + p.shape),
             params)
-        (final_params, iso_params, _), (losses, score_hist, iso_losses) = \
+        (final_params, iso_params, _), \
+            (losses, score_hist, iso_losses, iso_score_hist, dead_rounds) = \
             jax.lax.scan(round_fn, (params, iso0, key),
                          jnp.arange(cfg.rounds))
 
@@ -211,7 +227,7 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
             iso_final_scores = jnp.zeros((N, 0), jnp.float32)
         return SimOutputs(losses, iso_losses, final_scores,
                           iso_final_scores, final_alive, server_dead,
-                          score_hist)
+                          dead_rounds, score_hist, iso_score_hist)
 
     return core
 
@@ -274,19 +290,32 @@ def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     core = _jitted_core(ae_cfg, cfg, True)
     out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
 
-    losses = np.asarray(out.losses)
+    losses = np.asarray(out.losses).copy()
     iso_losses = np.asarray(out.iso_losses)
     scores_all = np.asarray(out.score_hist)
     aurocs = np.array([auroc(s, test_y) for s in scores_all])
     final = float(aurocs[-1])
 
     # isolated final AUROC: mean over alive devices of per-device AUROC
-    fl_server_fallback = (cfg.scheme == "fl"
-                          and bool(np.asarray(out.server_dead) > 0))
+    track_iso = (cfg.scheme == "fl")
+    dead_rounds = np.asarray(out.server_dead_rounds) > 0     # (rounds,)
+    fl_server_fallback = track_iso and bool(dead_rounds[-1])
     iso_final = float("nan")
     if fl_server_fallback:
         iso_final = iso_mean_auroc(np.asarray(out.iso_final_scores),
                                    np.asarray(out.final_alive), test_y)
+
+    # Fig 4 semantics: from the round the FL server dies the global
+    # model is frozen and meaningless — the reported curves switch to
+    # the isolated-mean curve for every server-dead round (a later
+    # recovery switches back, matching ``auroc_used``'s round-wise
+    # notion of "what the system can actually serve").
+    if track_iso and dead_rounds.any():
+        iso_hist = np.asarray(out.iso_score_hist)            # (R, N, T)
+        for t in np.flatnonzero(dead_rounds):
+            alive_t = np.asarray(trace_alive_mask(trace, N, jnp.int32(t)))
+            aurocs[t] = iso_mean_auroc(iso_hist[t], alive_t, test_y)
+            losses[t] = iso_losses[t]
 
     used = iso_final if fl_server_fallback else final
     r2l = None

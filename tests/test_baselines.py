@@ -1,8 +1,11 @@
 """Clustered-FL baseline tests (FedGroup / IFCA / FeSEM)."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.baselines import MultiModelConfig, run_multimodel
+from repro.core.baselines import (MultiModelConfig, _kmeans_groups,
+                                  run_multimodel)
 from repro.core.failure import NO_FAILURE, FailureSpec
 
 ROUNDS = 30
@@ -43,3 +46,45 @@ def test_baseline_survives_failures(scheme, tiny_ae_cfg, tiny_padded,
                   FailureSpec(epoch=ROUNDS // 2, kind=kind))
         assert np.isfinite(res.best_auroc)
         assert res.best_auroc > 0.5, (scheme, kind, res.best_auroc)
+
+
+# ---------------------------------------------------------------------------
+# FedGroup k-means edge cases
+# ---------------------------------------------------------------------------
+def test_kmeans_rejects_more_models_than_devices():
+    vecs = jnp.asarray(np.random.default_rng(0).normal(size=(3, 5)),
+                       jnp.float32)
+    with pytest.raises(ValueError, match="num_models"):
+        _kmeans_groups(vecs, 4, jax.random.PRNGKey(0))
+
+
+def test_multimodel_fedgroup_more_models_than_devices_raises(
+        tiny_ae_cfg, tiny_padded, tiny_split):
+    dx, counts = tiny_padded
+    cfg = MultiModelConfig(scheme="fedgroup", num_devices=10,
+                           num_models=11, rounds=1)
+    with pytest.raises(ValueError, match="num_models"):
+        run_multimodel(tiny_ae_cfg, dx, counts, tiny_split.test_x,
+                       tiny_split.test_y, cfg)
+
+
+def test_kmeans_reseeds_empty_centers():
+    """Three duplicate points + one outlier, M=2, with an init key whose
+    permutation seeds BOTH centers on duplicates: the second center wins
+    no points and must be RE-SEEDED onto a data point (the stale-center
+    bug kept it forever, merging the outlier into group 0)."""
+    v = np.zeros((4, 3), np.float32)
+    v[:3, 0] = 1.0                  # three copies of e1
+    v[3, 1] = 1.0                   # one outlier at e2
+    key = None
+    for k in range(50):             # find an all-duplicate init
+        perm = np.asarray(jax.random.permutation(
+            jax.random.split(jax.random.PRNGKey(k))[0], 4))
+        if 3 not in perm[:2]:
+            key = jax.random.PRNGKey(k)
+            break
+    assert key is not None
+    assign = np.asarray(_kmeans_groups(jnp.asarray(v), 2, key))
+    assert len(set(assign[:3].tolist())) == 1     # duplicates together
+    assert assign[3] not in assign[:3]            # outlier got its own
+    #                                               (re-seeded) center

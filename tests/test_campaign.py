@@ -1,9 +1,11 @@
-"""Batched campaign engine == a loop of single ``run_simulation`` calls.
+"""Batched campaign engine == a loop of single-scenario calls.
 
 The acceptance contract (ISSUE 1): a campaign of >= 32 (trace x seed)
 scenarios for scheme="tolfl" runs through ONE jitted/vmapped executable
 (compile-count assertion) and matches the per-scenario simulator to
-<= 1e-5 on ``auroc_used``.
+<= 1e-5 on ``auroc_used``.  ISSUE 2 extends the same contract to the
+multi-model baselines: a (trace x seed) grid per (scheme, M) cell equals
+a Python loop of ``run_multimodel`` calls and costs exactly one compile.
 """
 import dataclasses
 
@@ -12,7 +14,9 @@ import pytest
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import campaign
-from repro.core.campaign import run_campaign, sweep_grid
+from repro.core.baselines import MultiModelConfig, run_multimodel
+from repro.core.campaign import (CampaignResult, mean_ci95, run_campaign,
+                                 run_multimodel_campaign, sweep_grid)
 from repro.core.failure import (NO_FAILURE, FailureEvent, FailureSpec,
                                 FailureTrace)
 from repro.core.simulate import SimConfig, run_simulation
@@ -143,6 +147,118 @@ def test_select_by_trace(tolfl_campaign):
     assert all(len(p) == len(SEEDS) for p in per_trace)
     # the failure-free scenarios should not be the worst of the grid
     assert per_trace[0].mean() >= res.auroc_used.min()
+
+
+def test_summary_sample_std_known_values():
+    """ddof=1 regression: the campaign reports the SAMPLE std, so a
+    two-scenario campaign must report std sqrt(2)x larger than the
+    ddof=0 population formula would."""
+    vals = np.array([0.8, 0.9])
+    mean, std, half = mean_ci95(vals)
+    np.testing.assert_allclose(mean, 0.85)
+    np.testing.assert_allclose(std, 0.07071067811865478)   # ddof=1
+    assert std > np.std(vals) + 0.02                       # not ddof=0
+    np.testing.assert_allclose(half, 1.96 * std / np.sqrt(2))
+    # single scenario: no spread estimate, nan CI instead of false zero
+    mean1, std1, half1 = mean_ci95(np.array([0.7]))
+    assert (mean1, std1) == (0.7, 0.0) and np.isnan(half1)
+
+    r = len(vals)
+    res = CampaignResult(
+        cfg=SimConfig(), trace_index=np.zeros(r, int),
+        seed=np.arange(r), auroc_used=vals, final_auroc=vals,
+        iso_auroc=np.full(r, np.nan), iso_active=np.zeros(r, bool),
+        loss_curves=np.zeros((r, 1)), iso_loss_curves=np.zeros((r, 1)),
+        rounds_to_loss=np.full(r, np.nan))
+    s = res.summary()
+    np.testing.assert_allclose(s["auroc_used_std"], 0.07071067811865478)
+    np.testing.assert_allclose(
+        s["auroc_used_ci95_hi"] - s["auroc_used_ci95_lo"], 2 * half)
+
+
+# ---------------------------------------------------------------------------
+# multi-model baselines on the same vmapped contract (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+MM_ROUNDS = 4
+MM_SEEDS = range(2)
+
+
+def _mm_traces(n_devices):
+    topo = SimConfig(scheme="fl", num_devices=n_devices).topology()
+    return [
+        NO_FAILURE,
+        FailureSpec(epoch=1, kind="client"),
+        FailureSpec(epoch=2, kind="server"),
+        FailureTrace.from_events(
+            [FailureEvent(1, "client", device=3),
+             FailureEvent(3, "client", device=3, recover=True),
+             FailureEvent(2, "server")], topo),
+    ]
+
+
+@pytest.mark.parametrize("scheme", ["fedgroup", "ifca", "fesem"])
+def test_multimodel_campaign_matches_looped_runs(scheme, small_ae,
+                                                 small_data):
+    """Batched (trace x seed) grid == a loop of run_multimodel calls,
+    in ONE compile per (scheme, M) cell."""
+    dx, counts, tx, ty = small_data
+    cfg = MultiModelConfig(scheme=scheme, num_devices=10, num_models=3,
+                           rounds=MM_ROUNDS, lr=1e-3)
+    traces = _mm_traces(10)
+    before = campaign.TRACE_COUNT
+    res = run_multimodel_campaign(small_ae, dx, counts, tx, ty, cfg,
+                                  traces, seeds=MM_SEEDS)
+    n_traces = campaign.TRACE_COUNT - before
+    assert n_traces == 1, f"core traced {n_traces}x; expected 1"
+    assert res.num_scenarios == len(traces) * len(MM_SEEDS)
+    assert res.loss_curves.shape == (res.num_scenarios, MM_ROUNDS)
+    assert res.assignments.shape == (res.num_scenarios, 10)
+    assert np.isfinite(res.best_auroc).all()
+    for b in range(res.num_scenarios):
+        scfg = dataclasses.replace(cfg, seed=int(res.seed[b]))
+        single = run_multimodel(small_ae, dx, counts, tx, ty, scfg,
+                                traces[res.trace_index[b]])
+        np.testing.assert_allclose(res.best_auroc[b], single.best_auroc,
+                                   atol=1e-5)
+        np.testing.assert_allclose(res.multi_auroc[b], single.multi_auroc,
+                                   atol=1e-5)
+        np.testing.assert_allclose(res.loss_curves[b], single.loss_curve,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(res.assignments[b],
+                                      single.assignments)
+
+
+def test_multimodel_summary_and_select(small_ae, small_data):
+    dx, counts, tx, ty = small_data
+    cfg = MultiModelConfig(scheme="ifca", num_devices=10, num_models=2,
+                           rounds=MM_ROUNDS, lr=1e-3)
+    res = run_multimodel_campaign(small_ae, dx, counts, tx, ty, cfg,
+                                  _mm_traces(10), seeds=MM_SEEDS)
+    s = res.summary()
+    assert s["num_scenarios"] == res.num_scenarios
+    np.testing.assert_allclose(s["best_auroc_mean"],
+                               res.best_auroc.mean(), rtol=1e-12)
+    assert (s["multi_auroc_ci95_lo"] <= s["multi_auroc_mean"]
+            <= s["multi_auroc_ci95_hi"])
+    for i in range(4):
+        assert len(res.select(i, "best")) == len(MM_SEEDS)
+        assert len(res.select(i, "multi")) == len(MM_SEEDS)
+
+
+def test_sweep_grid_dispatches_multimodel(small_ae, small_data):
+    """sweep_grid cells for MULTI_SCHEMES run the multi-model engine
+    with k interpreted as the model count M."""
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=3, lr=1e-3, dropout=False)
+    cells = sweep_grid(small_ae, dx, counts, tx, ty, base,
+                       scheme_ks=[("tolfl", 5), ("ifca", 2)],
+                       traces=[NO_FAILURE,
+                               FailureSpec(epoch=1, kind="server")],
+                       seeds=[0])
+    assert cells[("ifca", 2)].cfg.num_models == 2
+    assert cells[("ifca", 2)].num_scenarios == 2
+    assert np.isfinite(cells[("ifca", 2)].best_auroc).all()
+    assert np.isfinite(cells[("tolfl", 5)].auroc_used).all()
 
 
 def test_sweep_grid_cells(small_ae, small_data):

@@ -12,10 +12,12 @@ import pytest
 
 from hypothesis_compat import given, settings, st
 
-from repro.core.failure import (MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
-                                FailureEvent, FailureSpec, FailureTrace,
-                                alive_mask, as_trace, effective_weights,
-                                stack_traces, trace_alive_mask)
+from repro.core.failure import (KIND_CODES, MAX_EVENTS, NO_FAILURE,
+                                PAD_EPOCH, FailureEvent, FailureSpec,
+                                FailureTrace, alive_mask, as_trace,
+                                effective_weights, sample_rate_grid,
+                                sample_traces, stack_traces,
+                                trace_alive_mask)
 from repro.core.topology import Topology
 
 TOPOLOGIES = [(8, 4), (8, 1), (8, 8), (6, 3), (10, 5), (1, 1)]
@@ -127,6 +129,112 @@ def test_stack_traces_shapes():
     stacked = stack_traces(traces)
     assert stacked.epochs.shape == (3, MAX_EVENTS)
     assert stacked.devices.shape == (3, MAX_EVENTS)
+
+
+# ---------------------------------------------------------------------------
+# sampled trace grids (Section IV-B failure-rate sweeps)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(topo_idx=st.integers(0, len(TOPOLOGIES) - 1),
+       rate_pct=st.integers(0, 100), max_events=st.integers(1, 12),
+       rounds=st.integers(1, 50), seed=st.integers(0, 2 ** 31 - 1))
+def test_sampled_traces_well_formed(topo_idx, rate_pct, max_events,
+                                    rounds, seed):
+    """Sampled traces are epoch-sorted, in-range, respect max_events,
+    and classify events by the topology's head set."""
+    n, k = TOPOLOGIES[topo_idx]
+    topo = Topology(n, k)
+    heads = set(topo.heads)
+    rng = np.random.default_rng(seed)
+    traces = sample_traces(rng, topo, rate_pct / 100.0,
+                           max_events=max_events, rounds=rounds,
+                           num_traces=3)
+    assert len(traces) == 3
+    for trace in traces:
+        ep = np.asarray(trace.epochs)
+        dev = np.asarray(trace.devices)
+        knd = np.asarray(trace.kinds)
+        assert ep.shape == (max_events,)
+        # epoch-sorted, padding (PAD_EPOCH) naturally sorts last
+        assert (np.diff(ep) >= 0).all()
+        real = ep < PAD_EPOCH
+        assert real.sum() <= max_events
+        assert (ep[real] >= 0).all() and (ep[real] < rounds).all()
+        assert (dev[real] >= 0).all() and (dev[real] < n).all()
+        for d, c in zip(dev[real], knd[real]):
+            expect = "server" if int(d) in heads else "client"
+            assert c == KIND_CODES[expect]
+        # padding slots never fire
+        assert (dev[~real] == -1).all()
+
+
+def test_sampled_traces_rate_extremes():
+    topo = Topology(6, 3)
+    rng = np.random.default_rng(0)
+    for trace in sample_traces(rng, topo, 0.0, rounds=10, num_traces=4):
+        assert (np.asarray(trace.epochs) == PAD_EPOCH).all()
+    # rate 1 with ample slots: every device fails exactly once (plus
+    # possible recoveries)
+    big = sample_traces(rng, topo, 1.0, max_events=12, rounds=10,
+                        num_traces=4)
+    for trace in big:
+        dev = np.asarray(trace.devices)
+        alv = np.asarray(trace.alive_after)
+        failed = {int(d) for d, a in zip(dev, alv) if d >= 0 and a == 0}
+        assert failed == set(range(6))
+
+
+def test_sample_rate_grid_dedups_identical_draws():
+    """Identical draws (all-none traces at p=0) collapse to ONE trained
+    scenario while the per-p draw lists keep the Monte-Carlo weights."""
+    topo = Topology(10, 5)
+    traces, draws = sample_rate_grid(np.random.default_rng(0), topo,
+                                     p_grid=(0.0, 0.5), rounds=20,
+                                     traces_per_p=6)
+    assert len(draws[0.0]) == len(draws[0.5]) == 6
+    assert len(set(draws[0.0])) == 1           # 6 draws, 1 distinct trace
+    assert (np.asarray(traces[draws[0.0][0]].epochs) == PAD_EPOCH).all()
+    assert len(traces) == len(set(draws[0.0]) | set(draws[0.5]))
+    assert len(traces) < 12                    # strictly fewer than draws
+    # default slot budget fits every device failing AND recovering, so
+    # high-p draws are never truncated
+    assert all(t.max_events == 2 * topo.num_devices for t in traces)
+    full = sample_traces(np.random.default_rng(1), topo, 1.0,
+                         max_events=2 * topo.num_devices, rounds=20,
+                         num_traces=3)
+    for t in full:
+        dead = {int(d) for d, a in zip(np.asarray(t.devices),
+                                       np.asarray(t.alive_after))
+                if d >= 0 and a == 0}
+        assert dead == set(range(topo.num_devices))
+
+
+def test_sample_rate_grid_base_traces_join_dedup():
+    """All-none draws alias a caller-supplied no-failure base trace
+    instead of retraining an identical scenario."""
+    topo = Topology(10, 5)
+    base = [FailureTrace.none(2 * topo.num_devices)]
+    traces, draws = sample_rate_grid(np.random.default_rng(0), topo,
+                                     p_grid=(0.0,), rounds=20,
+                                     traces_per_p=4, base_traces=base)
+    assert len(traces) == 1                    # nothing beyond the base
+    assert traces[0] is base[0]
+    assert draws[0.0] == [0, 0, 0, 0]
+
+
+def test_sampled_traces_no_dangling_recovery():
+    """A recovery is only ever emitted after its failure — never alone,
+    and never at an earlier epoch."""
+    topo = Topology(10, 5)
+    rng = np.random.default_rng(7)
+    for trace in sample_traces(rng, topo, 0.9, max_events=4, rounds=30,
+                               num_traces=20):
+        ep = np.asarray(trace.epochs)
+        dev = np.asarray(trace.devices)
+        alv = np.asarray(trace.alive_after)
+        for j in np.flatnonzero((ep < PAD_EPOCH) & (alv == 1)):
+            mates = (dev == dev[j]) & (alv == 0) & (ep < ep[j])
+            assert mates.any(), (ep, dev, alv)
 
 
 # ---------------------------------------------------------------------------

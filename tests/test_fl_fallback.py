@@ -13,7 +13,8 @@ import numpy as np
 import pytest
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.failure import FailureSpec
+from repro.core.failure import (NO_FAILURE, FailureEvent, FailureSpec,
+                                FailureTrace)
 from repro.core.simulate import SimConfig, _device_grad_fn, run_simulation
 from repro.data import commsml, federated
 from repro.models import autoencoder as AE
@@ -70,18 +71,57 @@ def test_fallback_metric_is_mean_of_isolated_devices(setup):
     np.testing.assert_allclose(res.iso_auroc, np.mean(per_dev), atol=1e-5)
 
 
-def test_fallback_main_model_frozen(setup):
+def test_fallback_reported_curves_are_isolated(setup):
     """With the single head dead from round 0, no aggregation ever
-    happens: the GLOBAL model never updates and its loss curve is
-    flat."""
+    happens: the GLOBAL model is frozen and meaningless, so the REPORTED
+    loss curve must be the isolated-mean curve for every round (Fig 4) —
+    decreasing, not flat — and the reported AUROC curve must end on the
+    isolated-mean AUROC the paper would report."""
     ae, dx, counts, split = setup
     cfg = SimConfig(scheme="fl", num_devices=N_DEV, num_clusters=1,
                     rounds=ROUNDS, lr=LR, dropout=False, seed=0)
     res = run_simulation(ae, dx, counts, split.test_x, split.test_y, cfg,
                          FailureSpec(epoch=0, kind="server"))
-    np.testing.assert_allclose(res.loss_curve,
-                               res.loss_curve[0] * np.ones(ROUNDS),
+    np.testing.assert_allclose(res.loss_curve, res.iso_loss_curve,
                                rtol=1e-6)
+    assert res.loss_curve[-1] < res.loss_curve[0]
+    np.testing.assert_allclose(res.auroc_curve[-1], res.iso_auroc,
+                               atol=1e-12)
+    # the frozen global model is still measured by final_auroc, but it
+    # is not what the curves report
+    assert res.auroc_used == res.iso_auroc
+
+
+def test_midtraining_failure_curves_switch_at_failure_round(setup):
+    """Reported curves follow the global model until the server dies,
+    then the isolated mean — and a recovered server switches back."""
+    ae, dx, counts, split = setup
+    cfg = SimConfig(scheme="fl", num_devices=N_DEV, num_clusters=1,
+                    rounds=ROUNDS, lr=LR, dropout=False, seed=0)
+    h = ROUNDS // 2
+    nofail = run_simulation(ae, dx, counts, split.test_x, split.test_y,
+                            cfg, NO_FAILURE)
+    res = run_simulation(ae, dx, counts, split.test_x, split.test_y, cfg,
+                         FailureSpec(epoch=h, kind="server"))
+    # pre-failure: identical to the failure-free global curve
+    np.testing.assert_allclose(res.loss_curve[:h], nofail.loss_curve[:h],
+                               rtol=1e-6)
+    np.testing.assert_allclose(res.auroc_curve[:h],
+                               nofail.auroc_curve[:h], atol=1e-12)
+    # post-failure: the isolated-mean curve, not the frozen global one
+    np.testing.assert_allclose(res.loss_curve[h:], res.iso_loss_curve[h:],
+                               rtol=1e-6)
+    assert not np.allclose(res.loss_curve[h:], nofail.loss_curve[h:])
+
+    topo = cfg.topology()
+    churn = FailureTrace.from_events(
+        [FailureEvent(1, "server"),
+         FailureEvent(h, "server", recover=True)], topo)
+    rec = run_simulation(ae, dx, counts, split.test_x, split.test_y, cfg,
+                         churn)
+    assert not rec.iso_active          # server alive at the end
+    np.testing.assert_allclose(rec.loss_curve[1:h],
+                               rec.iso_loss_curve[1:h], rtol=1e-6)
 
 
 def test_midtraining_failure_reports_isolated_mean(setup):
