@@ -1,0 +1,112 @@
+"""Campaign execution-layer throughput: scenarios/sec, compiles, wall.
+
+Tracks the perf trajectory of the batched failure-campaign engine
+(``BENCH_campaign.json``, written next to the working directory so CI
+artifacts pick it up):
+
+* ``oneshot``   — a fixed 64-scenario (16 sampled traces x 4 seeds)
+  Tol-FL grid in one ``jit(vmap)`` call; wall-clock includes the single
+  compile, ``steady`` re-runs it on the warm executable cache (the
+  compile-amortisation contract: 0 new traces).
+* ``chunked``   — the same grid through host-side chunking
+  (``chunk_size=16``): bounded device memory, still one compile.
+* ``sweep_padded`` — an all-single-model-cells ``sweep_grid``
+  ((tolfl, 5) / (tolfl, 2) / (fl, 1) / (sbt, 10)) with padded-k
+  topology arrays: compiles are bounded per ISO-TRACKING KIND, not per
+  cell — exactly TWO for this grid (one executable shared by the three
+  non-fl cells, one for the fl cell's isolated-fallback branch).
+* ``sampled_max_events`` — compile+run wall of a sampled-rate grid with
+  the big default slot budget (max_events = 2N): the regression guard
+  for the vectorized ``trace_alive_mask`` (the unrolled fold made this
+  compile O(max_events) slower).
+
+The traces are sampled at a fixed RNG seed, so the grid is identical
+run-to-run and numbers are comparable across commits.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.datasets import prepare
+from repro.core import campaign
+from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
+from repro.core.failure import sample_rate_grid, sample_traces
+from repro.core.simulate import SimConfig
+
+GRID_TRACES = 16
+GRID_SEEDS = 4
+ROUNDS = 8
+
+
+def _timed_campaign(label, lines, results, fn):
+    c0 = campaign.TRACE_COUNT
+    t0 = time.time()
+    res = fn()
+    wall = time.time() - t0
+    compiles = campaign.TRACE_COUNT - c0
+    n = sum(r.num_scenarios for r in
+            (res.values() if isinstance(res, dict) else [res]))
+    results[label] = {"scenarios": n, "compiles": compiles,
+                      "wall_s": round(wall, 3),
+                      "scenarios_per_s": round(n / max(wall, 1e-9), 2)}
+    lines.append(f"{label},{n},{compiles},{wall:.2f},{n / wall:.1f}")
+    return res
+
+
+def run(out_path: str = "BENCH_campaign.json") -> List[str]:
+    prep = prepare("commsml", seed=0, scale=0.25)
+    cfg = SimConfig(scheme="tolfl", num_devices=10,
+                    num_clusters=prep.clusters, rounds=ROUNDS,
+                    lr=prep.lr, local_epochs=1, dropout=False)
+    topo = cfg.topology()
+    traces = sample_traces(np.random.default_rng(0), topo, 0.3,
+                           max_events=8, rounds=ROUNDS,
+                           num_traces=GRID_TRACES)
+    seeds = range(GRID_SEEDS)
+    args = (prep.ae_cfg, prep.device_x, prep.counts, prep.test_x,
+            prep.test_y)
+
+    lines = ["name,scenarios,compiles,wall_s,scenarios_per_s"]
+    results: dict = {}
+
+    _timed_campaign("oneshot", lines, results,
+                    lambda: run_campaign(*args, cfg, traces, seeds))
+    _timed_campaign("steady", lines, results,
+                    lambda: run_campaign(*args, cfg, traces, seeds))
+    _timed_campaign("chunked", lines, results,
+                    lambda: run_campaign(*args, cfg, traces, seeds,
+                                         exec_plan=ExecPlan(chunk_size=16)))
+    base = SimConfig(num_devices=10, rounds=ROUNDS, lr=prep.lr,
+                     dropout=False)
+    _timed_campaign("sweep_padded", lines, results,
+                    lambda: sweep_grid(*args, base,
+                                       scheme_ks=[("tolfl", 5),
+                                                  ("tolfl", 2),
+                                                  ("fl", 1), ("sbt", 10)],
+                                       traces=traces, seeds=[0, 1]))
+
+    # sampled-rate grid at the big slot budget (max_events = 2N): the
+    # vectorized trace_alive_mask keeps this compile O(1) in max_events
+    s_traces, _ = sample_rate_grid(np.random.default_rng(1), topo,
+                                   p_grid=(0.1, 0.3), rounds=ROUNDS,
+                                   traces_per_p=8)
+    _timed_campaign("sampled_max_events", lines, results,
+                    lambda: run_campaign(*args, cfg, s_traces, [0, 1]))
+
+    assert results["steady"]["compiles"] == 0, results["steady"]
+    # 4 cells, 2 compiles: non-fl cells share one executable, fl (whose
+    # isolated-fallback branch is extra compute) gets its own
+    assert results["sweep_padded"]["compiles"] == 2, \
+        results["sweep_padded"]
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    lines.append(f"# wrote {out_path}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -22,25 +22,35 @@ def main(argv=None) -> int:
                          "campaign (scripts/ci.sh)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: kernels|roofline|comm|"
-                         "curves|time|expected|auroc")
+                         "curves|time|expected|auroc|campaign")
     args = ap.parse_args(argv)
 
     t_all = time.time()
     sections = []
 
     if args.smoke:
-        from benchmarks import bench_expected_perf, bench_failure_auroc
+        from benchmarks import (bench_campaign, bench_expected_perf,
+                                bench_failure_auroc)
         lines = bench_failure_auroc.run_smoke()
         print("\n===== smoke: batched failure micro-campaigns =====")
         print("\n".join(lines))
         lines = bench_expected_perf.run_smoke()
         print("\n===== smoke: sampled failure-rate micro-sweep =====")
         print("\n".join(lines))
+        lines = bench_campaign.run()
+        print("\n===== smoke: campaign exec layer (BENCH_campaign.json)"
+              " =====")
+        print("\n".join(lines))
         print(f"\nsmoke done in {time.time()-t_all:.0f}s")
         return 0
 
     def want(name):
         return args.only in (None, name)
+
+    if want("campaign"):
+        from benchmarks import bench_campaign
+        sections.append(("campaign exec layer (BENCH_campaign.json)",
+                         bench_campaign.run()))
 
     if want("kernels"):
         from benchmarks import bench_kernels

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import MultiModelConfig
-from repro.core.campaign import (mean_ci95, run_campaign,
+from repro.core.campaign import (ExecPlan, mean_ci95, run_campaign,
                                  run_multimodel_campaign)
 from repro.core.baselines import as_multimodel_trace
 from repro.core.failure import (NO_FAILURE, FailureSpec, as_trace,
@@ -50,7 +50,14 @@ def main():
     ap.add_argument("--samples", type=int, default=400)
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--traces-per-p", type=int, default=4)
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="host-side scenario chunking: bound device "
+                         "memory for large grids (one compile either way)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the scenario batch across local JAX "
+                         "devices (results unchanged)")
     args = ap.parse_args()
+    plan = ExecPlan(shard=args.shard, chunk_size=args.chunk_size)
 
     X, y = commsml.generate(seed=0, samples_per_class=args.samples)
     split = federated.make_split(X, y, args.devices, 5, anomaly_classes=[3],
@@ -86,7 +93,8 @@ def main():
             np.random.default_rng(0), topo, P_GRID, args.rounds,
             args.traces_per_p, base_traces=head)
         res = run_campaign(ae, dx, counts, split.test_x, split.test_y,
-                           cfg, traces, seeds=range(args.seeds))
+                           cfg, traces, seeds=range(args.seeds),
+                           exec_plan=plan)
         row, j = f"{label:<12}", 0
         for sname, fail in canonical:
             if scheme == "batch" and fail.kind == "client":
@@ -113,7 +121,8 @@ def main():
             args.traces_per_p, base_traces=head)
         res = run_multimodel_campaign(ae, dx, counts, split.test_x,
                                       split.test_y, mcfg, traces,
-                                      seeds=range(args.seeds))
+                                      seeds=range(args.seeds),
+                                      exec_plan=plan)
         row = f"{scheme + '*':<12}"
         for j, _ in enumerate(canonical):
             row += fmt(res.select(j, "best"))

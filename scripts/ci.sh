@@ -9,5 +9,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== smoke micro-campaign =="
+echo "== sharded campaign parity (forced 8-device host platform) =="
+# the test itself forces XLA_FLAGS=--xla_force_host_platform_device_count=8
+# in a subprocess; run it explicitly so a collection filter can never
+# silently drop the multi-device parity contract from CI
+python -m pytest -q tests/test_campaign_exec.py -k sharded
+
+echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
 python -m benchmarks.run --smoke

@@ -51,7 +51,7 @@ from repro.core.failure import (Failure, FailureTrace, KIND_CODES,
                                 MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
                                 trace_alive_mask)
 from repro.models import autoencoder as AE
-from repro.training.metrics import auroc
+from repro.training.metrics import auroc_batch
 
 
 @dataclass(frozen=True)
@@ -317,9 +317,9 @@ def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
 
     final_scores = np.asarray(out.final_scores)                # (M, T)
-    per_model = [auroc(final_scores[j], test_y)
-                 for j in range(cfg.num_models)]
-    multi = auroc(final_scores.min(axis=0), test_y)
+    per_model = auroc_batch(final_scores, np.asarray(test_y))
+    multi = auroc_batch(final_scores.min(axis=0, keepdims=True),
+                        np.asarray(test_y))[0]
     return MultiModelResult(float(np.max(per_model)), float(multi),
                             np.asarray(out.losses),
                             np.asarray(out.assignments))

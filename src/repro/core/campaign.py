@@ -24,28 +24,55 @@ treatment: :func:`run_multimodel_campaign` vmaps the pure core from
 :mod:`repro.core.baselines` over a stacked (trace x seed) grid, so the
 paper's Table III-V comparison columns also cost one compile per cell.
 
-Different schemes / k imply different topologies (different array
-shapes), so a (scheme x k) grid is a Python loop of batched calls —
-:func:`sweep_grid` — with one compile per cell, not per scenario.
+Execution scales along three independent axes (:class:`ExecPlan`):
+
+* **compile amortisation** — data arrays are ARGUMENTS of an
+  lru-cached jitted batched core, never closed over, so repeated
+  campaigns on the same shapes (the benchmarks' inner loops) reuse the
+  compiled executable instead of re-tracing per campaign;
+* **scenario sharding** — ``ExecPlan(shard=True)`` pads the
+  (trace x seed) batch to a device-divisible size and dispatches it
+  through a ``shard_map`` over the local-device "scenario" mesh axis
+  (:func:`repro.sharding.compat_shard_map`), so B scenarios run on D
+  devices in B/D time;
+* **host chunking** — ``ExecPlan(chunk_size=c)`` slices the batch into
+  same-shape chunks (the last one padded, padding stripped after), so
+  arbitrarily large grids run in bounded device memory with ONE compile.
+
+Different schemes / k imply different topologies, so a (scheme x k) grid
+is a Python loop of batched calls — :func:`sweep_grid`.  By default the
+single-model cells pad their cluster arrays (head indices,
+``device_cluster_array``) to the grid's max k and feed them to the core
+as dynamic operands (:func:`repro.core.simulate._build_core_arrays`), so
+single-model cells share one compiled executable PER ISO-TRACKING KIND —
+all fl cells one, all sbt/tolfl cells another (the fl fallback branch
+roughly doubles per-round compute, so non-fl cells never pay for it) —
+instead of one compile per cell; padded cluster slots are exact no-ops
+in the combine algebra, so results match the per-cell path bit-for-bit
+(``pad_k=False`` keeps the legacy one-compile-per-cell build, pinned
+equal by tests).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import (MultiModelConfig, _build_multimodel_core,
                                   as_multimodel_trace,
                                   prepare_multimodel_arrays)
 from repro.core.failure import Failure, as_trace, stack_traces
-from repro.core.simulate import (SimConfig, _build_core, _prepare_arrays,
-                                 iso_mean_auroc)
-from repro.training.metrics import auroc
+from repro.core.simulate import (SimConfig, _build_core, _build_core_arrays,
+                                 _prepare_arrays)
+from repro.sharding import compat_shard_map
+from repro.training.metrics import auroc_batch
 
 #: incremented each time a batched campaign core is (re)traced — lets
 #: tests assert that a whole campaign costs exactly one compile.
@@ -53,6 +80,32 @@ TRACE_COUNT = 0
 
 #: schemes dispatched to the multi-model engine by :func:`sweep_grid`
 MULTI_SCHEMES = ("fedgroup", "ifca", "fesem")
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """How a campaign batch is executed (results never change with it).
+
+    shard
+        Split the scenario axis across the local JAX devices via
+        ``shard_map`` (the batch is padded up to a device-divisible
+        size; padding is stripped from the results).
+    chunk_size
+        Host-side chunking: at most this many scenarios are resident on
+        the devices at once; every chunk has the same padded shape so
+        the whole campaign still costs one compile.  ``None`` runs the
+        batch in one shot.
+    devices
+        Cap on the number of local devices used when sharding
+        (default: all of ``jax.local_device_count()``).
+    """
+    shard: bool = False
+    chunk_size: Optional[int] = None
+    devices: Optional[int] = None
+
+    def num_devices(self) -> int:
+        n = jax.local_device_count()
+        return min(self.devices, n) if self.devices else n
 
 
 def mean_ci95(vals: np.ndarray) -> Tuple[float, float, float]:
@@ -159,16 +212,119 @@ def _scenario_grid(num_traces: int, seeds: Sequence[int]
     return trace_idx, seed_arr
 
 
+# ---------------------------------------------------------------------------
+# Cached batched executables.  Data/topology arrays are ARGUMENTS (broadcast
+# over the vmap), never closed over: the jit lives in an lru_cache keyed on
+# the static config, so repeated campaigns with the same shapes reuse the
+# compiled executable instead of re-tracing per campaign.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+                track_iso: bool = False):
+    """Batched scenario executable.
+
+    kind
+        "single" (SimConfig core) or "multi" (MultiModelConfig core).
+    k_pad
+        None -> topology closed over statically (4 broadcast args);
+        int  -> topology enters as dynamic arrays padded to ``k_pad``
+        (7 broadcast args) — the compile-amortised sweep path.  The
+        ``cfg`` key is then scheme/k-normalised by the caller so every
+        sweep cell of the same ``track_iso`` kind hits the SAME cache
+        entry (``track_iso`` stays in the key: the fl fallback branch
+        roughly doubles the per-round compute, so non-fl cells must not
+        pay for it — one executable per kind, not per cell).
+    ndev
+        None -> plain ``jit``; int -> ``jit(shard_map(...))`` over an
+        (ndev,)-device "scenario" mesh, batch axis sharded, data
+        replicated.
+    """
+    if kind == "multi":
+        core = _build_multimodel_core(ae_cfg, cfg)
+        n_bcast = 4
+    elif k_pad is None:
+        core = _build_core(ae_cfg, cfg, score_history=False)
+        n_bcast = 4
+    else:
+        core = _build_core_arrays(ae_cfg, cfg, cfg.num_devices, k_pad,
+                                  track_iso=track_iso,
+                                  score_history=False)
+        n_bcast = 7
+
+    def scenario(*args):
+        global TRACE_COUNT
+        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
+        return core(*args)
+
+    vm = jax.vmap(scenario, in_axes=(None,) * n_bcast + (0, 0))
+    if ndev is None:
+        return jax.jit(vm)
+    mesh = jax.make_mesh((ndev,), ("scenario",))
+    specs = (P(),) * n_bcast + (P("scenario"), P("scenario"))
+    return jax.jit(compat_shard_map(vm, mesh, in_specs=specs,
+                                    out_specs=P("scenario")))
+
+
+def _run_batched(batched_call, bcast_args, batch_traces, seed_arr,
+                 plan: Optional[ExecPlan]):
+    """Dispatch a stacked (trace x seed) batch through ``batched_call``
+    with host-side chunking and batch padding per ``plan``; returns the
+    outputs pytree as numpy arrays with the padding stripped."""
+    plan = plan or ExecPlan()
+    B = int(seed_arr.shape[0])
+    chunk = min(plan.chunk_size or B, B)
+    if plan.shard:
+        ndev = plan.num_devices()
+        chunk = -(-chunk // ndev) * ndev      # device-divisible chunks
+    n_chunks = -(-B // chunk)
+    b_pad = n_chunks * chunk
+    # pad by repeating scenario 0 — any valid scenario works, the rows
+    # are stripped below before post-processing
+    sel = np.concatenate([np.arange(B), np.zeros(b_pad - B, np.int64)])
+    traces_p = jax.tree.map(lambda x: x[sel], batch_traces)
+    seeds_p = jnp.asarray(seed_arr)[sel]
+    outs = []
+    for c in range(n_chunks):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        out = batched_call(*bcast_args,
+                           jax.tree.map(lambda x: x[sl], traces_p),
+                           seeds_p[sl])
+        # materialise on the host per chunk: device memory stays bounded
+        # by chunk_size however large the grid is
+        outs.append(jax.tree.map(np.asarray, out))
+    full = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
+    return jax.tree.map(lambda x: x[:B], full)
+
+
+def _padded_topology_arrays(topo, k_pad: int):
+    """(cluster_ids, heads, head_valid) with the cluster axis padded to
+    ``k_pad``: padding head slots point at device 0 but are masked
+    invalid, and no device maps to a padded cluster."""
+    assert k_pad >= topo.num_clusters, (k_pad, topo.num_clusters)
+    heads = np.zeros(k_pad, np.int32)
+    heads[:topo.num_clusters] = topo.heads
+    head_valid = np.zeros(k_pad, np.float32)
+    head_valid[:topo.num_clusters] = 1.0
+    return (jnp.asarray(topo.device_cluster_array()), jnp.asarray(heads),
+            jnp.asarray(head_valid))
+
+
 def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                  device_counts: np.ndarray, test_x: np.ndarray,
                  test_y: np.ndarray, cfg: SimConfig,
                  traces: Sequence[Failure], seeds: Sequence[int],
-                 target_loss: Optional[float] = None) -> CampaignResult:
-    """Run every (trace x seed) scenario in one jitted, vmapped call.
+                 target_loss: Optional[float] = None,
+                 exec_plan: Optional[ExecPlan] = None,
+                 pad_k: Optional[int] = None) -> CampaignResult:
+    """Run every (trace x seed) scenario through one compiled executable.
 
     ``traces`` may mix legacy :class:`FailureSpec`s and
     :class:`FailureTrace`s; all are normalised to traces and stacked.
-    ``cfg.seed`` is ignored — seeds come from the grid."""
+    ``cfg.seed`` is ignored — seeds come from the grid.  ``exec_plan``
+    chooses scenario sharding / host chunking (results are unchanged);
+    ``pad_k`` (int >= cfg's cluster count) routes through the padded-k
+    core so campaigns with different (scheme, k) share one executable —
+    :func:`sweep_grid` sets it to the grid's max k."""
     topo = cfg.topology()
     norm = [as_trace(t, topo) for t in traces]
     trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
@@ -180,19 +336,25 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     dx, counts, valid = _prepare_arrays(cfg, device_x, device_counts)
     tx = jnp.asarray(test_x)
     assert dx.shape[0] == topo.num_devices, (dx.shape, topo.num_devices)
-    core = _build_core(ae_cfg, dataclasses.replace(cfg, seed=0),
-                       score_history=False)
 
-    def scenario(trace, seed):
-        global TRACE_COUNT
-        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
-        return core(dx, counts, valid, tx, trace, seed)
-
-    # data arrays are closed over, so the jit is per-campaign: the whole
-    # (trace x seed) batch shares ONE compile (asserted by tests), and a
-    # fresh campaign with different data cannot see a stale closure.
-    batched = jax.jit(jax.vmap(scenario, in_axes=(0, 0)))
-    out = batched(batch_traces, jnp.asarray(seed_arr))
+    track_iso = (cfg.scheme == "fl")
+    if pad_k is None:
+        key_cfg = dataclasses.replace(cfg, seed=0)
+        bcast = (dx, counts, valid, tx)
+    else:
+        # scheme / num_clusters are normalised OUT of the cache key: the
+        # padded core reads the topology from the arrays, so every
+        # single-model sweep cell of the same track_iso kind resolves to
+        # the same executable
+        key_cfg = dataclasses.replace(cfg, seed=0, scheme="tolfl",
+                                      num_clusters=1)
+        bcast = (dx, counts, valid, tx) + _padded_topology_arrays(topo,
+                                                                  pad_k)
+    ndev = (exec_plan.num_devices()
+            if exec_plan is not None and exec_plan.shard else None)
+    batched = _executable("single", ae_cfg, key_cfg, pad_k, ndev,
+                          track_iso)
+    out = _run_batched(batched, bcast, batch_traces, seed_arr, exec_plan)
 
     return _post_process(cfg, out, trace_idx, seed_arr, test_y,
                          target_loss)
@@ -209,7 +371,8 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
     server_dead = np.asarray(out.server_dead) > 0      # (B,)
     B = losses.shape[0]
 
-    final_auroc = np.array([auroc(finals[b], test_y) for b in range(B)])
+    test_y = np.asarray(test_y)
+    final_auroc = auroc_batch(finals, test_y)
     track_iso = (cfg.scheme == "fl")
     iso_auroc = np.full(B, np.nan)
     iso_active = np.zeros(B, bool)
@@ -217,19 +380,27 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
         # Fig 4 semantics (matching run_simulation): server-dead rounds
         # report the isolated-mean loss, not the frozen global model's
         losses = np.where(dead_rounds, iso_losses, losses)
-        for b in range(B):
-            if server_dead[b]:
-                iso_active[b] = True
-                iso_auroc[b] = iso_mean_auroc(iso_scores[b],
-                                              final_alive[b], test_y)
+        iso_active = server_dead.copy()
+        hit = np.flatnonzero(iso_active)
+        if len(hit) and iso_scores.shape[-1]:
+            n_dev = iso_scores.shape[1]
+            per_dev = auroc_batch(
+                iso_scores[hit].reshape(len(hit) * n_dev, -1),
+                test_y).reshape(len(hit), n_dev)
+            alive = (final_alive[hit] > 0)
+            denom = alive.sum(axis=1)
+            num = np.where(alive, per_dev, 0.0).sum(axis=1)
+            iso_auroc[hit] = np.where(denom > 0,
+                                      num / np.maximum(denom, 1),
+                                      np.nan)
     auroc_used = np.where(iso_active, iso_auroc, final_auroc)
 
     r2l = np.full(B, np.nan)
     if target_loss is not None:
-        for b in range(B):
-            hit = np.where(losses[b] <= target_loss)[0]
-            if len(hit):
-                r2l[b] = hit[0] + 1
+        reached = losses <= target_loss                # (B, R)
+        any_hit = reached.any(axis=1)
+        first = reached.argmax(axis=1) + 1.0
+        r2l = np.where(any_hit, first, np.nan)
 
     return CampaignResult(cfg=cfg, trace_index=trace_idx, seed=seed_arr,
                           auroc_used=auroc_used, final_auroc=final_auroc,
@@ -243,9 +414,12 @@ def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
                             device_counts: np.ndarray, test_x: np.ndarray,
                             test_y: np.ndarray, cfg: MultiModelConfig,
                             traces: Sequence[Failure],
-                            seeds: Sequence[int]) -> MultiCampaignResult:
+                            seeds: Sequence[int],
+                            exec_plan: Optional[ExecPlan] = None
+                            ) -> MultiCampaignResult:
     """Every (trace x seed) scenario of a multi-model baseline in one
-    jitted, vmapped call — the multi-model twin of :func:`run_campaign`.
+    jitted, vmapped call — the multi-model twin of :func:`run_campaign`
+    (same cached-executable / sharding / chunking machinery).
 
     ``traces`` may mix legacy :class:`FailureSpec`s and
     :class:`FailureTrace`s; specs are normalised with the BASELINE
@@ -263,24 +437,20 @@ def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
     dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
     tx = jnp.asarray(test_x)
     assert dx.shape[0] == cfg.num_devices, (dx.shape, cfg.num_devices)
-    core = _build_multimodel_core(ae_cfg,
-                                  dataclasses.replace(cfg, seed=0))
-
-    def scenario(trace, seed):
-        global TRACE_COUNT
-        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
-        return core(dx, counts, valid, tx, trace, seed)
-
-    batched = jax.jit(jax.vmap(scenario, in_axes=(0, 0)))
-    out = batched(batch_traces, jnp.asarray(seed_arr))
+    key_cfg = dataclasses.replace(cfg, seed=0)
+    ndev = (exec_plan.num_devices()
+            if exec_plan is not None and exec_plan.shard else None)
+    batched = _executable("multi", ae_cfg, key_cfg, None, ndev)
+    out = _run_batched(batched, (dx, counts, valid, tx), batch_traces,
+                       seed_arr, exec_plan)
 
     finals = np.asarray(out.final_scores)              # (B, M, T)
-    B = finals.shape[0]
-    best = np.array([max(auroc(finals[b, j], test_y)
-                         for j in range(cfg.num_models))
-                     for b in range(B)])
-    multi = np.array([auroc(finals[b].min(axis=0), test_y)
-                      for b in range(B)])
+    B, M = finals.shape[0], cfg.num_models
+    test_y = np.asarray(test_y)
+    per_model = auroc_batch(finals.reshape(B * M, -1),
+                            test_y).reshape(B, M)
+    best = per_model.max(axis=1)
+    multi = auroc_batch(finals.min(axis=1), test_y)
     return MultiCampaignResult(cfg=cfg, trace_index=trace_idx,
                                seed=seed_arr, best_auroc=best,
                                multi_auroc=multi,
@@ -293,17 +463,33 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                test_y: np.ndarray, base: SimConfig,
                scheme_ks: Sequence[Tuple[str, int]],
                traces: Sequence[Failure], seeds: Sequence[int],
-               target_loss: Optional[float] = None
+               target_loss: Optional[float] = None,
+               exec_plan: Optional[ExecPlan] = None,
+               pad_k: bool = True
                ) -> Dict[Tuple[str, int], CampaignResult]:
-    """(scheme x k) grid of batched campaigns — one compile per cell.
+    """(scheme x k) grid of batched campaigns.
 
-    Single-model schemes (batch/fl/sbt/tolfl) interpret k as the cluster
-    count; multi-model baselines (:data:`MULTI_SCHEMES`) interpret k as
-    the model count M and run through
-    :func:`run_multimodel_campaign` (their cells return
-    :class:`MultiCampaignResult`, and legacy specs in ``traces`` resolve
-    to the baseline default targets).  Every cell covers the full
-    (trace x seed) scenario batch."""
+    Single-model schemes (fl/sbt/tolfl) interpret k as the cluster
+    count.  With ``pad_k`` (the default) their cluster arrays are padded
+    to the grid's max k and passed to the core as dynamic operands, so
+    such cells share one compiled executable PER ISO-TRACKING KIND: all
+    sbt/tolfl cells compile once, all fl cells once more (their
+    isolated-fallback branch is extra compute non-fl cells must not
+    pay) — bounded compiles for the whole grid instead of one per cell,
+    with results unchanged: padded cluster slots are exact no-ops.
+    ``pad_k=False`` restores the one-compile-per-cell static build.
+    "batch" cells centralise the data onto one device (different array
+    shapes), so they always compile separately.
+
+    Multi-model baselines (:data:`MULTI_SCHEMES`) interpret k as the
+    model count M and run through :func:`run_multimodel_campaign`
+    (their cells return :class:`MultiCampaignResult`, and legacy specs
+    in ``traces`` resolve to the baseline default targets).  Every cell
+    covers the full (trace x seed) scenario batch under ``exec_plan``.
+    """
+    single_ks = [k for scheme, k in scheme_ks
+                 if scheme not in MULTI_SCHEMES and scheme != "batch"]
+    k_common = max(single_ks) if (pad_k and single_ks) else None
     out: Dict[Tuple[str, int], CampaignResult] = {}
     for scheme, k in scheme_ks:
         if scheme in MULTI_SCHEMES:
@@ -317,11 +503,14 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                                     lr=base.lr, dropout=base.dropout)
             out[(scheme, k)] = run_multimodel_campaign(
                 ae_cfg, device_x, device_counts, test_x, test_y, mcfg,
-                traces, seeds)
+                traces, seeds, exec_plan=exec_plan)
         else:
             cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
+            cell_pad = k_common if scheme != "batch" else None
             out[(scheme, k)] = run_campaign(ae_cfg, device_x,
                                             device_counts, test_x, test_y,
                                             cfg, traces, seeds,
-                                            target_loss)
+                                            target_loss,
+                                            exec_plan=exec_plan,
+                                            pad_k=cell_pad)
     return out

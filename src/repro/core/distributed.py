@@ -39,28 +39,11 @@ from repro.optim.optimizers import apply_updates, make_optimizer
 from repro.sharding import logical as L
 
 
-#: Newer jax exposes ``jax.shard_map(..., axis_names=...)`` whose
-#: partial-manual lowering is robust.  On 0.4.x the experimental API's
-#: partial-auto mode fatally trips XLA:CPU's SPMD partitioner on any
-#: ``ppermute`` inside the region (manual-subgroup reshard check), so
-#: there we fall back to a FULLY manual region: the non-federated axes
-#: are replicated into every shard (in_specs never mention them), each
-#: shard redundantly computes the whole model — correct, but without
-#: model-parallel compute savings on that legacy path.
-_FULL_MANUAL_FALLBACK = not hasattr(jax, "shard_map")
-
-
-def _partial_manual_shard_map(f, mesh: Mesh, in_specs, out_specs, manual):
-    """Partial-manual shard_map across jax versions: manual over the
-    federated ``manual`` axes, auto (GSPMD) over the rest where the
-    backend supports it (see ``_FULL_MANUAL_FALLBACK``)."""
-    if not _FULL_MANUAL_FALLBACK:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             axis_names=set(manual), check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
+#: version-portable shard_map shared with the campaign scenario-sharding
+#: executor; see :mod:`repro.sharding.logical` for the CPU/0.4.x
+#: full-manual fallback rationale.
+_FULL_MANUAL_FALLBACK = L.FULL_MANUAL_FALLBACK
+_partial_manual_shard_map = L.compat_shard_map
 
 
 def data_axis_size(mesh: Mesh) -> int:

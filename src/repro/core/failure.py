@@ -170,8 +170,13 @@ def sample_traces(rng: np.random.Generator, topo: Topology,
     probability ``recover_prob`` a failed device comes back at a later
     uniform epoch (churn).  Events beyond ``max_events`` slots are
     dropped (device order randomised first, so the truncation is not
-    biased toward low device ids); a failure and its recovery are kept
-    or dropped together so no trace ends on a dangling recovery.
+    biased toward low device ids).  Truncation near the slot budget
+    degrades gracefully: a failure whose recovery no longer fits keeps
+    the failure and drops only the recovery (a device is skipped
+    entirely only when NO slot remains), so no trace ends on a dangling
+    recovery and failures are never under-counted while slots are free
+    — either every failed device appears in the trace, or all
+    ``max_events`` slots are used (a pinned invariant).
 
     Returns a list of :class:`FailureTrace` (stackable via
     :func:`stack_traces` for one batched campaign).
@@ -189,9 +194,13 @@ def sample_traces(rng: np.random.Generator, topo: Topology,
             kind = "server" if int(d) in head_set else "client"
             epoch = int(rng.integers(rounds))
             recovers = (rng.random() < recover_prob) and epoch + 1 < rounds
-            need = 2 if recovers else 1
-            if len(events) + need > max_events:
+            free = max_events - len(events)
+            if free <= 0:
                 continue
+            if recovers and free < 2:
+                recovers = False   # degrade: keep the failure, drop the
+                #                    recovery — skipping both would
+                #                    under-count failures near the budget
             events.append(FailureEvent(epoch, kind, device=int(d)))
             if recovers:
                 rec = int(rng.integers(epoch + 1, rounds))
@@ -257,12 +266,32 @@ def trace_alive_mask(trace: FailureTrace, num_devices: int, epoch: jax.Array
                      ) -> jax.Array:
     """(num_devices,) float alive mask at ``epoch`` (traced).
 
-    Events are epoch-sorted, so a fold over the static M slots leaves
-    each device with the state of its most recent fired event."""
+    Events are epoch-sorted (stably), so each device's state is the
+    ``alive_after`` of the HIGHEST-indexed fired slot targeting it —
+    found with one reversed argmax over the slot axis.  The graph is a
+    fixed handful of ops regardless of ``max_events`` (a guarded
+    invariant: ``tests/test_failure_trace.py`` pins the jaxpr size);
+    the previous per-slot Python fold emitted O(M) ``where``s, which
+    blew up compile time on sampled grids where M = 2 * num_devices."""
+    fired = ((epoch >= trace.epochs)[:, None]              # (M, N)
+             & (trace.devices[:, None]
+                == jnp.arange(num_devices)[None, :]))
+    any_fired = jnp.any(fired, axis=0)                     # (N,)
+    # argmax on the reversed slot axis -> index of the LAST fired slot
+    # (ties between same-epoch slots keep the list-order contract)
+    last = (trace.max_events - 1) - jnp.argmax(fired[::-1], axis=0)
+    return jnp.where(any_fired, trace.alive_after[last],
+                     jnp.ones((num_devices,), jnp.float32))
+
+
+def _trace_alive_mask_unrolled(trace: FailureTrace, num_devices: int,
+                               epoch: jax.Array) -> jax.Array:
+    """Reference implementation: the per-slot fold :func:`trace_alive_mask`
+    replaced.  Kept (test-only) to pin equality and the graph-size win."""
     active = (epoch >= trace.epochs)                       # (M,)
     hits = trace.devices[:, None] == jnp.arange(num_devices)[None, :]
     alive = jnp.ones((num_devices,), jnp.float32)
-    for j in range(trace.max_events):                      # M is small
+    for j in range(trace.max_events):
         fire = active[j] & hits[j]
         alive = jnp.where(fire, trace.alive_after[j], alive)
     return alive
@@ -288,7 +317,16 @@ def effective_weights(alive: jax.Array, topo: Topology) -> jax.Array:
     cluster; dead members zero only themselves."""
     cluster_ids = jnp.asarray(topo.device_cluster_array())
     heads = jnp.asarray(np.array(topo.heads))
-    head_alive = alive[heads]                     # (k,)
+    return effective_weights_arrays(alive, cluster_ids, heads)
+
+
+def effective_weights_arrays(alive: jax.Array, cluster_ids: jax.Array,
+                             heads: jax.Array) -> jax.Array:
+    """:func:`effective_weights` with the topology as (possibly traced)
+    arrays — ``heads`` may be padded past the real cluster count (the
+    compile-amortised sweep path): padding slots are only reachable
+    through ``cluster_ids``, which never names a padded cluster."""
+    head_alive = alive[heads]                     # (k,) or (k_pad,)
     return alive * head_alive[cluster_ids]
 
 

@@ -39,12 +39,11 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import aggregation as agg
-from repro.core.failure import (Failure, FailureSpec, FailureTrace,
-                                NO_FAILURE, as_trace, effective_weights,
-                                trace_alive_mask)
+from repro.core.failure import (Failure, FailureTrace, NO_FAILURE, as_trace,
+                                effective_weights_arrays, trace_alive_mask)
 from repro.core.topology import Topology
 from repro.models import autoencoder as AE
-from repro.training.metrics import auroc
+from repro.training.metrics import auroc, auroc_batch
 
 
 @dataclass(frozen=True)
@@ -126,21 +125,28 @@ def _local_delta_fn(ae_cfg: AutoencoderConfig, cfg: SimConfig):
     return delta
 
 
-def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
-                score_history: bool):
-    """Pure scenario function: (dx, counts, valid, tx, trace, seed)
-    -> :class:`SimOutputs`.  Everything else is closed over statically;
-    the FL isolated-fallback branch exists whenever scheme == "fl" and is
-    gated in-graph by the trace, so one graph serves every trace."""
-    topo = cfg.topology()
-    N = topo.num_devices
-    cluster_ids = jnp.asarray(topo.device_cluster_array())
-    heads = jnp.asarray(np.array(topo.heads))
-    k = topo.num_clusters
-    delta_fn = _local_delta_fn(ae_cfg, cfg)
-    track_iso = (cfg.scheme == "fl")
+def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+                       num_devices: int, num_clusters: int,
+                       track_iso: bool, score_history: bool):
+    """Pure scenario function with the topology as DYNAMIC operands:
+    (dx, counts, valid, tx, cluster_ids, heads, head_valid, trace, seed)
+    -> :class:`SimOutputs`.
 
-    def core(dx, counts, valid, tx, trace: FailureTrace, seed):
+    ``num_clusters`` is only the STATIC length of the cluster axis; the
+    actual structure arrives in the arrays, so cells of a (scheme, k)
+    sweep that pad ``heads``/``head_valid`` to a common max-k share ONE
+    compiled executable (:func:`repro.core.campaign.sweep_grid`).
+    Padded cluster slots carry zero counts and an invalid head, which
+    the combine algebra absorbs as exact no-ops — results are
+    bit-identical to the per-cell build.  ``cfg.scheme`` is deliberately
+    unread here (``track_iso`` replaces it) so one build serves
+    fl/sbt/tolfl alike."""
+    N = num_devices
+    k = num_clusters
+    delta_fn = _local_delta_fn(ae_cfg, cfg)
+
+    def core(dx, counts, valid, tx, cluster_ids, heads, head_valid,
+             trace: FailureTrace, seed):
         key = jax.random.PRNGKey(seed)
         params, _ = AE.init_params(key, ae_cfg)
 
@@ -148,11 +154,16 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
             s = AE.anomaly_scores(p, ae_cfg, tx)
             return jnp.mean(s)
 
+        def heads_alive_max(alive):
+            """max over VALID heads only — padded head slots never argue
+            the server back to life."""
+            return jnp.max(jnp.where(head_valid > 0, alive[heads], 0.0))
+
         def round_fn(carry, epoch):
             params, iso_params, rkey = carry
             rkey, dkey = jax.random.split(rkey)
             alive = trace_alive_mask(trace, N, epoch)
-            w = effective_weights(alive, topo)
+            w = effective_weights_arrays(alive, cluster_ids, heads)
             dkeys = jax.random.split(dkey, N)
             gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
                 params, dx, valid, dkeys)
@@ -169,7 +180,7 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                 lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
 
             # ---- isolated fallback (fl server failure) ----
-            head_dead = 1.0 - jnp.max(alive[heads])      # all heads dead
+            head_dead = 1.0 - heads_alive_max(alive)     # all heads dead
             if track_iso:
                 failed_now = head_dead
                 # track the global model until failure, then diverge per
@@ -208,9 +219,7 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                                                     iso_scores, head_dead)
 
         iso0 = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy()
-            if cfg.scheme != "batch"
-            else jnp.broadcast_to(p, (1,) + p.shape),
+            lambda p: jnp.broadcast_to(p, (N,) + p.shape).copy(),
             params)
         (final_params, iso_params, _), \
             (losses, score_hist, iso_losses, iso_score_hist, dead_rounds) = \
@@ -218,7 +227,7 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                          jnp.arange(cfg.rounds))
 
         final_alive = trace_alive_mask(trace, N, jnp.int32(cfg.rounds - 1))
-        server_dead = 1.0 - jnp.max(final_alive[heads])
+        server_dead = 1.0 - heads_alive_max(final_alive)
         final_scores = AE.anomaly_scores(final_params, ae_cfg, tx)
         if track_iso:
             iso_final_scores = jax.vmap(
@@ -228,6 +237,29 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
         return SimOutputs(losses, iso_losses, final_scores,
                           iso_final_scores, final_alive, server_dead,
                           dead_rounds, score_hist, iso_score_hist)
+
+    return core
+
+
+def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+                score_history: bool):
+    """Pure scenario function: (dx, counts, valid, tx, trace, seed)
+    -> :class:`SimOutputs`.  The topology is closed over statically (a
+    thin wrapper over :func:`_build_core_arrays`); the FL
+    isolated-fallback branch exists whenever scheme == "fl" and is
+    gated in-graph by the trace, so one graph serves every trace."""
+    topo = cfg.topology()
+    cluster_ids = jnp.asarray(topo.device_cluster_array())
+    heads = jnp.asarray(np.array(topo.heads))
+    head_valid = jnp.ones((topo.num_clusters,), jnp.float32)
+    arrays_core = _build_core_arrays(ae_cfg, cfg, topo.num_devices,
+                                     topo.num_clusters,
+                                     track_iso=(cfg.scheme == "fl"),
+                                     score_history=score_history)
+
+    def core(dx, counts, valid, tx, trace: FailureTrace, seed):
+        return arrays_core(dx, counts, valid, tx, cluster_ids, heads,
+                           head_valid, trace, seed)
 
     return core
 
@@ -293,7 +325,7 @@ def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     losses = np.asarray(out.losses).copy()
     iso_losses = np.asarray(out.iso_losses)
     scores_all = np.asarray(out.score_hist)
-    aurocs = np.array([auroc(s, test_y) for s in scores_all])
+    aurocs = auroc_batch(scores_all, np.asarray(test_y))
     final = float(aurocs[-1])
 
     # isolated final AUROC: mean over alive devices of per-device AUROC

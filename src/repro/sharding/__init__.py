@@ -1,6 +1,9 @@
-from repro.sharding.logical import (activate_mesh, constrain, current_mesh,
-                                    current_rules, mesh_axis_sizes, rules_for,
+from repro.sharding.logical import (FULL_MANUAL_FALLBACK, activate_mesh,
+                                    compat_shard_map, constrain,
+                                    current_mesh, current_rules,
+                                    mesh_axis_sizes, rules_for,
                                     sharding_for, spec_for)
 
-__all__ = ["activate_mesh", "constrain", "current_mesh", "current_rules",
-           "mesh_axis_sizes", "rules_for", "sharding_for", "spec_for"]
+__all__ = ["FULL_MANUAL_FALLBACK", "activate_mesh", "compat_shard_map",
+           "constrain", "current_mesh", "current_rules", "mesh_axis_sizes",
+           "rules_for", "sharding_for", "spec_for"]

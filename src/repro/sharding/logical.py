@@ -194,3 +194,33 @@ def sharding_for(mesh: Mesh, axes: Sequence[Optional[str]],
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# shard_map across jax versions (shared by the mesh train step and the
+# campaign scenario-sharding executor).
+# ---------------------------------------------------------------------------
+#: Newer jax exposes ``jax.shard_map(..., axis_names=...)`` whose
+#: partial-manual lowering is robust.  On 0.4.x the experimental API's
+#: partial-auto mode fatally trips XLA:CPU's SPMD partitioner on any
+#: ``ppermute`` inside the region (manual-subgroup reshard check), so
+#: there we fall back to a FULLY manual region: the non-manual axes are
+#: replicated into every shard (in_specs never mention them) and each
+#: shard redundantly computes the whole model — correct, but without
+#: model-parallel compute savings on that legacy path.
+FULL_MANUAL_FALLBACK = not hasattr(jax, "shard_map")
+
+
+def compat_shard_map(f, mesh: Mesh, in_specs, out_specs, manual=None):
+    """Version-portable shard_map: manual over the ``manual`` axes (all
+    mesh axes when None), auto (GSPMD) over the rest where the backend
+    supports it (see :data:`FULL_MANUAL_FALLBACK`)."""
+    if not FULL_MANUAL_FALLBACK:
+        names = (set(manual) if manual is not None
+                 else set(mesh.axis_names))
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

@@ -1,0 +1,256 @@
+"""Execution-layer contracts of the campaign engine (ISSUE 3 tentpole).
+
+What is proven:
+
+* **chunked == one-shot** — ``ExecPlan(chunk_size < B)`` with a
+  non-divisible batch (padding required) returns the same per-scenario
+  results as the unchunked call, and the whole chunked campaign still
+  costs ONE compile (every chunk has the same padded shape).
+* **padded-k sweep == per-cell sweep** — ``sweep_grid`` with the
+  default ``pad_k`` runs ALL single-model (scheme, k) cells through one
+  compiled executable (TRACE_COUNT delta == 1) and matches the
+  ``pad_k=False`` per-cell build scenario-for-scenario.
+* **compile amortisation** — a repeated campaign with identical shapes
+  hits the executable cache: 0 new traces (data arrays are arguments,
+  not closures).
+* **sharded == unsharded** — a 64-scenario campaign sharded over 8
+  forced-host CPU devices (subprocess, like ``tests/test_distributed``)
+  matches the one-shot path to <= 1e-5, including sharding + chunking
+  combined and a non-divisible batch that needs device padding.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import campaign
+from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
+from repro.core.failure import sample_traces
+from repro.core.simulate import SimConfig
+from repro.data import commsml, federated
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# rounds is deliberately DISTINCT from every other campaign test in the
+# suite: the executable cache is global, and the compile-count
+# assertions below need cold cache entries
+ROUNDS = 6
+
+
+@pytest.fixture(scope="module")
+def small_ae():
+    return AutoencoderConfig(input_dim=commsml.N_FEATURES, hidden=(16,),
+                             code_dim=4, dropout=0.2)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    split = federated.make_split(X, y, num_devices=10, num_clusters=5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    return dx, counts, split.test_x, split.test_y
+
+
+def _cfg():
+    return SimConfig(scheme="tolfl", num_devices=10, num_clusters=5,
+                     rounds=ROUNDS, lr=1e-3, dropout=False)
+
+
+def _traces(cfg, n=4):
+    return sample_traces(np.random.default_rng(3), cfg.topology(), 0.5,
+                         max_events=8, rounds=ROUNDS, num_traces=n)
+
+
+def test_chunked_equals_oneshot_with_padding(small_ae, small_data):
+    """chunk_size=5 over B=12 -> chunks of 5/5/5 with 3 padded rows;
+    results equal the one-shot batch and the padding is stripped."""
+    dx, counts, tx, ty = small_data
+    cfg = _cfg()
+    traces = _traces(cfg)
+    before = campaign.TRACE_COUNT
+    one = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                       seeds=range(3), target_loss=2430.0)
+    assert campaign.TRACE_COUNT - before == 1
+    assert one.num_scenarios == 12
+    before = campaign.TRACE_COUNT
+    chunked = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                           seeds=range(3), target_loss=2430.0,
+                           exec_plan=ExecPlan(chunk_size=5))
+    # a new batch shape (5 vs 12) -> exactly one new compile, reused by
+    # every chunk including the padded last one
+    assert campaign.TRACE_COUNT - before == 1
+    assert chunked.num_scenarios == 12
+    np.testing.assert_allclose(one.auroc_used, chunked.auroc_used,
+                               atol=1e-5)
+    np.testing.assert_allclose(one.loss_curves, chunked.loss_curves,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(one.trace_index, chunked.trace_index)
+    np.testing.assert_array_equal(
+        np.isfinite(one.rounds_to_loss),
+        np.isfinite(chunked.rounds_to_loss))
+
+
+def test_repeated_campaign_reuses_executable(small_ae, small_data):
+    """Data arrays are arguments of a cached jitted core: a second
+    campaign on the same shapes costs ZERO new traces."""
+    dx, counts, tx, ty = small_data
+    cfg = _cfg()
+    traces = _traces(cfg)
+    first = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                         seeds=range(3))
+    before = campaign.TRACE_COUNT
+    again = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                         seeds=range(3))
+    assert campaign.TRACE_COUNT - before == 0
+    np.testing.assert_array_equal(first.auroc_used, again.auroc_used)
+
+
+SWEEP_CELLS = [("tolfl", 5), ("tolfl", 2), ("sbt", 10)]
+
+
+def _assert_cells_equal(padded, percell):
+    for key in padded:
+        np.testing.assert_allclose(padded[key].auroc_used,
+                                   percell[key].auroc_used, atol=1e-5)
+        np.testing.assert_allclose(padded[key].final_auroc,
+                                   percell[key].final_auroc, atol=1e-5)
+        np.testing.assert_allclose(padded[key].loss_curves,
+                                   percell[key].loss_curves,
+                                   rtol=1e-5, atol=1e-5)
+        # iso outputs must match too: non-fl cells report zeros on BOTH
+        # paths (the padded core must not silently enable iso tracking)
+        np.testing.assert_allclose(padded[key].iso_loss_curves,
+                                   percell[key].iso_loss_curves,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(padded[key].iso_active,
+                                      percell[key].iso_active)
+
+
+def test_padded_sweep_single_compile_and_parity(small_ae, small_data):
+    """All (non-fl) single-model cells of a sweep share ONE compiled
+    executable (padded cluster arrays as dynamic operands) and match
+    the per-cell static build scenario-for-scenario."""
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=ROUNDS, lr=1e-3,
+                     dropout=False)
+    cfg = _cfg()
+    traces = _traces(cfg, n=3)
+    before = campaign.TRACE_COUNT
+    padded = sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS,
+                        traces, seeds=[0, 1])
+    n_traces = campaign.TRACE_COUNT - before
+    assert n_traces == 1, f"padded sweep traced {n_traces}x; expected 1"
+    percell = sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS,
+                         traces, seeds=[0, 1], pad_k=False)
+    _assert_cells_equal(padded, percell)
+
+
+def test_padded_sweep_fl_cell_compiles_separately(small_ae, small_data):
+    """An fl cell carries the isolated-fallback branch (extra compute);
+    it must get its OWN padded executable — one more compile, never a
+    silently iso-tracking executable for the non-fl cells."""
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=ROUNDS, lr=1e-3,
+                     dropout=False)
+    cfg = _cfg()
+    traces = _traces(cfg, n=3)
+    cells = SWEEP_CELLS + [("fl", 1)]
+    # warm the shared non-iso executable so the count below isolates
+    # the fl cell's contribution (self-contained under -k selection)
+    sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS, traces,
+               seeds=[0, 1])
+    before = campaign.TRACE_COUNT
+    padded = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                        traces, seeds=[0, 1])
+    n_traces = campaign.TRACE_COUNT - before
+    assert n_traces == 1, \
+        f"mixed sweep traced {n_traces}x; expected 1 (fl cell only)"
+    percell = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                         traces, seeds=[0, 1], pad_k=False)
+    _assert_cells_equal(padded, percell)
+    assert padded[("fl", 1)].cfg.scheme == "fl"
+
+
+# ---------------------------------------------------------------------------
+# sharded execution (needs >1 device -> subprocess with a forced-host
+# platform, exactly like tests/test_distributed.py)
+# ---------------------------------------------------------------------------
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+
+    from repro.configs.autoencoder_paper import AutoencoderConfig
+    from repro.core import campaign
+    from repro.core.campaign import ExecPlan, run_campaign
+    from repro.core.failure import sample_traces
+    from repro.core.simulate import SimConfig
+    from repro.data import commsml, federated
+
+    assert jax.device_count() == 8, jax.device_count()
+    ae = AutoencoderConfig(input_dim=commsml.N_FEATURES, hidden=(16,),
+                           code_dim=4, dropout=0.2)
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    split = federated.make_split(X, y, num_devices=10, num_clusters=5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    cfg = SimConfig(scheme="tolfl", num_devices=10, num_clusters=5,
+                    rounds=3, lr=1e-3, dropout=False)
+    traces = sample_traces(np.random.default_rng(0), cfg.topology(), 0.5,
+                           max_events=8, rounds=3, num_traces=16)
+    seeds = range(4)                    # B = 64
+    args = (ae, dx, counts, split.test_x, split.test_y, cfg)
+
+    base = run_campaign(*args, traces, seeds)
+    c0 = campaign.TRACE_COUNT
+    sharded = run_campaign(*args, traces, seeds,
+                           exec_plan=ExecPlan(shard=True))
+    sharded_compiles = campaign.TRACE_COUNT - c0
+    c0 = campaign.TRACE_COUNT
+    both = run_campaign(*args, traces, seeds,
+                        exec_plan=ExecPlan(shard=True, chunk_size=24))
+    both_compiles = campaign.TRACE_COUNT - c0
+    # non-divisible batch: 60 scenarios over 8 devices (pad to 64)
+    base_nd = run_campaign(*args, traces[:15], seeds)
+    shard_nd = run_campaign(*args, traces[:15], seeds,
+                            exec_plan=ExecPlan(shard=True))
+
+    def err(a, b):
+        return float(np.max(np.abs(a - b)))
+
+    print(json.dumps({
+        "num_scenarios": int(base.num_scenarios),
+        "sharded_compiles": sharded_compiles,
+        "both_compiles": both_compiles,
+        "d_auroc": err(base.auroc_used, sharded.auroc_used),
+        "d_loss": err(base.loss_curves, sharded.loss_curves),
+        "d_auroc_chunked": err(base.auroc_used, both.auroc_used),
+        "d_auroc_nondiv": err(base_nd.auroc_used, shard_nd.auroc_used),
+    }))
+""")
+
+
+def test_sharded_campaign_matches_oneshot():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    stats = json.loads(out.stdout.strip().splitlines()[-1])
+    assert stats["num_scenarios"] == 64
+    # one (vmapped, shard_mapped) trace per new executable
+    assert stats["sharded_compiles"] == 1, stats
+    assert stats["both_compiles"] == 1, stats
+    assert stats["d_auroc"] <= 1e-5, stats
+    assert stats["d_loss"] <= 1e-4, stats
+    assert stats["d_auroc_chunked"] <= 1e-5, stats
+    assert stats["d_auroc_nondiv"] <= 1e-5, stats

@@ -6,6 +6,7 @@ and effective weights), and the derived per-device weights always
 normalise to 1 over the surviving clusters or vanish entirely when
 every head is dead.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,10 +15,10 @@ from hypothesis_compat import given, settings, st
 
 from repro.core.failure import (KIND_CODES, MAX_EVENTS, NO_FAILURE,
                                 PAD_EPOCH, FailureEvent, FailureSpec,
-                                FailureTrace, alive_mask, as_trace,
-                                effective_weights, sample_rate_grid,
-                                sample_traces, stack_traces,
-                                trace_alive_mask)
+                                FailureTrace, _trace_alive_mask_unrolled,
+                                alive_mask, as_trace, effective_weights,
+                                sample_rate_grid, sample_traces,
+                                stack_traces, trace_alive_mask)
 from repro.core.topology import Topology
 
 TOPOLOGIES = [(8, 4), (8, 1), (8, 8), (6, 3), (10, 5), (1, 1)]
@@ -132,6 +133,59 @@ def test_stack_traces_shapes():
 
 
 # ---------------------------------------------------------------------------
+# vectorized alive mask == the unrolled per-slot fold (ISSUE 3 bugfix)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(topo_idx=st.integers(0, len(TOPOLOGIES) - 1),
+       rate_pct=st.integers(10, 100), max_events=st.integers(1, 24),
+       query=st.integers(0, 20), seed=st.integers(0, 2 ** 31 - 1))
+def test_trace_alive_mask_matches_unrolled(topo_idx, rate_pct, max_events,
+                                           query, seed):
+    """The argmax-based last-event-wins reduction equals the reference
+    per-slot fold on sampled multi-event recovery traces."""
+    n, k = TOPOLOGIES[topo_idx]
+    topo = Topology(n, k)
+    rng = np.random.default_rng(seed)
+    for trace in sample_traces(rng, topo, rate_pct / 100.0,
+                               max_events=max_events, rounds=15,
+                               num_traces=2, recover_prob=0.7):
+        got = np.asarray(trace_alive_mask(trace, n, jnp.int32(query)))
+        want = np.asarray(_trace_alive_mask_unrolled(trace, n,
+                                                     jnp.int32(query)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_trace_alive_mask_tie_break_matches_unrolled():
+    """Same-epoch same-device slots: the LAST slot must win in both
+    implementations (the from_events list-order contract)."""
+    topo = Topology(4, 2)
+    fail = FailureEvent(5, "client", device=3)
+    recover = FailureEvent(5, "client", device=3, recover=True)
+    for events in ([fail, recover], [recover, fail]):
+        trace = FailureTrace.from_events(events, topo)
+        got = np.asarray(trace_alive_mask(trace, 4, jnp.int32(5)))
+        want = np.asarray(_trace_alive_mask_unrolled(trace, 4,
+                                                     jnp.int32(5)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_trace_alive_mask_graph_size_constant_in_max_events():
+    """Compile-size regression guard: the traced graph must be O(1) in
+    max_events (the unrolled fold was O(M) `where`s, which blew up
+    compile time at sample_rate_grid's default M = 2 * num_devices)."""
+    def n_eqns(fn, m):
+        trace = FailureTrace.none(m)
+        jaxpr = jax.make_jaxpr(lambda e: fn(trace, 16, e))(jnp.int32(0))
+        return len(jaxpr.jaxpr.eqns)
+
+    small = n_eqns(trace_alive_mask, 8)
+    big = n_eqns(trace_alive_mask, 64)
+    assert big == small, (small, big)       # slot count never shows up
+    assert big < 30, big                    # a fixed handful of ops
+    assert n_eqns(_trace_alive_mask_unrolled, 64) > 3 * 64
+
+
+# ---------------------------------------------------------------------------
 # sampled trace grids (Section IV-B failure-rate sweeps)
 # ---------------------------------------------------------------------------
 @settings(max_examples=40, deadline=None)
@@ -220,6 +274,38 @@ def test_sample_rate_grid_base_traces_join_dedup():
     assert len(traces) == 1                    # nothing beyond the base
     assert traces[0] is base[0]
     assert draws[0.0] == [0, 0, 0, 0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(topo_idx=st.integers(0, len(TOPOLOGIES) - 1),
+       max_events=st.integers(1, 12), rounds=st.integers(2, 30),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_truncation_degrades_to_failure_not_skip(topo_idx, max_events,
+                                                 rounds, seed):
+    """Kept-event pin for the slot-budget fix: at failure_rate 1 every
+    device fails, and a device may be dropped ONLY when the trace is
+    already full — so either all devices appear as failure events or
+    all max_events slots are used.  (The old code skipped a device
+    whose 2-slot failure+recovery no longer fit even when 1 slot
+    remained, violating both.)  With degradation each kept device costs
+    at most 2 slots, so a full trace holds >= ceil(M / 2) failures."""
+    n, k = TOPOLOGIES[topo_idx]
+    topo = Topology(n, k)
+    rng = np.random.default_rng(seed)
+    for trace in sample_traces(rng, topo, 1.0, max_events=max_events,
+                               rounds=rounds, num_traces=2,
+                               recover_prob=1.0):
+        ep = np.asarray(trace.epochs)
+        dev = np.asarray(trace.devices)
+        alv = np.asarray(trace.alive_after)
+        real = ep < PAD_EPOCH
+        fail_devs = {int(d) for d, a in zip(dev[real], alv[real])
+                     if a == 0}
+        used = int(real.sum())
+        assert used == max_events or len(fail_devs) == n, \
+            (used, max_events, fail_devs, n)
+        assert len(fail_devs) >= min(n, (max_events + 1) // 2), \
+            (fail_devs, max_events)
 
 
 def test_sampled_traces_no_dangling_recovery():

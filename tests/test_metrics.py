@@ -2,7 +2,7 @@
 import numpy as np
 from hypothesis_compat import given, settings, st
 
-from repro.training.metrics import auroc, roc_curve
+from repro.training.metrics import auroc, auroc_batch, roc_curve
 
 
 def brute_auroc(scores, labels):
@@ -55,6 +55,49 @@ def test_auroc_matches_brute_force(n, n_pos, ties, seed):
     np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
 
 
+# ---------------------------------------------------------------------------
+# batched AUROC (campaign post-processing hot path)
+# ---------------------------------------------------------------------------
+def test_auroc_batch_known_values():
+    """Every row must equal the scalar rank statistic, including rows
+    with tied scores (average ranks) and tied positive/negative pairs."""
+    labels = np.array([0, 0, 1, 1])
+    rows = np.array([
+        [0.1, 0.2, 0.9, 0.8],     # perfect -> 1.0
+        [0.9, 0.8, 0.1, 0.2],     # inverted -> 0.0
+        [0.5, 0.5, 0.5, 0.5],     # all tied -> 0.5
+        [0.3, 0.7, 0.7, 0.9],     # pos/neg tie -> one half-win
+    ])
+    got = auroc_batch(rows, labels)
+    np.testing.assert_allclose(got, [1.0, 0.0, 0.5, 0.875],
+                               rtol=0, atol=1e-12)
+    for b in range(rows.shape[0]):
+        np.testing.assert_allclose(got[b], auroc(rows[b], labels),
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_auroc_batch_degenerate_labels_nan():
+    assert np.isnan(auroc_batch(np.ones((3, 4)), np.ones(4))).all()
+    assert np.isnan(auroc_batch(np.ones((3, 4)), np.zeros(4))).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(4, 60), b=st.integers(1, 6), ties=st.booleans(),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_auroc_batch_matches_scalar(n, b, ties, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.standard_normal((b, n))
+    if ties:  # quantise to force ties within and across rows
+        scores = np.round(scores, 1)
+    labels = np.zeros(n, np.int32)
+    labels[rng.choice(n, rng.integers(1, n), replace=False)] = 1
+    if labels.sum() == n:
+        labels[0] = 0
+    got = auroc_batch(scores, labels)
+    want = np.array([auroc(scores[i], labels) for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
 def test_roc_curve_endpoints():
     rng = np.random.default_rng(0)
     scores = rng.standard_normal(100)
@@ -64,3 +107,18 @@ def test_roc_curve_endpoints():
     assert tpr.min() >= 0 and tpr.max() <= 1
     # the lowest threshold admits everything
     assert fpr[0] == 1.0 and tpr[0] == 1.0
+    # ... and the +inf sentinel admits nothing: the curve must span all
+    # the way to (0, 0), else trapezoid areas under it are biased
+    assert fpr[-1] == 0.0 and tpr[-1] == 0.0
+
+
+def test_roc_curve_trapezoid_area_matches_auroc():
+    """On tie-free data with a dense enough threshold grid the curve is
+    the full staircase, so its trapezoid area IS the AUROC."""
+    rng = np.random.default_rng(1)
+    scores = rng.permutation(30).astype(np.float64)   # distinct scores
+    labels = np.zeros(30, np.int32)
+    labels[rng.choice(30, 9, replace=False)] = 1
+    fpr, tpr = roc_curve(scores, labels, points=600)
+    area = np.trapezoid(tpr[::-1], fpr[::-1])
+    np.testing.assert_allclose(area, auroc(scores, labels), atol=1e-12)
