@@ -11,23 +11,37 @@ artifacts pick it up):
 * ``chunked``   — the same grid through host-side chunking
   (``chunk_size=16``): bounded device memory, still one compile.
 * ``sweep_padded`` — an all-single-model-cells ``sweep_grid``
-  ((tolfl, 5) / (tolfl, 2) / (fl, 1) / (sbt, 10)) with padded-k
-  topology arrays: compiles are bounded per ISO-TRACKING KIND, not per
-  cell — exactly TWO for this grid (one executable shared by the three
-  non-fl cells, one for the fl cell's isolated-fallback branch).
+  ((tolfl, 5) / (tolfl, 2) / (fl, 1) / (sbt, 10), 128 scenarios) with
+  padded-k topology arrays but ONE DISPATCH PER CELL (``fuse=False``):
+  compiles are bounded per ISO-TRACKING KIND, not per cell — exactly
+  TWO for this grid (one executable shared by the three non-fl cells,
+  one for the fl cell's isolated-fallback branch).
+* ``sweep_fused_cold`` / ``sweep_fused`` — the SAME 128-scenario grid
+  through the fused dispatcher (stacked topology operands, one
+  ``jit(vmap)`` over the flattened (cell x trace x seed) axis per
+  iso-tracking kind: two dispatches total).  ``_cold`` includes the two
+  fused compiles; ``sweep_fused`` re-runs on the warm executable cache —
+  the engine's compile-amortised operating regime (every further grid
+  on these shapes costs 0 traces) and the row the ISSUE 4 win condition
+  tracks against per-cell ``steady`` throughput.
 * ``sampled_max_events`` — compile+run wall of a sampled-rate grid with
   the big default slot budget (max_events = 2N): the regression guard
   for the vectorized ``trace_alive_mask`` (the unrolled fold made this
   compile O(max_events) slower).
 
 The traces are sampled at a fixed RNG seed, so the grid is identical
-run-to-run and numbers are comparable across commits.
+run-to-run and numbers are comparable across commits — provided the
+exec-plan flags match: ``run(shard=..., chunk_size=...)`` (the
+``benchmarks.run --shard / --chunk-size`` CLI) applies an
+:class:`ExecPlan` to every campaign row so sharded / chunked variants
+are reproducible one-liners, but only default-flag runs should be
+committed as the baseline JSON.
 """
 from __future__ import annotations
 
 import json
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -42,11 +56,21 @@ GRID_SEEDS = 4
 ROUNDS = 8
 
 
-def _timed_campaign(label, lines, results, fn):
+def _timed_campaign(label, lines, results, fn, reps: int = 1):
+    """Time ``fn``; steady-state rows pass ``reps > 1`` and report the
+    BEST wall — the `timeit` convention: external noise (this
+    container's cpu budget wobbles for seconds at a time) only ever
+    slows a run down, so the minimum is the best estimate of the true
+    throughput.  Cold rows stay single-shot because a compile only
+    happens once per process.  ``compiles`` counts the whole rep loop —
+    0 stays 0."""
     c0 = campaign.TRACE_COUNT
-    t0 = time.time()
-    res = fn()
-    wall = time.time() - t0
+    walls = []
+    for _ in range(reps):
+        t0 = time.time()
+        res = fn()
+        walls.append(time.time() - t0)
+    wall = min(walls)
     compiles = campaign.TRACE_COUNT - c0
     n = sum(r.num_scenarios for r in
             (res.values() if isinstance(res, dict) else [res]))
@@ -57,7 +81,10 @@ def _timed_campaign(label, lines, results, fn):
     return res
 
 
-def run(out_path: str = "BENCH_campaign.json") -> List[str]:
+def run(out_path: str = "BENCH_campaign.json", shard: bool = False,
+        chunk_size: Optional[int] = None) -> List[str]:
+    plan = (ExecPlan(shard=shard, chunk_size=chunk_size)
+            if (shard or chunk_size) else None)
     prep = prepare("commsml", seed=0, scale=0.25)
     cfg = SimConfig(scheme="tolfl", num_devices=10,
                     num_clusters=prep.clusters, rounds=ROUNDS,
@@ -74,20 +101,27 @@ def run(out_path: str = "BENCH_campaign.json") -> List[str]:
     results: dict = {}
 
     _timed_campaign("oneshot", lines, results,
-                    lambda: run_campaign(*args, cfg, traces, seeds))
+                    lambda: run_campaign(*args, cfg, traces, seeds,
+                                         exec_plan=plan))
     _timed_campaign("steady", lines, results,
-                    lambda: run_campaign(*args, cfg, traces, seeds))
+                    lambda: run_campaign(*args, cfg, traces, seeds,
+                                         exec_plan=plan), reps=3)
     _timed_campaign("chunked", lines, results,
                     lambda: run_campaign(*args, cfg, traces, seeds,
-                                         exec_plan=ExecPlan(chunk_size=16)))
+                                         exec_plan=ExecPlan(
+                                             shard=shard,
+                                             chunk_size=chunk_size or 16)))
     base = SimConfig(num_devices=10, rounds=ROUNDS, lr=prep.lr,
                      dropout=False)
+    grid = dict(scheme_ks=[("tolfl", 5), ("tolfl", 2),
+                           ("fl", 1), ("sbt", 10)],
+                traces=traces, seeds=[0, 1], exec_plan=plan)
     _timed_campaign("sweep_padded", lines, results,
-                    lambda: sweep_grid(*args, base,
-                                       scheme_ks=[("tolfl", 5),
-                                                  ("tolfl", 2),
-                                                  ("fl", 1), ("sbt", 10)],
-                                       traces=traces, seeds=[0, 1]))
+                    lambda: sweep_grid(*args, base, fuse=False, **grid))
+    _timed_campaign("sweep_fused_cold", lines, results,
+                    lambda: sweep_grid(*args, base, **grid))
+    _timed_campaign("sweep_fused", lines, results,
+                    lambda: sweep_grid(*args, base, **grid), reps=3)
 
     # sampled-rate grid at the big slot budget (max_events = 2N): the
     # vectorized trace_alive_mask keeps this compile O(1) in max_events
@@ -95,13 +129,20 @@ def run(out_path: str = "BENCH_campaign.json") -> List[str]:
                                    p_grid=(0.1, 0.3), rounds=ROUNDS,
                                    traces_per_p=8)
     _timed_campaign("sampled_max_events", lines, results,
-                    lambda: run_campaign(*args, cfg, s_traces, [0, 1]))
+                    lambda: run_campaign(*args, cfg, s_traces, [0, 1],
+                                         exec_plan=plan))
 
     assert results["steady"]["compiles"] == 0, results["steady"]
     # 4 cells, 2 compiles: non-fl cells share one executable, fl (whose
     # isolated-fallback branch is extra compute) gets its own
     assert results["sweep_padded"]["compiles"] == 2, \
         results["sweep_padded"]
+    # the fused grid compiles once per iso-tracking kind and then
+    # amortises: the steady re-run costs ZERO traces
+    assert results["sweep_fused_cold"]["compiles"] == 2, \
+        results["sweep_fused_cold"]
+    assert results["sweep_fused"]["compiles"] == 0, \
+        results["sweep_fused"]
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     lines.append(f"# wrote {out_path}")

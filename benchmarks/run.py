@@ -23,6 +23,12 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="run a single bench: kernels|roofline|comm|"
                          "curves|time|expected|auroc|campaign")
+    ap.add_argument("--shard", action="store_true",
+                    help="campaign bench: shard scenario batches across "
+                         "local JAX devices (ExecPlan(shard=True))")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="campaign bench: host-side scenario chunk size "
+                         "(ExecPlan(chunk_size=...))")
     args = ap.parse_args(argv)
 
     t_all = time.time()
@@ -37,7 +43,8 @@ def main(argv=None) -> int:
         lines = bench_expected_perf.run_smoke()
         print("\n===== smoke: sampled failure-rate micro-sweep =====")
         print("\n".join(lines))
-        lines = bench_campaign.run()
+        lines = bench_campaign.run(shard=args.shard,
+                                   chunk_size=args.chunk_size)
         print("\n===== smoke: campaign exec layer (BENCH_campaign.json)"
               " =====")
         print("\n".join(lines))
@@ -50,7 +57,8 @@ def main(argv=None) -> int:
     if want("campaign"):
         from benchmarks import bench_campaign
         sections.append(("campaign exec layer (BENCH_campaign.json)",
-                         bench_campaign.run()))
+                         bench_campaign.run(shard=args.shard,
+                                            chunk_size=args.chunk_size)))
 
     if want("kernels"):
         from benchmarks import bench_kernels

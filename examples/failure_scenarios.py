@@ -7,10 +7,14 @@ sweeps every scheme over them — paper Section IV-B's expected
 performance E[AUROC](p), with the canonical no/client/server-failure
 conditions (Tables III/IV/V in miniature) kept as the p-column anchors.
 
-Everything is batched: per single-model scheme, ONE jitted/vmapped call
-runs the whole (canonical + sampled traces) x seeds grid, and the
-multi-model baselines (FedGroup / IFCA / FeSEM) run their grid through
-one call of the vmapped multi-model campaign core — the seed's version
+Everything is batched AND fused: the non-batch single-model schemes run
+their whole (canonical + sampled traces) x seeds grids through the
+fused campaign dispatcher — tolfl and sbt share literally ONE
+jitted/vmapped call over the flattened (scheme x trace x seed) axis
+(each scheme keeps its own per-topology trace grid; the fl cell's
+isolated-fallback branch dispatches separately) — and the multi-model
+baselines (FedGroup / IFCA / FeSEM) each run their grid through one
+call of the vmapped multi-model campaign core.  The seed's version
 looped Python over every (scheme, scenario, seed) cell.
 
 Run:  PYTHONPATH=src python examples/failure_scenarios.py [--rounds 60]
@@ -22,6 +26,7 @@ import numpy as np
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import MultiModelConfig
 from repro.core.campaign import (ExecPlan, mean_ci95, run_campaign,
+                                 run_fused_campaigns,
                                  run_multimodel_campaign)
 from repro.core.baselines import as_multimodel_trace
 from repro.core.failure import (NO_FAILURE, FailureSpec, as_trace,
@@ -77,24 +82,40 @@ def main():
     print(header)
     print("-" * len(header))
 
+    # per scheme: canonical traces + sampled grids per failure rate
+    # (deduplicated — identical draws, including all-none draws aliasing
+    # the canonical no-failure trace, train once).  The trace grids are
+    # sampled per TOPOLOGY (a tolfl head is a plain client under fl), so
+    # the fused cells carry different trace lists — the fused dispatcher
+    # stacks them along the flattened scenario axis all the same.  batch
+    # centralises everything (and its data arrays differ in shape, so it
+    # cannot fuse): a client failure removes nothing -> column n/a.
+    cells, cell_draws = [], {}
     for label, scheme, k in SINGLE:
         cfg = SimConfig(scheme=scheme, num_devices=args.devices,
                         num_clusters=k, rounds=args.rounds, lr=1e-3)
-        # per scheme: canonical traces + sampled grids per failure rate
-        # (deduplicated — identical draws, including all-none draws
-        # aliasing the canonical no-failure trace, train once), all in
-        # one batched campaign.  batch centralises everything: a client
-        # failure removes nothing, so its column prints n/a.
         topo = cfg.topology()
         head = [as_trace(f, topo, 2 * topo.num_devices)
                 for _, f in canonical
                 if not (scheme == "batch" and f.kind == "client")]
-        traces, draws = sample_rate_grid(
+        traces, cell_draws[scheme] = sample_rate_grid(
             np.random.default_rng(0), topo, P_GRID, args.rounds,
             args.traces_per_p, base_traces=head)
-        res = run_campaign(ae, dx, counts, split.test_x, split.test_y,
-                           cfg, traces, seeds=range(args.seeds),
-                           exec_plan=plan)
+        cells.append((cfg, traces))
+    fused = run_fused_campaigns(
+        ae, dx, counts, split.test_x, split.test_y,
+        [(cfg, tr) for cfg, tr in cells if cfg.scheme != "batch"],
+        seeds=range(args.seeds), exec_plan=plan)
+    results = dict(zip((c[0].scheme for c in cells
+                        if c[0].scheme != "batch"), fused))
+    for cfg, traces in cells:
+        if cfg.scheme == "batch":
+            results[cfg.scheme] = run_campaign(
+                ae, dx, counts, split.test_x, split.test_y, cfg, traces,
+                seeds=range(args.seeds), exec_plan=plan)
+
+    for label, scheme, k in SINGLE:
+        res, draws = results[scheme], cell_draws[scheme]
         row, j = f"{label:<12}", 0
         for sname, fail in canonical:
             if scheme == "batch" and fail.kind == "client":

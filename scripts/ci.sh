@@ -16,4 +16,23 @@ echo "== sharded campaign parity (forced 8-device host platform) =="
 python -m pytest -q tests/test_campaign_exec.py -k sharded
 
 echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
+# stash the committed baseline before --smoke overwrites it, so the
+# perf trajectory of this change is visible in the CI log below
+baseline="${TMPDIR:-/tmp}/bench_campaign_baseline.json"
+rm -f "$baseline"
+cp BENCH_campaign.json "$baseline" 2>/dev/null || true
 python -m benchmarks.run --smoke
+
+echo "== campaign scenarios/sec vs committed baseline =="
+python - "$baseline" <<'PY'
+import json, os, sys
+base_path = sys.argv[1]
+fresh = json.load(open("BENCH_campaign.json"))
+base = json.load(open(base_path)) if os.path.exists(base_path) else {}
+print(f"{'row':<22}{'base':>9}{'fresh':>9}{'delta':>8}")
+for row in sorted(fresh):
+    f = fresh[row]["scenarios_per_s"]
+    b = base.get(row, {}).get("scenarios_per_s")
+    delta = f"{(f - b) / b * 100.0:+.0f}%" if b else "new"
+    print(f"{row:<22}{b if b is not None else '-':>9}{f:>9}{delta:>8}")
+PY

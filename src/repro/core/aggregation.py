@@ -47,10 +47,26 @@ def streaming_weighted_mean(gs: Sequence[Pytree], ns: Sequence[jax.Array]
     return n, g
 
 
-def stacked_streaming_mean(gs: Pytree, ns: jax.Array
+def stacked_streaming_mean(gs: Pytree, ns: jax.Array, unroll: int = 16
                            ) -> Tuple[jax.Array, Pytree]:
-    """Same, but inputs stacked on a leading axis and combined by
-    ``lax.scan`` — the jit-friendly form used by the simulator."""
+    """Same, but inputs stacked on a leading axis — the jit-friendly
+    form used by the simulator.
+
+    Small stacks (cluster counts; ``k <= unroll``) combine through a
+    Python-unrolled chain of the SAME ``combine_pair`` steps in the same
+    order — bit-identical to the ``lax.scan`` form, but one fusable
+    elementwise graph instead of a sequential while-loop, which is a
+    measurable win inside the batched campaign round loop where the
+    combine competes with the gradient work.  Large stacks keep the
+    scan (bounded graph size)."""
+    if ns.shape[0] <= unroll:
+        n = jnp.zeros(())
+        g = jax.tree.map(lambda x: jnp.zeros_like(x[0]), gs)
+        for j in range(ns.shape[0]):
+            n, g = combine_pair(n, g, ns[j],
+                                jax.tree.map(lambda x: x[j], gs))
+        return n, g
+
     def step(carry, xs):
         n, g = carry
         ni, gi = xs

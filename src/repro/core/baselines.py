@@ -16,14 +16,18 @@ per-sample min reconstruction error over instances (the multi-model
 oracle score).
 
 Like :mod:`repro.core.simulate`, the whole engine is a pure *core*
-function whose only dynamic inputs are ``(dx, counts, valid, tx, trace,
-seed)`` — everything else (scheme, M, rounds, ...) is closed over
-statically.  The trace split into client events (device mask) and
-server events (group mask) happens in-graph, so the core ``vmap``s over
-stacked traces: :func:`repro.core.campaign.run_multimodel_campaign`
-sweeps a whole (trace x seed) grid through ONE compiled executable,
-while :func:`run_multimodel` stays the single-scenario entry point on
-the same cached jitted core.
+function whose only dynamic inputs are ``(dx, counts, valid, tx,
+model_valid, trace, seed)`` — everything else (scheme, rounds, ...) is
+closed over statically, and ``cfg.num_models`` is only the STATIC model
+axis length: the live-model count arrives in the ``model_valid`` mask,
+so (scheme, M) sweep cells padded to a common max M share one compiled
+executable (:func:`repro.core.campaign.sweep_grid`'s fused dispatch).
+The trace split into client events (device mask) and server events
+(group mask) happens in-graph, so the core ``vmap``s over stacked
+traces: :func:`repro.core.campaign.run_multimodel_campaign` sweeps a
+whole (trace x seed) grid through ONE compiled executable, while
+:func:`run_multimodel` stays the single-scenario entry point on the
+same cached jitted core.
 
 Failure semantics: a *client* failure removes that device; a *server*
 failure kills the aggregator of group 0 — that instance freezes and its
@@ -40,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,13 +98,21 @@ def _flat(tree):
 
 
 def _kmeans_groups(vectors: jax.Array, m: int, key: jax.Array,
-                   iters: int = 20) -> jax.Array:
+                   iters: int = 20,
+                   center_valid: Optional[jax.Array] = None) -> jax.Array:
     """Tiny in-graph k-means for FedGroup's static gradient-similarity
     grouping (cosine metric: rows are L2-normalised).
 
     Traceable/vmappable: centers seed from a random permutation of the
     data, and a group that empties during Lloyd iterations is RE-SEEDED
     on a random data point instead of keeping a stale center.
+
+    ``center_valid`` (shape ``(m,)``, 1 = real) supports the padded-M
+    sweep path: padded center slots never win the assignment argmax, and
+    every per-center random draw is keyed on the CENTER INDEX (scalar
+    ``fold_in`` draws, not one shape-``(m,)`` draw), so the assignment
+    of the valid centers is bit-identical whatever ``m`` they are padded
+    to.
     """
     n = vectors.shape[0]
     if m > n:
@@ -111,19 +123,26 @@ def _kmeans_groups(vectors: jax.Array, m: int, key: jax.Array,
     init_key, reseed_key = jax.random.split(key)
     centers = v[jax.random.permutation(init_key, n)[:m]]
 
+    def masked_assign(sim):
+        if center_valid is not None:
+            sim = jnp.where(center_valid[None, :] > 0, sim, -jnp.inf)
+        return jnp.argmax(sim, axis=1)
+
     def step(centers, i):
-        assign = jnp.argmax(v @ centers.T, axis=1)
+        assign = masked_assign(v @ centers.T)
         onehot = jax.nn.one_hot(assign, m, dtype=v.dtype)      # (n, m)
         cnt = jnp.sum(onehot, axis=0)                          # (m,)
         means = onehot.T @ v / jnp.maximum(cnt[:, None], 1.0)
         means = means / (jnp.linalg.norm(means, axis=1,
                                          keepdims=True) + 1e-9)
-        reseed = v[jax.random.randint(jax.random.fold_in(reseed_key, i),
-                                      (m,), 0, n)]
+        ki = jax.random.fold_in(reseed_key, i)
+        idx = jax.vmap(lambda j: jax.random.randint(
+            jax.random.fold_in(ki, j), (), 0, n))(jnp.arange(m))
+        reseed = v[idx]
         return jnp.where((cnt > 0)[:, None], means, reseed), None
 
     centers, _ = jax.lax.scan(step, centers, jnp.arange(iters))
-    return jnp.argmax(v @ centers.T, axis=1)
+    return masked_assign(v @ centers.T)
 
 
 def as_multimodel_trace(failure: Failure, num_devices: int,
@@ -183,8 +202,20 @@ def prepare_multimodel_arrays(device_x: np.ndarray,
 
 
 def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
-    """Pure scenario function: (dx, counts, valid, tx, trace, seed)
-    -> :class:`MultiOutputs`, mirroring ``simulate._build_core``.
+    """Pure scenario function: (dx, counts, valid, tx, model_valid,
+    trace, seed) -> :class:`MultiOutputs`, mirroring
+    ``simulate._build_core``.
+
+    ``model_valid`` (shape ``(M,)``, 1 = real) is the multi-model twin of
+    the single-model path's ``head_valid``: ``cfg.num_models`` is only
+    the STATIC length of the model axis, and the number of LIVE model
+    instances arrives in the mask, so cells of a (scheme, M) sweep padded
+    to a common max M share ONE compiled executable per scheme
+    (:func:`repro.core.campaign.sweep_grid`).  Padded model slots never
+    win an assignment, aggregate zero devices (so they stay at init), and
+    are masked out of the per-sample-min loss — live-model results are
+    bit-identical to the unpadded build.  All-ones restores the legacy
+    semantics exactly.
 
     PRNG discipline: the root key splits into disjoint streams for model
     inits, FedGroup's grouping probe (probe init / probe grads / k-means
@@ -194,7 +225,8 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
     N, M = cfg.num_devices, cfg.num_models
     local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
 
-    def core(dx, counts, valid, tx, trace: FailureTrace, seed):
+    def core(dx, counts, valid, tx, model_valid, trace: FailureTrace,
+             seed):
         key = jax.random.PRNGKey(seed)
         k_init, k_group, k_train = jax.random.split(key, 3)
         # M model instances with different inits
@@ -205,6 +237,8 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
         models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
 
         client_tr, server_tr = _split_trace(trace)
+        # number of LIVE models (a traced scalar; == M when unpadded)
+        m_live = jnp.maximum(jnp.sum(model_valid), 1.0).astype(jnp.int32)
 
         # ---- initial assignment ----
         if cfg.scheme == "fedgroup":
@@ -213,9 +247,10 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
             g0 = jax.vmap(lambda x, v, k_: _flat(grad_fn(p0, x, v, k_)),
                           in_axes=(0, 0, 0))(
                 dx, valid, jax.random.split(k_pgrad, N))
-            assign0 = _kmeans_groups(g0, M, k_km)
+            assign0 = _kmeans_groups(g0, M, k_km,
+                                     center_valid=model_valid)
         else:
-            assign0 = jnp.arange(N) % M
+            assign0 = jnp.arange(N) % m_live
 
         def device_losses(models_, x, v, k_):
             """(M,) local loss of each model instance on one device."""
@@ -229,9 +264,12 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
             a_grp = trace_alive_mask(server_tr, M, epoch)
 
             # ---- (re)assignment ----
+            # padded model slots never win: their loss/distance is +inf
             if cfg.scheme == "ifca":
                 losses = jax.vmap(device_losses, in_axes=(None, 0, 0, 0))(
                     models_, dx, valid, dkeys)          # (N, M)
+                losses = jnp.where(model_valid[None, :] > 0, losses,
+                                   jnp.inf)
                 assign = jnp.argmin(losses, axis=1)
             elif cfg.scheme == "fesem":
                 # e-step: distance between one-step-updated local params
@@ -245,7 +283,8 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
                     d = jax.vmap(lambda j: jnp.sum(jnp.square(
                         fu - _flat(jax.tree.map(lambda t: t[j],
                                                 models_)))))(jnp.arange(M))
-                    return jnp.argmin(d)
+                    return jnp.argmin(jnp.where(model_valid > 0, d,
+                                                jnp.inf))
                 assign = jax.vmap(dev_assign)(dx, valid, dkeys, assign)
             # fedgroup: static
 
@@ -274,7 +313,11 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
 
             scores = jax.vmap(
                 lambda p: AE.anomaly_scores(p, ae_cfg, tx))(models_)
-            tl = jnp.mean(jnp.min(scores, axis=0))
+            # per-sample min over LIVE models only (padded slots hold
+            # untrained inits whose scores must not leak into the loss)
+            tl = jnp.mean(jnp.min(
+                jnp.where(model_valid[:, None] > 0, scores, jnp.inf),
+                axis=0))
             return (models_, assign, rkey), tl
 
         (models, assign, _), losses = jax.lax.scan(
@@ -314,7 +357,9 @@ def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
     tx = jnp.asarray(test_x)
     core = _jitted_multimodel_core(ae_cfg, cfg)
-    out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
+    out = core(dx, counts, valid, tx,
+               jnp.ones((cfg.num_models,), jnp.float32), trace,
+               jnp.int32(cfg.seed))
 
     final_scores = np.asarray(out.final_scores)                # (M, T)
     per_model = auroc_batch(final_scores, np.asarray(test_y))

@@ -33,45 +33,49 @@ Execution scales along three independent axes (:class:`ExecPlan`):
 * **scenario sharding** — ``ExecPlan(shard=True)`` pads the
   (trace x seed) batch to a device-divisible size and dispatches it
   through a ``shard_map`` over the local-device "scenario" mesh axis
-  (:func:`repro.sharding.compat_shard_map`), so B scenarios run on D
+  (:func:`repro.sharding.scenario_shard_map`), so B scenarios run on D
   devices in B/D time;
 * **host chunking** — ``ExecPlan(chunk_size=c)`` slices the batch into
   same-shape chunks (the last one padded, padding stripped after), so
   arbitrarily large grids run in bounded device memory with ONE compile.
 
-Different schemes / k imply different topologies, so a (scheme x k) grid
-is a Python loop of batched calls — :func:`sweep_grid`.  By default the
-single-model cells pad their cluster arrays (head indices,
-``device_cluster_array``) to the grid's max k and feed them to the core
-as dynamic operands (:func:`repro.core.simulate._build_core_arrays`), so
-single-model cells share one compiled executable PER ISO-TRACKING KIND —
-all fl cells one, all sbt/tolfl cells another (the fl fallback branch
-roughly doubles per-round compute, so non-fl cells never pay for it) —
-instead of one compile per cell; padded cluster slots are exact no-ops
-in the combine algebra, so results match the per-cell path bit-for-bit
-(``pad_k=False`` keeps the legacy one-compile-per-cell build, pinned
-equal by tests).
+Different schemes / k imply different topologies, but topology is just
+ARRAYS to the core (:func:`repro.core.simulate._build_core_arrays`), so
+a (scheme x k) grid needs neither one compile per cell NOR one dispatch
+per cell — :func:`sweep_grid` stacks the padded per-cell cluster arrays
+(head indices, ``device_cluster_array``, ``head_valid`` — padded to the
+per-kind max k) along the scenario axis and runs ALL cells of one
+iso-tracking kind through a SINGLE ``jit(vmap)`` over the flattened
+(cell x trace x seed) batch: all sbt/tolfl cells in one dispatch, all
+fl cells in another (the fl fallback branch costs extra per-round
+compute, so non-fl cells never pay for it).  Multi-model cells fuse the
+same way per scheme: the model axis pads to the grid's max M with a
+``model_valid`` mask, so (ifca, 2) and (ifca, 3) share one executable
+and one dispatch.  Padded cluster/model slots are exact no-ops in the
+combine algebra, so results match the per-cell paths bit-for-bit
+(``fuse=False`` restores one dispatch per cell, ``pad_k=False`` the
+one-compile-per-cell static build; both pinned equal by tests).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import (MultiModelConfig, _build_multimodel_core,
                                   as_multimodel_trace,
                                   prepare_multimodel_arrays)
-from repro.core.failure import Failure, as_trace, stack_traces
+from repro.core.failure import (Failure, FailureTrace, as_trace,
+                                concat_traces, stack_traces)
 from repro.core.simulate import (SimConfig, _build_core, _build_core_arrays,
                                  _prepare_arrays)
-from repro.sharding import compat_shard_map
+from repro.sharding import scenario_shard_map
 from repro.training.metrics import auroc_batch
 
 #: incremented each time a batched campaign core is (re)traced — lets
@@ -220,78 +224,86 @@ def _scenario_grid(num_traces: int, seeds: Sequence[int]
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
 def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
-                track_iso: bool = False):
+                track_iso: bool = False, fused: bool = False):
     """Batched scenario executable.
 
     kind
         "single" (SimConfig core) or "multi" (MultiModelConfig core).
     k_pad
-        None -> topology closed over statically (4 broadcast args);
-        int  -> topology enters as dynamic arrays padded to ``k_pad``
-        (7 broadcast args) — the compile-amortised sweep path.  The
-        ``cfg`` key is then scheme/k-normalised by the caller so every
-        sweep cell of the same ``track_iso`` kind hits the SAME cache
-        entry (``track_iso`` stays in the key: the fl fallback branch
-        roughly doubles the per-round compute, so non-fl cells must not
-        pay for it — one executable per kind, not per cell).
+        None -> topology closed over statically (the single-campaign
+        path); int -> topology enters as dynamic arrays padded to
+        ``k_pad`` — the compile-amortised sweep path.  The ``cfg`` key
+        is then scheme/k-normalised by the caller so every sweep cell of
+        the same ``track_iso`` kind hits the SAME cache entry
+        (``track_iso`` stays in the key: the fl fallback branch costs
+        extra per-round compute, so non-fl cells must not pay for it —
+        one executable per kind, not per cell).
+    fused
+        The cell-varying operands (padded cluster arrays for "single",
+        the ``model_valid`` mask for "multi") move from the broadcast
+        group into the MAPPED group, so one dispatch sweeps a flattened
+        (cell x trace x seed) scenario axis where every row carries its
+        own topology — the whole-grid fused path.
     ndev
         None -> plain ``jit``; int -> ``jit(shard_map(...))`` over an
-        (ndev,)-device "scenario" mesh, batch axis sharded, data
-        replicated.
+        (ndev,)-device "scenario" mesh, batch axis sharded, broadcasts
+        replicated (:func:`repro.sharding.scenario_shard_map`).
     """
     if kind == "multi":
         core = _build_multimodel_core(ae_cfg, cfg)
-        n_bcast = 4
+        n_bcast, n_mapped = (4, 3) if fused else (5, 2)
     elif k_pad is None:
         core = _build_core(ae_cfg, cfg, score_history=False)
-        n_bcast = 4
+        n_bcast, n_mapped = 4, 2
     else:
         core = _build_core_arrays(ae_cfg, cfg, cfg.num_devices, k_pad,
                                   track_iso=track_iso,
                                   score_history=False)
-        n_bcast = 7
+        n_bcast, n_mapped = (4, 5) if fused else (7, 2)
 
     def scenario(*args):
         global TRACE_COUNT
         TRACE_COUNT += 1          # runs at trace time only: 1 per compile
         return core(*args)
 
-    vm = jax.vmap(scenario, in_axes=(None,) * n_bcast + (0, 0))
+    vm = jax.vmap(scenario,
+                  in_axes=(None,) * n_bcast + (0,) * n_mapped)
     if ndev is None:
         return jax.jit(vm)
-    mesh = jax.make_mesh((ndev,), ("scenario",))
-    specs = (P(),) * n_bcast + (P("scenario"), P("scenario"))
-    return jax.jit(compat_shard_map(vm, mesh, in_specs=specs,
-                                    out_specs=P("scenario")))
+    return jax.jit(scenario_shard_map(vm, ndev, n_bcast, n_mapped))
 
 
-def _run_batched(batched_call, bcast_args, batch_traces, seed_arr,
-                 plan: Optional[ExecPlan]):
-    """Dispatch a stacked (trace x seed) batch through ``batched_call``
-    with host-side chunking and batch padding per ``plan``; returns the
-    outputs pytree as numpy arrays with the padding stripped."""
+def _run_batched(batched_call, bcast_args, mapped, plan: Optional[ExecPlan]):
+    """Dispatch a stacked scenario batch through ``batched_call`` with
+    host-side chunking and batch padding per ``plan``; returns the
+    outputs pytree as numpy arrays with the padding stripped.
+
+    ``mapped`` is a tuple of pytrees sharing the scenario leading axis —
+    (traces, seeds) for a single campaign, plus the stacked per-cell
+    topology/model-mask operands on the fused sweep path."""
     plan = plan or ExecPlan()
-    B = int(seed_arr.shape[0])
+    B = int(jax.tree.leaves(mapped)[0].shape[0])
     chunk = min(plan.chunk_size or B, B)
     if plan.shard:
         ndev = plan.num_devices()
         chunk = -(-chunk // ndev) * ndev      # device-divisible chunks
     n_chunks = -(-B // chunk)
     b_pad = n_chunks * chunk
-    # pad by repeating scenario 0 — any valid scenario works, the rows
-    # are stripped below before post-processing
-    sel = np.concatenate([np.arange(B), np.zeros(b_pad - B, np.int64)])
-    traces_p = jax.tree.map(lambda x: x[sel], batch_traces)
-    seeds_p = jnp.asarray(seed_arr)[sel]
+    if b_pad != B:
+        # pad by repeating scenario 0 — any valid scenario works, the
+        # rows are stripped below before post-processing
+        sel = np.concatenate([np.arange(B), np.zeros(b_pad - B, np.int64)])
+        mapped = jax.tree.map(lambda x: x[sel], mapped)
     outs = []
     for c in range(n_chunks):
         sl = slice(c * chunk, (c + 1) * chunk)
         out = batched_call(*bcast_args,
-                           jax.tree.map(lambda x: x[sl], traces_p),
-                           seeds_p[sl])
+                           *jax.tree.map(lambda x: x[sl], mapped))
         # materialise on the host per chunk: device memory stays bounded
         # by chunk_size however large the grid is
         outs.append(jax.tree.map(np.asarray, out))
+    if n_chunks == 1 and b_pad == B:
+        return outs[0]
     full = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
     return jax.tree.map(lambda x: x[:B], full)
 
@@ -324,7 +336,8 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     chooses scenario sharding / host chunking (results are unchanged);
     ``pad_k`` (int >= cfg's cluster count) routes through the padded-k
     core so campaigns with different (scheme, k) share one executable —
-    :func:`sweep_grid` sets it to the grid's max k."""
+    :func:`sweep_grid`'s per-cell path sets it to the grid's per-kind
+    max k."""
     topo = cfg.topology()
     norm = [as_trace(t, topo) for t in traces]
     trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
@@ -354,7 +367,8 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
             if exec_plan is not None and exec_plan.shard else None)
     batched = _executable("single", ae_cfg, key_cfg, pad_k, ndev,
                           track_iso)
-    out = _run_batched(batched, bcast, batch_traces, seed_arr, exec_plan)
+    out = _run_batched(batched, bcast,
+                       (batch_traces, jnp.asarray(seed_arr)), exec_plan)
 
     return _post_process(cfg, out, trace_idx, seed_arr, test_y,
                          target_loss)
@@ -362,6 +376,18 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
 
 def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
                   ) -> CampaignResult:
+    fields = _post_process_arrays(cfg.scheme == "fl", out, test_y,
+                                  target_loss)
+    return CampaignResult(cfg=cfg, trace_index=trace_idx, seed=seed_arr,
+                          **fields)
+
+
+def _post_process_arrays(track_iso: bool, out, test_y, target_loss
+                         ) -> Dict[str, np.ndarray]:
+    """Scenario-aligned result arrays of a stacked :class:`SimOutputs`
+    batch (ONE ``auroc_batch`` sweep over the whole batch, however many
+    sweep cells were flattened into it) — everything
+    :class:`CampaignResult` stores except the grid bookkeeping."""
     losses = np.asarray(out.losses)                    # (B, R)
     iso_losses = np.asarray(out.iso_losses)
     finals = np.asarray(out.final_scores)              # (B, T)
@@ -373,7 +399,6 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
 
     test_y = np.asarray(test_y)
     final_auroc = auroc_batch(finals, test_y)
-    track_iso = (cfg.scheme == "fl")
     iso_auroc = np.full(B, np.nan)
     iso_active = np.zeros(B, bool)
     if track_iso:
@@ -402,11 +427,10 @@ def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
         first = reached.argmax(axis=1) + 1.0
         r2l = np.where(any_hit, first, np.nan)
 
-    return CampaignResult(cfg=cfg, trace_index=trace_idx, seed=seed_arr,
-                          auroc_used=auroc_used, final_auroc=final_auroc,
-                          iso_auroc=iso_auroc, iso_active=iso_active,
-                          loss_curves=losses, iso_loss_curves=iso_losses,
-                          rounds_to_loss=r2l)
+    return dict(auroc_used=auroc_used, final_auroc=final_auroc,
+                iso_auroc=iso_auroc, iso_active=iso_active,
+                loss_curves=losses, iso_loss_curves=iso_losses,
+                rounds_to_loss=r2l)
 
 
 def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
@@ -441,21 +465,236 @@ def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
     ndev = (exec_plan.num_devices()
             if exec_plan is not None and exec_plan.shard else None)
     batched = _executable("multi", ae_cfg, key_cfg, None, ndev)
-    out = _run_batched(batched, (dx, counts, valid, tx), batch_traces,
-                       seed_arr, exec_plan)
+    model_valid = jnp.ones((cfg.num_models,), jnp.float32)
+    out = _run_batched(batched, (dx, counts, valid, tx, model_valid),
+                       (batch_traces, jnp.asarray(seed_arr)), exec_plan)
 
-    finals = np.asarray(out.final_scores)              # (B, M, T)
-    B, M = finals.shape[0], cfg.num_models
-    test_y = np.asarray(test_y)
-    per_model = auroc_batch(finals.reshape(B * M, -1),
-                            test_y).reshape(B, M)
-    best = per_model.max(axis=1)
-    multi = auroc_batch(finals.min(axis=1), test_y)
+    best, multi = _multi_metrics(np.asarray(out.final_scores), test_y)
     return MultiCampaignResult(cfg=cfg, trace_index=trace_idx,
                                seed=seed_arr, best_auroc=best,
                                multi_auroc=multi,
                                loss_curves=np.asarray(out.losses),
                                assignments=np.asarray(out.assignments))
+
+
+def _multi_metrics(finals: np.ndarray, test_y,
+                   model_valid: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """(best, multi) AUROC columns of stacked (B, M, T) final scores in
+    TWO ``auroc_batch`` sweeps total, however many sweep cells were
+    flattened into the batch.  ``model_valid`` (B, M) masks padded model
+    slots (fused padded-M cells): they never win ``best`` and stay out
+    of the per-sample-min ``multi`` score."""
+    B, M = finals.shape[0], finals.shape[1]
+    test_y = np.asarray(test_y)
+    per_model = auroc_batch(finals.reshape(B * M, -1),
+                            test_y).reshape(B, M)
+    if model_valid is None:
+        return per_model.max(axis=1), auroc_batch(finals.min(axis=1),
+                                                  test_y)
+    live = model_valid > 0
+    best = np.where(live, per_model, -np.inf).max(axis=1)
+    min_scores = np.where(live[:, :, None], finals, np.inf).min(axis=1)
+    return best, auroc_batch(min_scores, test_y)
+
+
+def _single_trace_key(traces: Sequence[Failure], topo) -> tuple:
+    """How a trace list resolves against a topology: pure
+    :class:`FailureTrace` lists are topology-independent (one stacked
+    batch serves every sweep cell), legacy specs default their targets
+    from the heads / cluster-0 layout."""
+    if all(isinstance(t, FailureTrace) for t in traces):
+        return ()
+    return (tuple(topo.heads), tuple(topo.clusters[0]))
+
+
+def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+                        device_counts: np.ndarray, test_x: np.ndarray,
+                        test_y: np.ndarray,
+                        cells: Sequence[Tuple[SimConfig,
+                                              Sequence[Failure]]],
+                        seeds: Sequence[int],
+                        target_loss: Optional[float] = None,
+                        exec_plan: Optional[ExecPlan] = None,
+                        k_pad: Optional[int] = None
+                        ) -> List[CampaignResult]:
+    """Many single-model campaign cells, fused into ONE dispatch per
+    iso-tracking kind.
+
+    ``cells`` pairs each :class:`SimConfig` with its trace list (lists
+    may differ per cell — e.g. per-topology sampled grids — and may be
+    the same object, in which case padding/stacking happens once, not
+    per cell).  Cells whose static config agrees on everything but
+    (scheme, num_clusters) are grouped by iso-tracking kind; each
+    group's cluster arrays are padded to ``k_pad`` (default: the group
+    max k), stacked per cell, repeated along the per-cell scenario
+    batch, and the whole flattened (cell x trace x seed) axis runs
+    through a single ``jit(vmap)`` — sharded/chunked as one batch by
+    ``exec_plan`` — instead of one dispatch per cell.  Padded slots are
+    exact no-ops, so per-cell results match :func:`run_campaign`.
+    Post-processing is likewise vectorised: one ``auroc_batch`` sweep
+    per group, sliced back into per-cell :class:`CampaignResult`\\ s
+    (aligned with ``cells``).
+
+    "batch" cells centralise the data (different array shapes) and are
+    rejected — run them through :func:`run_campaign`.
+    """
+    if not cells:
+        return []
+    for cfg, _ in cells:
+        if cfg.scheme == "batch":
+            raise ValueError("'batch' cells centralise the data onto one "
+                             "device (different array shapes); run them "
+                             "via run_campaign")
+    dx, counts, valid = _prepare_arrays(cells[0][0], device_x,
+                                        device_counts)
+    tx = jnp.asarray(test_x)
+    ndev = (exec_plan.num_devices()
+            if exec_plan is not None and exec_plan.shard else None)
+
+    groups: Dict[Tuple[SimConfig, bool], List[int]] = {}
+    for i, (cfg, _) in enumerate(cells):
+        key_cfg = dataclasses.replace(cfg, seed=0, scheme="tolfl",
+                                      num_clusters=1)
+        groups.setdefault((key_cfg, cfg.scheme == "fl"), []).append(i)
+
+    results: List[Optional[CampaignResult]] = [None] * len(cells)
+    trace_cache: dict = {}    # one stacked batch per distinct resolution
+    for (key_cfg, track_iso), idxs in groups.items():
+        kp = k_pad or max(cells[i][0].topology().num_clusters
+                          for i in idxs)
+        cids_l, heads_l, hv_l, tr_l = [], [], [], []
+        meta = []
+        for i in idxs:
+            cfg, traces = cells[i]
+            topo = cfg.topology()
+            assert dx.shape[0] == topo.num_devices, (dx.shape,
+                                                     topo.num_devices)
+            ck = (tuple(id(t) for t in traces),
+                  _single_trace_key(traces, topo))
+            if ck not in trace_cache:
+                norm = [as_trace(t, topo) for t in traces]
+                trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
+                if len(trace_idx) == 0:
+                    raise ValueError("empty campaign: need >=1 trace and "
+                                     ">=1 seed")
+                stacked = stack_traces(norm)
+                trace_cache[ck] = (
+                    jax.tree.map(lambda x: x[trace_idx], stacked),
+                    trace_idx, seed_arr)
+            batch_traces, trace_idx, seed_arr = trace_cache[ck]
+            b = len(seed_arr)
+            cids, heads, hvalid = _padded_topology_arrays(topo, kp)
+            cids_l.append(jnp.broadcast_to(cids, (b,) + cids.shape))
+            heads_l.append(jnp.broadcast_to(heads, (b,) + heads.shape))
+            hv_l.append(jnp.broadcast_to(hvalid, (b,) + hvalid.shape))
+            tr_l.append(batch_traces)
+            meta.append((i, cfg, trace_idx, seed_arr, b))
+
+        mapped = (jnp.concatenate(cids_l), jnp.concatenate(heads_l),
+                  jnp.concatenate(hv_l), concat_traces(tr_l),
+                  jnp.asarray(np.concatenate([m[3] for m in meta])))
+        batched = _executable("single", ae_cfg, key_cfg, kp, ndev,
+                              track_iso, fused=True)
+        out = _run_batched(batched, (dx, counts, valid, tx), mapped,
+                           exec_plan)
+        fields = _post_process_arrays(track_iso, out, test_y, target_loss)
+        off = 0
+        for i, cfg, trace_idx, seed_arr, b in meta:
+            cell = {name: arr[off:off + b]
+                    for name, arr in fields.items()}
+            results[i] = CampaignResult(cfg=cfg, trace_index=trace_idx,
+                                        seed=seed_arr, **cell)
+            off += b
+    return results
+
+
+def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
+                                   device_x: np.ndarray,
+                                   device_counts: np.ndarray,
+                                   test_x: np.ndarray, test_y: np.ndarray,
+                                   cells: Sequence[Tuple[MultiModelConfig,
+                                                         Sequence[Failure]]],
+                                   seeds: Sequence[int],
+                                   exec_plan: Optional[ExecPlan] = None,
+                                   pad_m: Optional[int] = None
+                                   ) -> List[MultiCampaignResult]:
+    """Many multi-model baseline cells, fused into ONE dispatch per
+    scheme — the multi-model twin of :func:`run_fused_campaigns`.
+
+    Cells whose static config agrees on everything but ``num_models``
+    are grouped (the assignment rule is structural, so fedgroup / ifca /
+    fesem cells always compile separately); each group's model axis is
+    padded to ``pad_m`` (default: the group max M) with a
+    ``model_valid`` mask stacked along the flattened (cell x trace x
+    seed) axis, so cells with DIFFERENT model counts share one compiled
+    executable and one dispatch.  Padded model slots are exact no-ops
+    (never assigned, never aggregated, masked out of the loss/metrics),
+    so per-cell results match :func:`run_multimodel_campaign`."""
+    if not cells:
+        return []
+    dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
+    tx = jnp.asarray(test_x)
+    ndev = (exec_plan.num_devices()
+            if exec_plan is not None and exec_plan.shard else None)
+
+    groups: Dict[MultiModelConfig, List[int]] = {}
+    for i, (cfg, _) in enumerate(cells):
+        key_cfg = dataclasses.replace(cfg, seed=0, num_models=0)
+        groups.setdefault(key_cfg, []).append(i)
+
+    results: List[Optional[MultiCampaignResult]] = [None] * len(cells)
+    trace_cache: dict = {}
+    for key_cfg, idxs in groups.items():
+        mp = pad_m or max(cells[i][0].num_models for i in idxs)
+        mv_l, tr_l = [], []
+        meta = []
+        for i in idxs:
+            cfg, traces = cells[i]
+            assert dx.shape[0] == cfg.num_devices, (dx.shape,
+                                                    cfg.num_devices)
+            ck = (tuple(id(t) for t in traces), cfg.num_devices)
+            if ck not in trace_cache:
+                norm = [as_multimodel_trace(t, cfg.num_devices)
+                        for t in traces]
+                trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
+                if len(trace_idx) == 0:
+                    raise ValueError("empty campaign: need >=1 trace and "
+                                     ">=1 seed")
+                stacked = stack_traces(norm)
+                trace_cache[ck] = (
+                    jax.tree.map(lambda x: x[trace_idx], stacked),
+                    trace_idx, seed_arr)
+            batch_traces, trace_idx, seed_arr = trace_cache[ck]
+            b = len(seed_arr)
+            assert mp >= cfg.num_models, (mp, cfg.num_models)
+            mv = np.zeros((mp,), np.float32)
+            mv[:cfg.num_models] = 1.0
+            mv_l.append(jnp.broadcast_to(jnp.asarray(mv), (b, mp)))
+            tr_l.append(batch_traces)
+            meta.append((i, cfg, trace_idx, seed_arr, b))
+
+        mapped = (jnp.concatenate(mv_l), concat_traces(tr_l),
+                  jnp.asarray(np.concatenate([m[3] for m in meta])))
+        exe_cfg = dataclasses.replace(key_cfg, num_models=mp)
+        batched = _executable("multi", ae_cfg, exe_cfg, None, ndev,
+                              fused=True)
+        out = _run_batched(batched, (dx, counts, valid, tx), mapped,
+                           exec_plan)
+        model_valid = np.asarray(mapped[0])
+        best, multi = _multi_metrics(np.asarray(out.final_scores),
+                                     test_y, model_valid)
+        losses = np.asarray(out.losses)
+        assigns = np.asarray(out.assignments)
+        off = 0
+        for i, cfg, trace_idx, seed_arr, b in meta:
+            sl = slice(off, off + b)
+            results[i] = MultiCampaignResult(
+                cfg=cfg, trace_index=trace_idx, seed=seed_arr,
+                best_auroc=best[sl], multi_auroc=multi[sl],
+                loss_curves=losses[sl], assignments=assigns[sl])
+            off += b
+    return results
 
 
 def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
@@ -465,48 +704,96 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                traces: Sequence[Failure], seeds: Sequence[int],
                target_loss: Optional[float] = None,
                exec_plan: Optional[ExecPlan] = None,
-               pad_k: bool = True
+               pad_k: bool = True, fuse: bool = True
                ) -> Dict[Tuple[str, int], CampaignResult]:
-    """(scheme x k) grid of batched campaigns.
+    """(scheme x k) grid of batched campaigns — fused by default: the
+    whole grid runs in ONE dispatch per iso-tracking kind (plus one per
+    multi-model scheme), not one per cell.
 
     Single-model schemes (fl/sbt/tolfl) interpret k as the cluster
-    count.  With ``pad_k`` (the default) their cluster arrays are padded
-    to the grid's max k and passed to the core as dynamic operands, so
-    such cells share one compiled executable PER ISO-TRACKING KIND: all
-    sbt/tolfl cells compile once, all fl cells once more (their
-    isolated-fallback branch is extra compute non-fl cells must not
-    pay) — bounded compiles for the whole grid instead of one per cell,
-    with results unchanged: padded cluster slots are exact no-ops.
-    ``pad_k=False`` restores the one-compile-per-cell static build.
-    "batch" cells centralise the data onto one device (different array
-    shapes), so they always compile separately.
+    count.  With the default ``fuse`` their padded cluster arrays
+    (heads, ``device_cluster_array``, ``head_valid`` — padded to the
+    grid's max k) become VMAPPED operands stacked along the flattened
+    (cell x trace x seed) scenario axis, so all cells of one
+    iso-tracking kind share a single ``jit(vmap)`` dispatch as well as a
+    single executable: all sbt/tolfl cells go in one call, all fl cells
+    in another (their isolated-fallback branch is extra compute non-fl
+    cells must not pay).  Trace arrays are built once per grid and the
+    post-processing ``auroc_batch`` sweeps the stacked axis once per
+    kind (:func:`run_fused_campaigns`).  Padded cluster slots are exact
+    no-ops in the combine algebra, so results match the per-cell paths
+    bit-for-bit: ``fuse=False`` restores one dispatch per cell (sharing
+    executables via broadcast padded arrays — the PR 3 behaviour), and
+    ``pad_k=False`` additionally restores the one-compile-per-cell
+    static build (both pinned equal by tests).  "batch" cells
+    centralise the data onto one device (different array shapes), so
+    they always dispatch per cell.
 
     Multi-model baselines (:data:`MULTI_SCHEMES`) interpret k as the
-    model count M and run through :func:`run_multimodel_campaign`
-    (their cells return :class:`MultiCampaignResult`, and legacy specs
-    in ``traces`` resolve to the baseline default targets).  Every cell
-    covers the full (trace x seed) scenario batch under ``exec_plan``.
-    """
-    single_ks = [k for scheme, k in scheme_ks
-                 if scheme not in MULTI_SCHEMES and scheme != "batch"]
-    k_common = max(single_ks) if (pad_k and single_ks) else None
+    model count M; their cells return :class:`MultiCampaignResult`, and
+    legacy specs in ``traces`` resolve to the baseline default targets.
+    Under ``fuse`` every multi cell is padded to the grid's max M with a
+    ``model_valid`` mask, so same-scheme cells with different M also
+    share one executable and one dispatch
+    (:func:`run_fused_multimodel_campaigns`); ``fuse=False`` dispatches
+    each through :func:`run_multimodel_campaign`.  Every cell covers
+    the full (trace x seed) scenario batch under ``exec_plan``."""
+    def mcfg_for(scheme, k):
+        # multi-model engines take ONE local step per round: give them
+        # the single-model cells' TOTAL local-step budget (rounds x E)
+        # so grid columns compare equal work
+        return MultiModelConfig(scheme=scheme,
+                                num_devices=base.num_devices,
+                                num_models=k,
+                                rounds=base.rounds * base.local_epochs,
+                                lr=base.lr, dropout=base.dropout)
+
+    single = [(scheme, k) for scheme, k in scheme_ks
+              if scheme not in MULTI_SCHEMES and scheme != "batch"]
+    multi = [(scheme, k) for scheme, k in scheme_ks
+             if scheme in MULTI_SCHEMES]
     out: Dict[Tuple[str, int], CampaignResult] = {}
+    if fuse and pad_k:
+        if single:
+            res = run_fused_campaigns(
+                ae_cfg, device_x, device_counts, test_x, test_y,
+                [(dataclasses.replace(base, scheme=s, num_clusters=k),
+                  traces) for s, k in single],
+                seeds, target_loss, exec_plan)
+            out.update(zip(single, res))
+        if multi:
+            res = run_fused_multimodel_campaigns(
+                ae_cfg, device_x, device_counts, test_x, test_y,
+                [(mcfg_for(s, k), traces) for s, k in multi],
+                seeds, exec_plan)
+            out.update(zip(multi, res))
+        for scheme, k in scheme_ks:
+            if scheme == "batch":
+                cfg = dataclasses.replace(base, scheme=scheme,
+                                          num_clusters=k)
+                out[(scheme, k)] = run_campaign(
+                    ae_cfg, device_x, device_counts, test_x, test_y, cfg,
+                    traces, seeds, target_loss, exec_plan=exec_plan)
+        return {key: out[key] for key in scheme_ks}
+
+    # per-cell dispatch: pad cluster arrays to the PER-KIND max k (each
+    # iso-tracking kind has its own executable either way, so e.g. an fl
+    # cell never pays a wider combine than its kind's cells need)
+    k_kind = {}
+    for scheme, k in single:
+        kind = (scheme == "fl")
+        cfg_k = dataclasses.replace(base, scheme=scheme, num_clusters=k)
+        k_kind[kind] = max(k_kind.get(kind, 1),
+                           cfg_k.topology().num_clusters)
     for scheme, k in scheme_ks:
         if scheme in MULTI_SCHEMES:
-            # multi-model engines take ONE local step per round: give
-            # them the single-model cells' TOTAL local-step budget
-            # (rounds x E) so grid columns compare equal work
-            mcfg = MultiModelConfig(scheme=scheme,
-                                    num_devices=base.num_devices,
-                                    num_models=k,
-                                    rounds=base.rounds * base.local_epochs,
-                                    lr=base.lr, dropout=base.dropout)
             out[(scheme, k)] = run_multimodel_campaign(
-                ae_cfg, device_x, device_counts, test_x, test_y, mcfg,
-                traces, seeds, exec_plan=exec_plan)
+                ae_cfg, device_x, device_counts, test_x, test_y,
+                mcfg_for(scheme, k), traces, seeds, exec_plan=exec_plan)
         else:
             cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
-            cell_pad = k_common if scheme != "batch" else None
+            cell_pad = (k_kind[scheme == "fl"]
+                        if pad_k and scheme != "batch" else None)
             out[(scheme, k)] = run_campaign(ae_cfg, device_x,
                                             device_counts, test_x, test_y,
                                             cfg, traces, seeds,

@@ -154,6 +154,19 @@ def stack_traces(traces: Sequence[FailureTrace]) -> FailureTrace:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
+def concat_traces(batches: Sequence[FailureTrace]) -> FailureTrace:
+    """Concatenate already-stacked trace batches along their leading
+    scenario axis — the fused (cell x trace x seed) sweep flattens the
+    per-cell batches of a grid into one with this (the batches must
+    share ``max_events``; pass every trace through the same slot budget
+    before stacking)."""
+    ms = {t.max_events for t in batches}
+    assert len(ms) == 1, f"mixed max_events: {ms}"
+    if len(batches) == 1:
+        return batches[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *batches)
+
+
 def sample_traces(rng: np.random.Generator, topo: Topology,
                   failure_rate: float, max_events: int = MAX_EVENTS,
                   rounds: int = 100, num_traces: int = 1,

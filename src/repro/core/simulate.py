@@ -165,8 +165,26 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
             alive = trace_alive_mask(trace, N, epoch)
             w = effective_weights_arrays(alive, cluster_ids, heads)
             dkeys = jax.random.split(dkey, N)
-            gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
-                params, dx, valid, dkeys)
+            head_dead = 1.0 - heads_alive_max(alive)     # all heads dead
+            if track_iso:
+                # One N-way delta vmap serves BOTH the global combine and
+                # the isolated fallback.  Exactness: while any head is
+                # alive, ``iso_params`` rows all equal ``params`` (the
+                # where-reset below), so these ARE the global-path
+                # gradients; on all-heads-dead rounds the values differ
+                # but every effective weight is zero, so the combine is
+                # gated off (``has_update == 0``) and the difference
+                # never reaches ``new_params``.  This halves the
+                # per-round gradient work of iso-tracking cores.
+                iso_params = jax.tree.map(
+                    lambda ip, p_: jnp.where(head_dead > 0, ip,
+                                             jnp.broadcast_to(p_, ip.shape)),
+                    iso_params, params)
+                gs = jax.vmap(delta_fn, in_axes=(0, 0, 0, 0))(
+                    iso_params, dx, valid, dkeys)
+            else:
+                gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
+                    params, dx, valid, dkeys)
             ns = counts * w
             # ---- Tol-FL hierarchical combine (Algorithm 1) ----
             cluster_gs, n_c = agg.cluster_reduce(gs, ns, cluster_ids, k)
@@ -180,22 +198,15 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
                 lambda p_, g_: p_ - cfg.lr * has_update * g_, params, g)
 
             # ---- isolated fallback (fl server failure) ----
-            head_dead = 1.0 - heads_alive_max(alive)     # all heads dead
             if track_iso:
-                failed_now = head_dead
-                # track the global model until failure, then diverge per
-                # device
-                iso_params = jax.tree.map(
-                    lambda ip, p_: jnp.where(failed_now > 0, ip,
-                                             jnp.broadcast_to(p_, ip.shape)),
-                    iso_params, params)
-                iso_gs = jax.vmap(delta_fn, in_axes=(0, 0, 0, 0))(
-                    iso_params, dx, valid, dkeys)
-                iso_step = failed_now * alive   # only alive devices train
+                # ``iso_params`` already track the global model until
+                # failure (the where-reset above) and ``gs`` holds the
+                # per-device gradients at exactly those params
+                iso_step = head_dead * alive    # only alive devices train
                 iso_params = jax.tree.map(
                     lambda ip, g_: ip - cfg.lr * iso_step.reshape(
                         (-1,) + (1,) * (g_.ndim - 1)) * g_,
-                    iso_params, iso_gs)
+                    iso_params, gs)
                 # Fig 4 reporting averages the surviving devices only:
                 # weight each device's test loss by its alive mask (the
                 # dead server keeps a frozen model and is excluded)

@@ -2,8 +2,9 @@ from repro.sharding.logical import (FULL_MANUAL_FALLBACK, activate_mesh,
                                     compat_shard_map, constrain,
                                     current_mesh, current_rules,
                                     mesh_axis_sizes, rules_for,
-                                    sharding_for, spec_for)
+                                    scenario_shard_map, sharding_for,
+                                    spec_for)
 
 __all__ = ["FULL_MANUAL_FALLBACK", "activate_mesh", "compat_shard_map",
            "constrain", "current_mesh", "current_rules", "mesh_axis_sizes",
-           "rules_for", "sharding_for", "spec_for"]
+           "rules_for", "scenario_shard_map", "sharding_for", "spec_for"]

@@ -211,6 +211,21 @@ def mesh_axis_sizes(mesh: Mesh) -> dict:
 FULL_MANUAL_FALLBACK = not hasattr(jax, "shard_map")
 
 
+def scenario_shard_map(f, ndev: int, n_bcast: int, n_mapped: int):
+    """Shard a batched campaign executable over an ``(ndev,)``-device
+    "scenario" mesh axis: the leading ``n_bcast`` arguments (data /
+    topology broadcasts) are replicated, the trailing ``n_mapped``
+    arguments (the flattened (cell x trace x seed) scenario operands —
+    stacked topology arrays, trace pytrees, seeds) are split on their
+    leading axis, as are all outputs.  Centralised here so the campaign
+    engine's fused and per-cell dispatches shard through one spec
+    builder (the caller pads the batch to a device-divisible size)."""
+    mesh = jax.make_mesh((ndev,), ("scenario",))
+    specs = (PS(),) * n_bcast + (PS("scenario"),) * n_mapped
+    return compat_shard_map(f, mesh, in_specs=specs,
+                            out_specs=PS("scenario"))
+
+
 def compat_shard_map(f, mesh: Mesh, in_specs, out_specs, manual=None):
     """Version-portable shard_map: manual over the ``manual`` axes (all
     mesh axes when None), auto (GSPMD) over the rest where the backend

@@ -1,4 +1,4 @@
-"""Execution-layer contracts of the campaign engine (ISSUE 3 tentpole).
+"""Execution-layer contracts of the campaign engine (ISSUE 3 + 4).
 
 What is proven:
 
@@ -6,17 +6,27 @@ What is proven:
   non-divisible batch (padding required) returns the same per-scenario
   results as the unchunked call, and the whole chunked campaign still
   costs ONE compile (every chunk has the same padded shape).
-* **padded-k sweep == per-cell sweep** — ``sweep_grid`` with the
-  default ``pad_k`` runs ALL single-model (scheme, k) cells through one
-  compiled executable (TRACE_COUNT delta == 1) and matches the
-  ``pad_k=False`` per-cell build scenario-for-scenario.
+* **padded-k sweep == per-cell sweep** — ``sweep_grid(fuse=False)``
+  runs ALL single-model (scheme, k) cells through one compiled
+  executable (TRACE_COUNT delta == 1) and matches the ``pad_k=False``
+  per-cell build scenario-for-scenario.
+* **fused sweep == per-cell sweep** — the default ``sweep_grid`` runs
+  every cell of one iso-tracking kind through ONE dispatch over the
+  flattened (cell x trace x seed) axis: exactly one trace per kind for
+  the whole grid, results identical to both per-cell paths; multi-model
+  cells of one scheme fuse the same way across DIFFERENT model counts
+  (padded-M ``model_valid`` mask), matching ``fuse=False`` per cell.
+  Ragged fused cells (per-cell trace lists of different lengths) match
+  per-cell ``run_campaign``.
 * **compile amortisation** — a repeated campaign with identical shapes
   hits the executable cache: 0 new traces (data arrays are arguments,
   not closures).
 * **sharded == unsharded** — a 64-scenario campaign sharded over 8
   forced-host CPU devices (subprocess, like ``tests/test_distributed``)
   matches the one-shot path to <= 1e-5, including sharding + chunking
-  combined and a non-divisible batch that needs device padding.
+  combined, a non-divisible batch that needs device padding, and the
+  fused single-/multi-model sweeps (padded-M cell included) whose
+  flattened axis is what actually shards.
 """
 import json
 import os
@@ -29,7 +39,8 @@ import pytest
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import campaign
-from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
+from repro.core.campaign import (ExecPlan, run_campaign,
+                                 run_fused_campaigns, sweep_grid)
 from repro.core.failure import sample_traces
 from repro.core.simulate import SimConfig
 from repro.data import commsml, federated
@@ -133,9 +144,10 @@ def _assert_cells_equal(padded, percell):
 
 
 def test_padded_sweep_single_compile_and_parity(small_ae, small_data):
-    """All (non-fl) single-model cells of a sweep share ONE compiled
-    executable (padded cluster arrays as dynamic operands) and match
-    the per-cell static build scenario-for-scenario."""
+    """All (non-fl) single-model cells of a per-cell-dispatch sweep
+    (``fuse=False``) share ONE compiled executable (padded cluster
+    arrays as dynamic operands) and match the per-cell static build
+    scenario-for-scenario."""
     dx, counts, tx, ty = small_data
     base = SimConfig(num_devices=10, rounds=ROUNDS, lr=1e-3,
                      dropout=False)
@@ -143,7 +155,7 @@ def test_padded_sweep_single_compile_and_parity(small_ae, small_data):
     traces = _traces(cfg, n=3)
     before = campaign.TRACE_COUNT
     padded = sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS,
-                        traces, seeds=[0, 1])
+                        traces, seeds=[0, 1], fuse=False)
     n_traces = campaign.TRACE_COUNT - before
     assert n_traces == 1, f"padded sweep traced {n_traces}x; expected 1"
     percell = sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS,
@@ -164,10 +176,10 @@ def test_padded_sweep_fl_cell_compiles_separately(small_ae, small_data):
     # warm the shared non-iso executable so the count below isolates
     # the fl cell's contribution (self-contained under -k selection)
     sweep_grid(small_ae, dx, counts, tx, ty, base, SWEEP_CELLS, traces,
-               seeds=[0, 1])
+               seeds=[0, 1], fuse=False)
     before = campaign.TRACE_COUNT
     padded = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
-                        traces, seeds=[0, 1])
+                        traces, seeds=[0, 1], fuse=False)
     n_traces = campaign.TRACE_COUNT - before
     assert n_traces == 1, \
         f"mixed sweep traced {n_traces}x; expected 1 (fl cell only)"
@@ -175,6 +187,100 @@ def test_padded_sweep_fl_cell_compiles_separately(small_ae, small_data):
                          traces, seeds=[0, 1], pad_k=False)
     _assert_cells_equal(padded, percell)
     assert padded[("fl", 1)].cfg.scheme == "fl"
+
+
+def test_fused_sweep_one_trace_per_kind_and_parity(small_ae, small_data):
+    """ISSUE 4 tentpole contract: the default (fused) ``sweep_grid``
+    dispatches ALL single-model cells of one iso-tracking kind as ONE
+    stacked vmap over the flattened (cell x trace x seed) axis —
+    exactly TWO traces for a mixed grid (non-fl + fl), with results
+    identical to both per-cell paths."""
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=ROUNDS, lr=1e-3,
+                     dropout=False)
+    cfg = _cfg()
+    traces = _traces(cfg, n=3)
+    cells = SWEEP_CELLS + [("fl", 1)]
+    before = campaign.TRACE_COUNT
+    fused = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                       traces, seeds=[0, 1])
+    n_traces = campaign.TRACE_COUNT - before
+    assert n_traces == 2, \
+        f"fused sweep traced {n_traces}x; expected 2 (one per kind)"
+    # steady state: a repeat of the whole grid costs ZERO traces
+    before = campaign.TRACE_COUNT
+    again = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                       traces, seeds=[0, 1])
+    assert campaign.TRACE_COUNT - before == 0
+    percell = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                         traces, seeds=[0, 1], fuse=False)
+    static = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                        traces, seeds=[0, 1], pad_k=False)
+    _assert_cells_equal(fused, percell)
+    _assert_cells_equal(fused, static)
+    _assert_cells_equal(fused, again)
+    for key in cells:
+        assert fused[key].cfg.scheme == key[0]
+
+
+def test_fused_multimodel_padded_M_parity(small_ae, small_data):
+    """Multi-model cells of one scheme with DIFFERENT model counts fuse
+    into one dispatch via the padded-M ``model_valid`` mask: one trace
+    per scheme for the whole grid, per-cell results identical to the
+    unfused (unpadded) dispatch — including the padded-M (ifca, 2)
+    cell."""
+    dx, counts, tx, ty = small_data
+    base = SimConfig(num_devices=10, rounds=3, lr=1e-3, dropout=False)
+    cfg = _cfg()
+    traces = _traces(cfg, n=2)
+    cells = [("ifca", 2), ("ifca", 3), ("fesem", 2)]
+    before = campaign.TRACE_COUNT
+    fused = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                       traces, seeds=[0])
+    n_traces = campaign.TRACE_COUNT - before
+    assert n_traces == 2, \
+        f"fused multi sweep traced {n_traces}x; expected 2 (per scheme)"
+    percell = sweep_grid(small_ae, dx, counts, tx, ty, base, cells,
+                         traces, seeds=[0], fuse=False)
+    for key in cells:
+        f, p = fused[key], percell[key]
+        np.testing.assert_allclose(f.best_auroc, p.best_auroc, atol=1e-5)
+        np.testing.assert_allclose(f.multi_auroc, p.multi_auroc,
+                                   atol=1e-5)
+        np.testing.assert_allclose(f.loss_curves, p.loss_curves,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(f.assignments, p.assignments)
+        assert f.cfg.num_models == key[1]
+
+
+def test_fused_ragged_cells_match_run_campaign(small_ae, small_data):
+    """``run_fused_campaigns`` accepts DIFFERENT trace lists per cell
+    (the per-topology sampled grids of the failure_scenarios example):
+    the flattened scenario axis is ragged across cells, and every cell
+    still matches its own ``run_campaign``."""
+    dx, counts, tx, ty = small_data
+    cfg_a = _cfg()
+    cfg_b = SimConfig(scheme="sbt", num_devices=10, num_clusters=10,
+                      rounds=ROUNDS, lr=1e-3, dropout=False)
+    tr_a = _traces(cfg_a, n=3)
+    tr_b = sample_traces(np.random.default_rng(7), cfg_b.topology(), 0.5,
+                         max_events=8, rounds=ROUNDS, num_traces=2)
+    fused = run_fused_campaigns(small_ae, dx, counts, tx, ty,
+                                [(cfg_a, tr_a), (cfg_b, tr_b)],
+                                seeds=[0, 1], target_loss=2430.0)
+    assert [r.num_scenarios for r in fused] == [6, 4]
+    for cfg, traces, res in [(cfg_a, tr_a, fused[0]),
+                             (cfg_b, tr_b, fused[1])]:
+        solo = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                            seeds=[0, 1], target_loss=2430.0)
+        np.testing.assert_allclose(res.auroc_used, solo.auroc_used,
+                                   atol=1e-5)
+        np.testing.assert_allclose(res.loss_curves, solo.loss_curves,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(res.trace_index, solo.trace_index)
+        np.testing.assert_array_equal(
+            np.isfinite(res.rounds_to_loss),
+            np.isfinite(solo.rounds_to_loss))
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +296,7 @@ SHARD_SCRIPT = textwrap.dedent("""
 
     from repro.configs.autoencoder_paper import AutoencoderConfig
     from repro.core import campaign
-    from repro.core.campaign import ExecPlan, run_campaign
+    from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
     from repro.core.failure import sample_traces
     from repro.core.simulate import SimConfig
     from repro.data import commsml, federated
@@ -226,6 +332,30 @@ SHARD_SCRIPT = textwrap.dedent("""
     def err(a, b):
         return float(np.max(np.abs(a - b)))
 
+    # fused sweeps: the flattened (cell x trace x seed) axis is what
+    # shards.  Single-model grid (incl. an fl cell) and a multi-model
+    # grid with a padded-M cell, sharded vs unsharded.
+    base_cfg = SimConfig(num_devices=10, rounds=3, lr=1e-3,
+                         dropout=False)
+    cells = [("tolfl", 5), ("tolfl", 2), ("sbt", 10), ("fl", 1)]
+    grid_args = (ae, dx, counts, split.test_x, split.test_y, base_cfg)
+    c0 = campaign.TRACE_COUNT
+    fused = sweep_grid(*grid_args, cells, traces[:4], range(3))
+    fused_compiles = campaign.TRACE_COUNT - c0
+    c0 = campaign.TRACE_COUNT
+    fused_sh = sweep_grid(*grid_args, cells, traces[:4], range(3),
+                          exec_plan=ExecPlan(shard=True))
+    fused_sh_compiles = campaign.TRACE_COUNT - c0
+    d_fused = max(err(fused[c].auroc_used, fused_sh[c].auroc_used)
+                  for c in cells)
+    mcells = [("ifca", 2), ("ifca", 3)]
+    multi = sweep_grid(*grid_args, mcells, traces[:4], range(2))
+    multi_sh = sweep_grid(*grid_args, mcells, traces[:4], range(2),
+                          exec_plan=ExecPlan(shard=True))
+    d_multi = max(max(err(multi[c].best_auroc, multi_sh[c].best_auroc),
+                      err(multi[c].multi_auroc, multi_sh[c].multi_auroc))
+                  for c in mcells)
+
     print(json.dumps({
         "num_scenarios": int(base.num_scenarios),
         "sharded_compiles": sharded_compiles,
@@ -234,6 +364,10 @@ SHARD_SCRIPT = textwrap.dedent("""
         "d_loss": err(base.loss_curves, sharded.loss_curves),
         "d_auroc_chunked": err(base.auroc_used, both.auroc_used),
         "d_auroc_nondiv": err(base_nd.auroc_used, shard_nd.auroc_used),
+        "fused_compiles": fused_compiles,
+        "fused_sharded_compiles": fused_sh_compiles,
+        "d_auroc_fused_sharded": d_fused,
+        "d_auroc_multi_sharded": d_multi,
     }))
 """)
 
@@ -254,3 +388,9 @@ def test_sharded_campaign_matches_oneshot():
     assert stats["d_loss"] <= 1e-4, stats
     assert stats["d_auroc_chunked"] <= 1e-5, stats
     assert stats["d_auroc_nondiv"] <= 1e-5, stats
+    # fused sweeps shard their flattened (cell x trace x seed) axis:
+    # still one trace per iso-tracking kind, results unchanged
+    assert stats["fused_compiles"] == 2, stats
+    assert stats["fused_sharded_compiles"] == 2, stats
+    assert stats["d_auroc_fused_sharded"] <= 1e-5, stats
+    assert stats["d_auroc_multi_sharded"] <= 1e-5, stats
