@@ -24,6 +24,11 @@ artifacts pick it up):
   the engine's compile-amortised operating regime (every further grid
   on these shapes costs 0 traces) and the row the ISSUE 4 win condition
   tracks against per-cell ``steady`` throughput.
+* ``spec_sweep`` — the SAME 128-scenario grid declared as an
+  :class:`repro.api.ExperimentSpec` and lowered through
+  ``plan -> execute``: the declarative layer rides the identical warm
+  executables, so CI asserts it stays within 5% of ``sweep_fused``
+  scenarios/sec (the spec layer must be overhead-free).
 * ``sampled_max_events`` — compile+run wall of a sampled-rate grid with
   the big default slot budget (max_events = 2N): the regression guard
   for the vectorized ``trace_alive_mask`` (the unrolled fold made this
@@ -45,7 +50,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from benchmarks.datasets import prepare
+from benchmarks.datasets import data_spec, prepare
+from repro.api import (CellSpec, ExperimentSpec, SeedSpec, TraceSpec,
+                       run_experiment)
 from repro.core import campaign
 from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
 from repro.core.failure import sample_rate_grid, sample_traces
@@ -122,6 +129,18 @@ def run(out_path: str = "BENCH_campaign.json", shard: bool = False,
                     lambda: sweep_grid(*args, base, **grid))
     _timed_campaign("sweep_fused", lines, results,
                     lambda: sweep_grid(*args, base, **grid), reps=3)
+    # the SAME 128-scenario grid declared as an ExperimentSpec and run
+    # through plan -> execute: the declarative layer must be
+    # overhead-free over the fused dispatcher it lowers to (same warm
+    # executables — CI asserts spec_sweep stays within 5% of
+    # sweep_fused scenarios/sec)
+    sweep_spec = ExperimentSpec(
+        data=data_spec(prep), base=base,
+        cells=tuple(CellSpec(s, k) for s, k in grid["scheme_ks"]),
+        traces=TraceSpec(traces=tuple(traces)),
+        seeds=SeedSpec((0, 1)), exec_plan=plan)
+    _timed_campaign("spec_sweep", lines, results,
+                    lambda: run_experiment(sweep_spec), reps=3)
 
     # sampled-rate grid at the big slot budget (max_events = 2N): the
     # vectorized trace_alive_mask keeps this compile O(1) in max_events
@@ -143,6 +162,12 @@ def run(out_path: str = "BENCH_campaign.json", shard: bool = False,
         results["sweep_fused_cold"]
     assert results["sweep_fused"]["compiles"] == 0, \
         results["sweep_fused"]
+    # the declarative pipeline rides the same warm executables (0
+    # compiles) and must not tax throughput more than 5%
+    assert results["spec_sweep"]["compiles"] == 0, results["spec_sweep"]
+    assert (results["spec_sweep"]["scenarios_per_s"]
+            >= 0.95 * results["sweep_fused"]["scenarios_per_s"]), \
+        (results["spec_sweep"], results["sweep_fused"])
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     lines.append(f"# wrote {out_path}")

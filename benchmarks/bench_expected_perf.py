@@ -5,31 +5,31 @@ failure scenarios s, and that "depending on the probability of any client
 or server failing ... either batch, FL, or Tol-FL may be most suited".
 The seed's version hand-listed three scenarios (none / one client / one
 server) and weighted them analytically under an at-most-one-failure
-model.  This bench estimates E[J] by Monte Carlo instead: for each
-failure rate p it *samples* grids of multi-event failure-and-recovery
-traces (:func:`repro.core.failure.sample_traces` — every device of the
-scheme's own topology independently fails with probability p at a random
-round, cluster heads count as server failures, churned devices may come
-back), so multi-failure scenarios the analytic model lumped into a
-pessimistic remainder are actually simulated.
+model.  This bench estimates E[J] by Monte Carlo instead, and the whole
+study is ONE declarative spec: a (tolfl, fl, batch) cell grid crossed
+with a sampled :class:`repro.api.TraceSpec` — for each failure rate p
+the planner draws grids of multi-event failure-and-recovery traces
+against EACH SCHEME'S OWN topology (cluster heads count as server
+failures, churned devices may come back) and deduplicates identical
+draws, so multi-failure scenarios the analytic model lumped into a
+pessimistic remainder are actually simulated, once each.
 
-All (p x trace x seed) scenarios for one scheme run through ONE batched
-campaign call — scenario count scales without recompiles.  E[AUROC](p)
-is the mean reported AUROC over that p's sampled scenarios.  Output: the
-E[AUROC] vs p crossover table — the quantified version of the paper's
-"which scheme when" conclusion.
+``plan(spec)`` records the draw -> trace map per cell; ``execute``
+fuses the non-batch cells per iso-tracking kind — scenario count scales
+without recompiles.  E[AUROC](p) is the mean reported AUROC over that
+p's sampled draws.  Output: the E[AUROC] vs p crossover table — the
+quantified version of the paper's "which scheme when" conclusion.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 
-from benchmarks.datasets import prepare
-from repro.core.campaign import run_campaign
-from repro.core.failure import sample_rate_grid
-from repro.core.simulate import SimConfig
+from benchmarks.datasets import base_config, data_spec, prepare
+from repro.api import (CellSpec, ExperimentSpec, SeedSpec, TraceSpec,
+                       execute, plan)
 
 SCHEMES = ("tolfl", "fl", "batch")
 P_GRID = (0.0, 0.01, 0.05, 0.1, 0.2, 0.4)
@@ -39,28 +39,33 @@ def run(reps: int = 1, rounds: int = 40, dataset: str = "commsml",
         p_grid: Sequence[float] = P_GRID, traces_per_p: int = 8,
         scale: float = 1.0, trace_seed: int = 0) -> List[str]:
     prep = prepare(dataset, seed=0, scale=scale)
-    cells: Dict[Tuple[str, float], float] = {}
-    for scheme in SCHEMES:
-        cfg = SimConfig(scheme=scheme, num_devices=10,
-                        num_clusters=prep.clusters, rounds=rounds,
-                        lr=prep.lr, local_epochs=prep.local_epochs)
+    base = base_config(prep, rounds)
+    k_of = {"tolfl": prep.clusters, "fl": 1, "batch": 1}
+    spec = ExperimentSpec(
+        data=data_spec(prep),
+        base=base,
+        cells=tuple(CellSpec(s, k_of[s]) for s in SCHEMES),
         # dedup identical draws (at low p most are the all-none trace):
         # each distinct trace trains once, draws map results back so the
         # per-p means equal the undeduplicated Monte-Carlo estimate
-        rng = np.random.default_rng(trace_seed)
-        traces, draws = sample_rate_grid(rng, cfg.topology(), p_grid,
-                                         rounds, traces_per_p)
-        t0 = time.time()
-        res = run_campaign(prep.ae_cfg, prep.device_x, prep.counts,
-                           prep.test_x, prep.test_y, cfg, traces,
-                           seeds=range(reps))
-        n_draws = sum(len(d) for d in draws.values()) * reps
-        print(f"# expected-perf campaign {dataset}/{scheme}: "
-              f"{n_draws} sampled draws as {res.num_scenarios} distinct "
-              f"scenarios in {time.time()-t0:.0f}s", flush=True)
+        traces=TraceSpec.sampled(p_grid, traces_per_p,
+                                 sample_seed=trace_seed),
+        seeds=SeedSpec.range(reps))
+    ep = plan(spec)
+    t0 = time.time()
+    res = execute(ep)
+    n_draws = sum(len(c.draws[p]) for c in ep.cells for p in p_grid)
+    print(f"# expected-perf campaign {dataset}: {n_draws * reps} sampled "
+          f"draws as {res.num_scenarios} distinct scenarios in "
+          f"{len(ep.buckets)} dispatch buckets, {time.time()-t0:.0f}s",
+          flush=True)
+
+    cells = {}
+    for cplan, cres in zip(ep.cells, res.results):
         for p in p_grid:
-            vals = np.concatenate([res.select(i) for i in draws[p]])
-            cells[(scheme, p)] = float(np.mean(vals))
+            vals = np.concatenate([cres.select(i)
+                                   for i in cplan.draws[p]])
+            cells[(cplan.cfg.scheme, p)] = float(np.mean(vals))
 
     lines = [f"# E[AUROC](p) via {traces_per_p} sampled traces x {reps} "
              f"seeds per rate ({dataset}, {rounds} rounds); paper "

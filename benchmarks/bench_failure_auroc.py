@@ -5,36 +5,37 @@ Columns mirror the paper: Tol-FL, FedGroup*/dagger, IFCA*/dagger,
 FeSEM*/dagger, FL, Batch (Batch omitted for server failure, as in
 Table V).  Results are mean +- std over ``reps`` seeds.
 
-Every scheme runs through the batched campaign engine: per
-(dataset, scheme) ONE jitted/vmapped call covers the full
-(3 failure traces x reps seeds) grid — the seed's version compiled and
-ran every (scheme, failure, rep) cell separately, and until PR 2 the
-multi-model baselines still looped per cell.  Randomness across reps
-comes from the simulation seed (init/dropout); the dataset draw is
-fixed at seed 0 so all scenarios in a batch share one data tensor.
-The multi-model cells pass legacy single-event ``FailureSpec``s, which
-the campaign normalises with the baseline default targets (client
-failure kills device N-1; see
+ONE declarative :class:`repro.api.ExperimentSpec` per dataset covers
+all three tables: every scheme is a cell (single-model tolfl/fl/batch
+plus the multi-model baselines), each with its per-cell canonical trace
+list — batch drops the scenarios the tables never show (its "client"
+column is its failure-free run, Table V omits it entirely) — and one
+``execute`` fuses the grid per iso-tracking kind / per scheme.  The
+seed's version compiled and ran every (scheme, failure, rep) cell
+separately.  Randomness across reps comes from the simulation seed
+(init/dropout); the dataset draw is fixed at seed 0 so all scenarios in
+a batch share one data tensor.  The multi-model cells pass legacy
+single-event ``FailureSpec``s, which the engine normalises with the
+baseline default targets (client failure kills device N-1; see
 :func:`repro.core.baselines.as_multimodel_trace`) — the Table IV
 casualty device matches the seed's looped version.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from benchmarks.datasets import ALL, prepare
-from repro.core.baselines import MultiModelConfig
-from repro.core.campaign import (CampaignResult, MultiCampaignResult,
-                                 mean_ci95, run_campaign,
-                                 run_multimodel_campaign)
-from repro.core.failure import FailureSpec, NO_FAILURE, as_trace
-from repro.core.simulate import SimConfig
+from benchmarks.datasets import ALL, base_config, data_spec, prepare
+from repro.api import (NO_FAILURE, CellSpec, ExperimentResult,
+                       ExperimentSpec, FailureSpec, SeedSpec, mean_ci95,
+                       run_experiment)
 
 ROUNDS = 80
 FAIL_KINDS = ("none", "client", "server")
+SINGLE = ("tolfl", "fl", "batch")
+MULTI = ("fedgroup", "ifca", "fesem")
 
 
 def _failure(kind: str, rounds: int = ROUNDS) -> FailureSpec:
@@ -50,22 +51,15 @@ def _stats(vals: Sequence[float]) -> Dict[str, float]:
     return {"mean": mean, "std": std}
 
 
-def run_single_campaign(dataset: str, scheme: str, reps: int,
-                        rounds: int = ROUNDS,
-                        kinds: Sequence[str] = FAIL_KINDS
-                        ) -> Dict[str, Dict[str, float]]:
-    """The requested failure conditions x reps seeds for one
-    single-model scheme in one batched call; returns
-    {fail_kind: {mean, std}}.  Identical conditions share scenarios
-    (batch's client failure removes nothing — all data already sits on
-    the server, the paper reports its failure-free run — so it aliases
-    "none" instead of re-training duplicates)."""
-    prep = prepare(dataset, seed=0)
-    cfg = SimConfig(scheme=scheme, num_devices=10,
-                    num_clusters=prep.clusters, rounds=rounds,
-                    lr=prep.lr, local_epochs=prep.local_epochs)
-    topo = cfg.topology()
-    traces: List = []
+def _single_cell(prep, scheme: str, rounds: int,
+                 kinds: Sequence[str] = FAIL_KINDS
+                 ) -> Tuple[CellSpec, Dict[str, int]]:
+    """One single-model cell + its fail-kind -> trace-index map.
+    Identical conditions share scenarios (batch's client failure removes
+    nothing — all data already sits on the server, the paper reports its
+    failure-free run — so it aliases "none" instead of re-training
+    duplicates)."""
+    traces: List[FailureSpec] = []
     idx_of: Dict[tuple, int] = {}
     kind_idx: Dict[str, int] = {}
     for kind in kinds:
@@ -75,68 +69,75 @@ def run_single_campaign(dataset: str, scheme: str, reps: int,
         key = (spec.epoch, spec.kind, spec.device)
         if key not in idx_of:
             idx_of[key] = len(traces)
-            traces.append(as_trace(spec, topo))
+            traces.append(spec)
         kind_idx[kind] = idx_of[key]
-    res: CampaignResult = run_campaign(
-        prep.ae_cfg, prep.device_x, prep.counts, prep.test_x, prep.test_y,
-        cfg, traces, seeds=range(reps))
-    return {kind: _stats(res.select(i)) for kind, i in kind_idx.items()}
+    k = {"tolfl": prep.clusters, "fl": 1, "batch": 1}[scheme]
+    return CellSpec(scheme, k, traces=tuple(traces)), kind_idx
 
 
-def run_multi_campaign(dataset: str, method: str, reps: int,
-                       rounds: int = ROUNDS,
-                       kinds: Sequence[str] = FAIL_KINDS
-                       ) -> Dict[str, Dict[str, float]]:
-    """The requested failure conditions x reps seeds for one multi-model
-    baseline in ONE jit(vmap) call; returns
-    {fail_kind: {mean, std, multi_mean, multi_std}}."""
+def dataset_spec(dataset: str, reps: int, rounds: int = ROUNDS,
+                 schemes: Sequence[str] = SINGLE + MULTI
+                 ) -> Tuple[ExperimentSpec, Dict[str, Dict[str, int]]]:
+    """(spec, {scheme: fail_kind -> trace index}) for one dataset's full
+    table grid.  Multi-model cells inherit the single cells' total
+    local-step budget (rounds x E) with failure at the same relative
+    midpoint."""
     prep = prepare(dataset, seed=0)
-    # multi-model engines take one local step per round: give them the
-    # same TOTAL local-step budget (rounds x E), failure at the same
-    # relative midpoint
+    base = base_config(prep, rounds)
     mm_rounds = rounds * prep.local_epochs
-    cfg = MultiModelConfig(scheme=method, num_devices=10,
-                           num_models=min(prep.clusters, 3),
-                           rounds=mm_rounds, lr=prep.lr)
-    traces = [_failure(kind, mm_rounds) for kind in kinds]
-    res: MultiCampaignResult = run_multimodel_campaign(
-        prep.ae_cfg, prep.device_x, prep.counts, prep.test_x, prep.test_y,
-        cfg, traces, seeds=range(reps))
-    out: Dict[str, Dict[str, float]] = {}
-    for i, kind in enumerate(kinds):
-        cell = _stats(res.select(i, "best"))
-        multi = _stats(res.select(i, "multi"))
-        cell["multi_mean"], cell["multi_std"] = multi["mean"], multi["std"]
-        out[kind] = cell
-    return out
-
-
-def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
-    single = ("tolfl", "fl", "batch")
-    multi = ("fedgroup", "ifca", "fesem")
-    # one batched campaign per (dataset, scheme) covers all three tables
-    single_cells: Dict[tuple, Dict[str, Dict[str, float]]] = {}
-    multi_cells: Dict[tuple, Dict[str, float]] = {}
-    for ds in datasets:
-        for scheme in single:
-            t0 = time.time()
+    mm_traces = tuple(_failure(kind, mm_rounds) for kind in FAIL_KINDS)
+    cells: List[CellSpec] = []
+    kind_maps: Dict[str, Dict[str, int]] = {}
+    for scheme in schemes:
+        if scheme in MULTI:
+            cells.append(CellSpec(scheme, min(prep.clusters, 3),
+                                  traces=mm_traces))
+            kind_maps[scheme] = {k: i for i, k in enumerate(FAIL_KINDS)}
+        else:
             # the tables never show batch under server failure (Table V
             # omits it) — don't train those scenarios
             kinds = (("none", "client") if scheme == "batch"
                      else FAIL_KINDS)
-            single_cells[(ds, scheme)] = run_single_campaign(
-                ds, scheme, reps, rounds, kinds)
-            print(f"# campaign {ds}/{scheme}: "
-                  f"{len(kinds) * reps} scenarios in "
-                  f"{time.time()-t0:.0f}s", flush=True)
-        for m in multi:
-            t0 = time.time()
-            cells = run_multi_campaign(ds, m, reps, rounds)
-            for kind in FAIL_KINDS:
-                multi_cells[(ds, m, kind)] = cells[kind]
-            print(f"# multi campaign {ds}/{m}: "
-                  f"{len(FAIL_KINDS) * reps} scenarios in "
-                  f"{time.time()-t0:.0f}s", flush=True)
+            cell, kind_idx = _single_cell(prep, scheme, rounds, kinds)
+            cells.append(cell)
+            kind_maps[scheme] = kind_idx
+    spec = ExperimentSpec(data=data_spec(prep), base=base,
+                          cells=tuple(cells),
+                          seeds=SeedSpec.range(reps))
+    return spec, kind_maps
+
+
+def _cell_stats(res: ExperimentResult, kind_maps
+                ) -> Dict[Tuple[str, str], Dict[str, float]]:
+    """{(scheme, fail_kind): stats} — multi cells add the dagger
+    column's multi_mean/std."""
+    out: Dict[Tuple[str, str], Dict[str, float]] = {}
+    for cplan, cres in zip(res.plan.cells, res.results):
+        scheme = cplan.cfg.scheme
+        for kind, i in kind_maps[scheme].items():
+            if scheme in MULTI:
+                stats = _stats(cres.select(i, "best"))
+                multi = _stats(cres.select(i, "multi"))
+                stats["multi_mean"] = multi["mean"]
+                stats["multi_std"] = multi["std"]
+            else:
+                stats = _stats(cres.select(i))
+            out[(scheme, kind)] = stats
+    return out
+
+
+def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
+    # one spec -> one fused execute per dataset covers all three tables
+    cells: Dict[tuple, Dict[str, float]] = {}
+    for ds in datasets:
+        spec, kind_maps = dataset_spec(ds, reps, rounds)
+        t0 = time.time()
+        res = run_experiment(spec)
+        print(f"# experiment {ds}: {res.num_scenarios} scenarios in "
+              f"{res.plan.num_dispatch_buckets} dispatch buckets, "
+              f"{time.time()-t0:.0f}s", flush=True)
+        for (scheme, kind), stats in _cell_stats(res, kind_maps).items():
+            cells[(ds, scheme, kind)] = stats
 
     lines = []
     for fail_kind, table in (("none", "Table III (no failure)"),
@@ -144,7 +145,7 @@ def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
                              ("server", "Table V (server failure)")):
         lines.append(f"# {table}, AUROC mean+-std over {reps} reps")
         hdr = ["dataset", "tolfl"]
-        for m in multi:
+        for m in MULTI:
             hdr += [f"{m}*", f"{m}+"]
         hdr += ["fl"]
         if fail_kind != "server":
@@ -152,59 +153,53 @@ def run(reps: int = 2, rounds: int = ROUNDS, datasets=ALL) -> List[str]:
         lines.append(",".join(hdr))
         for ds in datasets:
             row = [ds]
-            c = single_cells[(ds, "tolfl")][fail_kind]
+            c = cells[(ds, "tolfl", fail_kind)]
             row.append(f"{c['mean']:.3f}+-{c['std']:.3f}")
-            for m in multi:
-                c = multi_cells[(ds, m, fail_kind)]
+            for m in MULTI:
+                c = cells[(ds, m, fail_kind)]
                 row.append(f"{c['mean']:.3f}+-{c['std']:.3f}")
                 row.append(f"{c['multi_mean']:.3f}+-{c['multi_std']:.3f}")
-            c = single_cells[(ds, "fl")][fail_kind]
+            c = cells[(ds, "fl", fail_kind)]
             row.append(f"{c['mean']:.3f}+-{c['std']:.3f}")
             if fail_kind != "server":
-                c = single_cells[(ds, "batch")][fail_kind]
+                c = cells[(ds, "batch", fail_kind)]
                 row.append(f"{c['mean']:.3f}+-{c['std']:.3f}")
             lines.append(",".join(row))
     return lines
 
 
 def run_smoke(rounds: int = 8, reps: int = 2) -> List[str]:
-    """CI micro-campaigns: one batched (3 traces x reps seeds) Tol-FL
-    sweep plus one batched multi-model (IFCA) sweep on a small Comms-ML
-    draw; seconds, not minutes."""
+    """CI micro-campaigns: one declarative spec — a batched
+    (3 traces x reps seeds) Tol-FL cell plus a multi-model (IFCA) cell
+    on a small Comms-ML draw; seconds, not minutes."""
     prep = prepare("commsml", seed=0, scale=0.25)
-    cfg = SimConfig(scheme="tolfl", num_devices=10,
-                    num_clusters=prep.clusters, rounds=rounds,
-                    lr=prep.lr, local_epochs=1)
-    traces = [_failure(kind, rounds) for kind in FAIL_KINDS]
+    traces = tuple(_failure(kind, rounds) for kind in FAIL_KINDS)
+    spec = ExperimentSpec(
+        data=data_spec(prep),
+        base=base_config(prep, rounds, local_epochs=1),
+        cells=(CellSpec("tolfl", prep.clusters, traces=traces),
+               CellSpec("ifca", 2, traces=traces)),
+        seeds=SeedSpec.range(reps))
     t0 = time.time()
-    res = run_campaign(prep.ae_cfg, prep.device_x, prep.counts,
-                       prep.test_x, prep.test_y, cfg, traces,
-                       seeds=range(reps))
-    s = res.summary()
-    lines = [f"# smoke micro-campaign: {res.num_scenarios} scenarios, "
-             f"1 compile, {time.time()-t0:.1f}s",
+    res = run_experiment(spec)
+    tolfl, ifca = res.results
+    s = tolfl.summary()
+    lines = [f"# smoke micro-experiment: {res.num_scenarios} scenarios, "
+             f"{res.plan.num_dispatch_buckets} dispatch buckets, "
+             f"{time.time()-t0:.1f}s",
              "fail_kind,auroc_mean,auroc_std"]
     for i, kind in enumerate(FAIL_KINDS):
-        v = res.select(i)
+        v = tolfl.select(i)
         lines.append(f"{kind},{v.mean():.3f},{v.std():.3f}")
     lines.append(f"overall,{s['auroc_used_mean']:.3f},"
                  f"{s['auroc_used_std']:.3f}")
-    assert np.isfinite(res.auroc_used).all(), "smoke campaign produced NaN"
+    assert np.isfinite(tolfl.auroc_used).all(), "smoke produced NaN"
 
-    mcfg = MultiModelConfig(scheme="ifca", num_devices=10, num_models=2,
-                            rounds=rounds, lr=prep.lr)
-    t0 = time.time()
-    mres = run_multimodel_campaign(prep.ae_cfg, prep.device_x, prep.counts,
-                                   prep.test_x, prep.test_y, mcfg, traces,
-                                   seeds=range(reps))
-    lines.append(f"# smoke multi-model micro-campaign (ifca): "
-                 f"{mres.num_scenarios} scenarios, 1 compile, "
-                 f"{time.time()-t0:.1f}s")
     lines.append("fail_kind,best_auroc_mean,multi_auroc_mean")
     for i, kind in enumerate(FAIL_KINDS):
-        lines.append(f"{kind},{mres.select(i, 'best').mean():.3f},"
-                     f"{mres.select(i, 'multi').mean():.3f}")
-    assert np.isfinite(mres.best_auroc).all(), "multi smoke produced NaN"
+        lines.append(f"{kind},{ifca.select(i, 'best').mean():.3f},"
+                     f"{ifca.select(i, 'multi').mean():.3f}")
+    assert np.isfinite(ifca.best_auroc).all(), "multi smoke produced NaN"
     return lines
 
 

@@ -4,20 +4,19 @@ FL (k=1) server death -> remaining N-1 devices train isolated (their mean
 test loss is reported); SBT (k=N) loses one device and keeps training
 collaboratively.  Emits the two loss curves as CSV.
 
-Driven by the batched campaign engine: each scheme's scenario batch
-(here a single server-failure trace) is one compiled call, and the
-per-scenario loss / isolated-loss curves come back stacked.
+One declarative :class:`repro.api.ExperimentSpec` covers both schemes:
+the fl and sbt cells share the single server-failure condition and run
+through the spec -> plan -> execute pipeline (the fl cell's
+isolated-fallback branch dispatches in its own bucket), and the
+per-scenario loss curves come back stacked per cell.
 """
 from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
-from benchmarks.datasets import prepare
-from repro.core.campaign import run_campaign
-from repro.core.failure import FailureSpec
-from repro.core.simulate import SimConfig
+from benchmarks.datasets import base_config, data_spec, prepare
+from repro.api import (CellSpec, ExperimentSpec, FailureSpec, SeedSpec,
+                       TraceSpec, run_experiment)
 
 ROUNDS = 80
 FAIL_AT = 20
@@ -25,17 +24,19 @@ FAIL_AT = 20
 
 def run(dataset: str = "fmnist", rounds: int = ROUNDS) -> List[str]:
     prep = prepare(dataset)
-    failure = FailureSpec(epoch=FAIL_AT, kind="server")
-    out = {}
-    for scheme in ("fl", "sbt"):
-        cfg = SimConfig(scheme=scheme, num_devices=10, rounds=rounds,
-                        lr=prep.lr, local_epochs=prep.local_epochs)
-        res = run_campaign(prep.ae_cfg, prep.device_x, prep.counts,
-                           prep.test_x, prep.test_y, cfg, [failure],
-                           seeds=[0])
-        # the reported loss curve already carries Fig 4 semantics: for
-        # fl the server-dead rounds hold the isolated devices' mean loss
-        out[scheme] = (res.loss_curves[0], float(res.auroc_used[0]))
+    spec = ExperimentSpec(
+        data=data_spec(prep),
+        base=base_config(prep, rounds),
+        cells=(CellSpec("fl", 1), CellSpec("sbt", 10)),
+        traces=TraceSpec.explicit(FailureSpec(epoch=FAIL_AT,
+                                              kind="server")),
+        seeds=SeedSpec((0,)))
+    res = run_experiment(spec)
+    # the reported loss curve already carries Fig 4 semantics: for fl
+    # the server-dead rounds hold the isolated devices' mean loss
+    out = {scheme: (res[(scheme, k)].loss_curves[0],
+                    float(res[(scheme, k)].auroc_used[0]))
+           for scheme, k in (("fl", 1), ("sbt", 10))}
     lines = [f"# Fig 4: server failure at round {FAIL_AT} ({dataset}); "
              f"final AUROC: fl={out['fl'][1]:.3f} sbt={out['sbt'][1]:.3f}",
              "round,fl_isolated_loss,sbt_collaborative_loss"]

@@ -16,6 +16,8 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import (AutoencoderConfig, CIFAR10,
                                              CIFAR100, COMMSML, FMNIST)
+from repro.core.experiment import DataSpec
+from repro.core.simulate import SimConfig
 from repro.data import commsml, federated, reference
 
 N_DEVICES = 10
@@ -87,3 +89,24 @@ def prepare(name: str, seed: int = 0, scale: float = 1.0) -> Prepared:
 
 
 ALL = ("commsml", "fmnist", "cifar10", "cifar100")
+
+
+def data_spec(prep: Prepared) -> DataSpec:
+    """The :class:`repro.core.experiment.DataSpec` of a prepared
+    dataset — the one arrays-plus-config bundle every paper-table bench
+    used to rebuild by hand as a 5-tuple."""
+    return DataSpec(ae_cfg=prep.ae_cfg, device_x=prep.device_x,
+                    device_counts=prep.counts, test_x=prep.test_x,
+                    test_y=prep.test_y, name=prep.name)
+
+
+def base_config(prep: Prepared, rounds: int, scheme: str = "tolfl",
+                **overrides) -> SimConfig:
+    """The dataset's canonical base :class:`SimConfig` (N=10 devices,
+    the dataset's natural k / validated lr / paper local-epoch budget)
+    — the second half of the prep boilerplate the benches shared."""
+    kw = dict(scheme=scheme, num_devices=N_DEVICES,
+              num_clusters=prep.clusters, rounds=rounds, lr=prep.lr,
+              local_epochs=prep.local_epochs)
+    kw.update(overrides)
+    return SimConfig(**kw)

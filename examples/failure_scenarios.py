@@ -1,37 +1,33 @@
 """Failure-rate sweep: the paper's robustness story, Monte-Carlo style.
 
-Instead of hand-listing one scenario per column, this example *samples*
-grids of multi-event failure-and-recovery traces at increasing
-per-device failure rates (:func:`repro.core.failure.sample_traces`) and
-sweeps every scheme over them — paper Section IV-B's expected
-performance E[AUROC](p), with the canonical no/client/server-failure
-conditions (Tables III/IV/V in miniature) kept as the p-column anchors.
+ONE declarative :class:`repro.api.ExperimentSpec` describes the whole
+study: every scheme is a cell — the single-model schemes (Tol-FL / FL /
+SBT / Batch) and the multi-model baselines (FedGroup / IFCA / FeSEM) —
+crossed with a :class:`TraceSpec` holding the canonical
+no/client/server-failure conditions (Tables III/IV/V in miniature) AND
+sampled multi-event failure-and-recovery grids at increasing per-device
+failure rates (paper Section IV-B's expected performance E[AUROC](p)).
 
-Everything is batched AND fused: the non-batch single-model schemes run
-their whole (canonical + sampled traces) x seeds grids through the
-fused campaign dispatcher — tolfl and sbt share literally ONE
-jitted/vmapped call over the flattened (scheme x trace x seed) axis
-(each scheme keeps its own per-topology trace grid; the fl cell's
-isolated-fallback branch dispatches separately) — and the multi-model
-baselines (FedGroup / IFCA / FeSEM) each run their grid through one
-call of the vmapped multi-model campaign core.  The seed's version
-looped Python over every (scheme, scenario, seed) cell.
+``plan(spec)`` lowers that to dispatch buckets — the trace grids are
+sampled per TOPOLOGY (a tolfl head is a plain client under fl; batch
+has no clients at all, so its client column is n/a), identical draws
+are deduplicated, and the non-batch single-model cells fuse per
+iso-tracking kind: tolfl and sbt share literally ONE jitted/vmapped
+call over the flattened (scheme x trace x seed) axis.  ``execute``
+runs the buckets; the per-draw result mapping comes back on the plan.
 
 Run:  PYTHONPATH=src python examples/failure_scenarios.py [--rounds 60]
+      PYTHONPATH=src python examples/failure_scenarios.py --smoke
+The --smoke path (CI) shrinks the grid to seconds-scale and prints the
+execution plan before running it.
 """
 import argparse
 
 import numpy as np
 
-from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.baselines import MultiModelConfig
-from repro.core.campaign import (ExecPlan, mean_ci95, run_campaign,
-                                 run_fused_campaigns,
-                                 run_multimodel_campaign)
-from repro.core.baselines import as_multimodel_trace
-from repro.core.failure import (NO_FAILURE, FailureSpec, as_trace,
-                                sample_rate_grid)
-from repro.core.simulate import SimConfig
+from repro.api import (NO_FAILURE, AutoencoderConfig, CellSpec, DataSpec,
+                       ExecPlan, ExperimentSpec, FailureSpec, SeedSpec,
+                       SimConfig, TraceSpec, execute, mean_ci95, plan)
 from repro.data import commsml, federated
 
 SINGLE = [("Tol-FL", "tolfl", 5), ("FL", "fl", 1), ("SBT", "sbt", 10),
@@ -48,6 +44,37 @@ def fmt(vals):
     return f"{f'{mean:.3f} +- {std:.3f}':<{COL}}"
 
 
+def build_spec(args, p_grid):
+    """The whole study as one spec; returns (spec, canonical labels)."""
+    singles = [c for c in SINGLE if c[1] in args.single]
+    X, y = commsml.generate(seed=0, samples_per_class=args.samples)
+    split = federated.make_split(X, y, args.devices, 5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+
+    canonical = [
+        ("no failure", NO_FAILURE),
+        ("client fail", FailureSpec(epoch=args.rounds // 4,
+                                    kind="client")),
+        ("server fail", FailureSpec(epoch=args.rounds // 4,
+                                    kind="server")),
+    ]
+    spec = ExperimentSpec(
+        data=DataSpec(ae_cfg=AutoencoderConfig(), device_x=dx,
+                      device_counts=counts, test_x=split.test_x,
+                      test_y=split.test_y, name="commsml"),
+        base=SimConfig(num_devices=args.devices, rounds=args.rounds,
+                       lr=1e-3),
+        cells=(tuple(CellSpec(s, k) for _, s, k in singles)
+               + tuple(CellSpec(m, args.multi_k) for m in args.multi)),
+        traces=TraceSpec(traces=tuple(f for _, f in canonical),
+                         p_grid=tuple(p_grid),
+                         traces_per_p=args.traces_per_p),
+        seeds=SeedSpec.range(args.seeds),
+        exec_plan=ExecPlan(shard=args.shard, chunk_size=args.chunk_size))
+    return spec, canonical
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
@@ -61,96 +88,53 @@ def main():
     ap.add_argument("--shard", action="store_true",
                     help="shard the scenario batch across local JAX "
                          "devices (results unchanged)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI path: tiny grid (seconds-scale), plan "
+                         "printed before execution")
     args = ap.parse_args()
-    plan = ExecPlan(shard=args.shard, chunk_size=args.chunk_size)
+    args.single = [s for _, s, _ in SINGLE]
+    args.multi, args.multi_k = MULTI, 3
+    p_grid = P_GRID
+    if args.smoke:
+        # tiny grid, seconds-scale: one fused non-fl bucket (tolfl+sbt),
+        # the fl fallback bucket, one multi bucket — the whole spec ->
+        # plan -> execute surface without the batch cell's extra compile
+        args.rounds, args.samples, args.seeds = 5, 40, 1
+        args.traces_per_p, args.multi, args.multi_k = 1, ["ifca"], 2
+        args.single = ["tolfl", "fl", "sbt"]
+        p_grid = (0.2,)
 
-    X, y = commsml.generate(seed=0, samples_per_class=args.samples)
-    split = federated.make_split(X, y, args.devices, 5, anomaly_classes=[3],
-                                 seed=0)
-    dx, counts = federated.pad_devices(split)
-    ae = AutoencoderConfig()
+    spec, canonical = build_spec(args, p_grid)
+    ep = plan(spec)          # pure: inspectable before anything runs
+    if args.smoke:
+        print(ep.describe())
+        print()
+    res = execute(ep)
 
-    canonical = [
-        ("no failure", NO_FAILURE),
-        ("client fail", FailureSpec(epoch=args.rounds // 4, kind="client")),
-        ("server fail", FailureSpec(epoch=args.rounds // 4, kind="server")),
-    ]
-    p_labels = [f"E[AUROC] p={p:.2f}" for p in P_GRID]
+    p_labels = [f"E[AUROC] p={p:.2f}" for p in p_grid]
     header = (f"{'scheme':<12}"
               + "".join(f"{s:<{COL}}" for s, _ in canonical)
               + "".join(f"{s:<{COL}}" for s in p_labels))
     print(header)
     print("-" * len(header))
 
-    # per scheme: canonical traces + sampled grids per failure rate
-    # (deduplicated — identical draws, including all-none draws aliasing
-    # the canonical no-failure trace, train once).  The trace grids are
-    # sampled per TOPOLOGY (a tolfl head is a plain client under fl), so
-    # the fused cells carry different trace lists — the fused dispatcher
-    # stacks them along the flattened scenario axis all the same.  batch
-    # centralises everything (and its data arrays differ in shape, so it
-    # cannot fuse): a client failure removes nothing -> column n/a.
-    cells, cell_draws = [], {}
-    for label, scheme, k in SINGLE:
-        cfg = SimConfig(scheme=scheme, num_devices=args.devices,
-                        num_clusters=k, rounds=args.rounds, lr=1e-3)
-        topo = cfg.topology()
-        head = [as_trace(f, topo, 2 * topo.num_devices)
-                for _, f in canonical
-                if not (scheme == "batch" and f.kind == "client")]
-        traces, cell_draws[scheme] = sample_rate_grid(
-            np.random.default_rng(0), topo, P_GRID, args.rounds,
-            args.traces_per_p, base_traces=head)
-        cells.append((cfg, traces))
-    fused = run_fused_campaigns(
-        ae, dx, counts, split.test_x, split.test_y,
-        [(cfg, tr) for cfg, tr in cells if cfg.scheme != "batch"],
-        seeds=range(args.seeds), exec_plan=plan)
-    results = dict(zip((c[0].scheme for c in cells
-                        if c[0].scheme != "batch"), fused))
-    for cfg, traces in cells:
-        if cfg.scheme == "batch":
-            results[cfg.scheme] = run_campaign(
-                ae, dx, counts, split.test_x, split.test_y, cfg, traces,
-                seeds=range(args.seeds), exec_plan=plan)
-
-    for label, scheme, k in SINGLE:
-        res, draws = results[scheme], cell_draws[scheme]
-        row, j = f"{label:<12}", 0
-        for sname, fail in canonical:
-            if scheme == "batch" and fail.kind == "client":
+    labels = {s: label for label, s, _ in SINGLE}
+    for cplan, cres in zip(ep.cells, res.results):
+        scheme = cplan.cfg.scheme
+        if cplan.kind == "multi":
+            row = f"{scheme + '*':<12}"
+            sel = (lambda i: cres.select(i, "best"))
+        else:
+            row = f"{labels[scheme]:<12}"
+            sel = cres.select
+        for j, _ in enumerate(canonical):
+            idx = cplan.explicit_index[j]
+            if idx is None:       # batch centralises: no clients to fail
                 row += f"{'n/a (no clients)':<{COL}}"
                 continue
-            row += fmt(res.select(j))
-            j += 1
-        for p in P_GRID:
-            vals = np.concatenate([res.select(i) for i in draws[p]])
-            row += fmt(vals)
-        print(row)
-
-    for scheme in MULTI:
-        mcfg = MultiModelConfig(scheme=scheme, num_devices=args.devices,
-                                num_models=3, rounds=args.rounds, lr=1e-3)
-        # multi-model engines have no cluster heads: sample against the
-        # FL topology (device 0 = the aggregator -> server events) and
-        # normalise the canonical specs with the baseline default targets
-        topo = SimConfig(scheme="fl", num_devices=args.devices).topology()
-        head = [as_multimodel_trace(f, args.devices, 2 * args.devices)
-                for _, f in canonical]
-        traces, draws = sample_rate_grid(
-            np.random.default_rng(0), topo, P_GRID, args.rounds,
-            args.traces_per_p, base_traces=head)
-        res = run_multimodel_campaign(ae, dx, counts, split.test_x,
-                                      split.test_y, mcfg, traces,
-                                      seeds=range(args.seeds),
-                                      exec_plan=plan)
-        row = f"{scheme + '*':<12}"
-        for j, _ in enumerate(canonical):
-            row += fmt(res.select(j, "best"))
-        for p in P_GRID:
-            vals = np.concatenate([res.select(i, "best")
-                                   for i in draws[p]])
-            row += fmt(vals)
+            row += fmt(sel(idx))
+        for p in p_grid:
+            row += fmt(np.concatenate([sel(i) for i in cplan.draws[p]]))
         print(row)
 
     print("\n* = best single instance of a multi-model scheme (paper's "

@@ -15,6 +15,12 @@ echo "== sharded campaign parity (forced 8-device host platform) =="
 # silently drop the multi-device parity contract from CI
 python -m pytest -q tests/test_campaign_exec.py -k sharded
 
+echo "== example smoke: declarative spec -> plan -> execute surface =="
+# tiny grid (<~30 s): keeps the experiment-API surface the example
+# exercises (spec, sampled TraceSpec, plan.describe, fused buckets)
+# from silently rotting
+python examples/failure_scenarios.py --smoke
+
 echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
 # stash the committed baseline before --smoke overwrites it, so the
 # perf trajectory of this change is visible in the CI log below

@@ -1,0 +1,51 @@
+"""One import surface for the reproduction's experiment pipeline.
+
+Everything a study needs — declare a spec, lower it to a plan, execute
+it, and the legacy imperative entry points — re-exported from one
+place::
+
+    from repro import api
+
+    spec = api.ExperimentSpec(...)
+    res = api.run_experiment(spec)          # == execute(plan(spec))
+
+See :mod:`repro.core.experiment` for the spec -> plan -> execute
+contract and :mod:`repro.core.campaign` for the execution mechanism.
+"""
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core.baselines import (MultiModelConfig, MultiModelResult,
+                                  run_multimodel)
+from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
+                                 MultiCampaignResult, mean_ci95,
+                                 run_campaign, run_fused_campaigns,
+                                 run_fused_multimodel_campaigns,
+                                 run_multimodel_campaign, sweep_grid)
+from repro.core.experiment import (SINGLE_SCHEMES, BucketPlan, CellPlan,
+                                   CellSpec, DataSpec, ExecutionPlan,
+                                   ExperimentResult, ExperimentSpec,
+                                   SeedSpec, TraceSpec, cell, execute,
+                                   plan, run_experiment)
+from repro.core.failure import (MAX_EVENTS, NO_FAILURE, FailureEvent,
+                                FailureSpec, FailureTrace, sample_rate_grid,
+                                sample_traces)
+from repro.core.simulate import SimConfig, SimResult, run_simulation
+from repro.core.topology import Topology
+
+__all__ = [
+    # declarative pipeline
+    "ExperimentSpec", "DataSpec", "CellSpec", "TraceSpec", "SeedSpec",
+    "cell", "plan", "execute", "run_experiment", "ExecutionPlan",
+    "CellPlan", "BucketPlan", "ExperimentResult",
+    # execution policy + results
+    "ExecPlan", "CampaignResult", "MultiCampaignResult", "mean_ci95",
+    # configs / schemes
+    "AutoencoderConfig", "SimConfig", "MultiModelConfig", "Topology",
+    "SINGLE_SCHEMES", "MULTI_SCHEMES",
+    # failure model
+    "FailureSpec", "FailureEvent", "FailureTrace", "NO_FAILURE",
+    "MAX_EVENTS", "sample_traces", "sample_rate_grid",
+    # legacy imperative entry points (thin shims over the pipeline)
+    "run_simulation", "SimResult", "run_multimodel", "MultiModelResult",
+    "run_campaign", "run_multimodel_campaign", "sweep_grid",
+    "run_fused_campaigns", "run_fused_multimodel_campaigns",
+]

@@ -27,7 +27,10 @@ The trace split into client events (device mask) and server events
 traces: :func:`repro.core.campaign.run_multimodel_campaign` sweeps a
 whole (trace x seed) grid through ONE compiled executable, while
 :func:`run_multimodel` stays the single-scenario entry point on the
-same cached jitted core.
+same cached jitted core.  Declaratively, a multi-model cell is just a
+``CellSpec("ifca", M)`` in an :class:`repro.core.experiment.
+ExperimentSpec` — the planner groups same-scheme cells into one
+padded-M bucket.
 
 Failure semantics: a *client* failure removes that device; a *server*
 failure kills the aggregator of group 0 — that instance freezes and its

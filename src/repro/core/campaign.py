@@ -55,11 +55,19 @@ and one dispatch.  Padded cluster/model slots are exact no-ops in the
 combine algebra, so results match the per-cell paths bit-for-bit
 (``fuse=False`` restores one dispatch per cell, ``pad_k=False`` the
 one-compile-per-cell static build; both pinned equal by tests).
+
+As of the declarative experiment layer
+(:mod:`repro.core.experiment` / :mod:`repro.api`) this module is the
+MECHANISM — cached executables, batched dispatch, result types — and
+the entry points above are thin shims that lower their arguments to an
+``ExperimentSpec`` and run ``plan(spec) -> execute(plan)``.  New code
+should declare specs; the shims stay for back-compat and are pinned
+bit-identical by ``tests/test_experiment.py``.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -68,13 +76,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.baselines import (MultiModelConfig, _build_multimodel_core,
-                                  as_multimodel_trace,
-                                  prepare_multimodel_arrays)
-from repro.core.failure import (Failure, FailureTrace, as_trace,
-                                concat_traces, stack_traces)
-from repro.core.simulate import (SimConfig, _build_core, _build_core_arrays,
-                                 _prepare_arrays)
+from repro.core.baselines import MultiModelConfig, _build_multimodel_core
+from repro.core.failure import Failure, FailureTrace
+from repro.core.simulate import SimConfig, _build_core, _build_core_arrays
 from repro.sharding import scenario_shard_map
 from repro.training.metrics import auroc_batch
 
@@ -93,7 +97,8 @@ class ExecPlan:
     shard
         Split the scenario axis across the local JAX devices via
         ``shard_map`` (the batch is padded up to a device-divisible
-        size; padding is stripped from the results).
+        size; padding is stripped from the results).  On a single-device
+        host sharding warns and degrades to the plain jitted path.
     chunk_size
         Host-side chunking: at most this many scenarios are resident on
         the devices at once; every chunk has the same padded shape so
@@ -102,14 +107,47 @@ class ExecPlan:
     devices
         Cap on the number of local devices used when sharding
         (default: all of ``jax.local_device_count()``).
+
+    Invalid values raise ``ValueError`` at construction (they used to
+    surface as shape errors deep inside ``_run_batched``).
     """
     shard: bool = False
     chunk_size: Optional[int] = None
     devices: Optional[int] = None
 
+    def __post_init__(self):
+        if self.chunk_size is not None and self.chunk_size <= 0:
+            raise ValueError(
+                f"ExecPlan.chunk_size must be a positive number of "
+                f"scenarios (or None for one-shot), got "
+                f"{self.chunk_size}")
+        if self.devices is not None and self.devices <= 0:
+            raise ValueError(
+                f"ExecPlan.devices must be a positive device count "
+                f"(or None for all local devices), got {self.devices}")
+
     def num_devices(self) -> int:
         n = jax.local_device_count()
         return min(self.devices, n) if self.devices else n
+
+    def resolved_devices(self, warn: bool = True) -> Optional[int]:
+        """Shard width actually used: ``None`` when not sharding — and
+        when ``shard=True`` finds only one local device, in which case
+        it warns and degrades to the (identical-result) unsharded path
+        instead of paying shard_map overhead for nothing."""
+        if not self.shard:
+            return None
+        n = self.num_devices()
+        if n <= 1:
+            if warn:
+                warnings.warn(
+                    "ExecPlan(shard=True) found a single local device; "
+                    "degrading to the unsharded path (results are "
+                    "identical). Set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N to fake "
+                    "a multi-device host.", UserWarning, stacklevel=2)
+            return None
+        return n
 
 
 def mean_ci95(vals: np.ndarray) -> Tuple[float, float, float]:
@@ -284,8 +322,8 @@ def _run_batched(batched_call, bcast_args, mapped, plan: Optional[ExecPlan]):
     plan = plan or ExecPlan()
     B = int(jax.tree.leaves(mapped)[0].shape[0])
     chunk = min(plan.chunk_size or B, B)
-    if plan.shard:
-        ndev = plan.num_devices()
+    ndev = plan.resolved_devices(warn=False)  # entry points warn once
+    if ndev:
         chunk = -(-chunk // ndev) * ndev      # device-divisible chunks
     n_chunks = -(-B // chunk)
     b_pad = n_chunks * chunk
@@ -337,41 +375,23 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     ``pad_k`` (int >= cfg's cluster count) routes through the padded-k
     core so campaigns with different (scheme, k) share one executable —
     :func:`sweep_grid`'s per-cell path sets it to the grid's per-kind
-    max k."""
-    topo = cfg.topology()
-    norm = [as_trace(t, topo) for t in traces]
-    trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
-    if len(trace_idx) == 0:
-        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
-    stacked = stack_traces(norm)
-    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+    max k.  "batch" centralises the data (different array shapes), so
+    it always builds statically and ``pad_k`` is ignored.
 
-    dx, counts, valid = _prepare_arrays(cfg, device_x, device_counts)
-    tx = jnp.asarray(test_x)
-    assert dx.shape[0] == topo.num_devices, (dx.shape, topo.num_devices)
-
-    track_iso = (cfg.scheme == "fl")
-    if pad_k is None:
-        key_cfg = dataclasses.replace(cfg, seed=0)
-        bcast = (dx, counts, valid, tx)
-    else:
-        # scheme / num_clusters are normalised OUT of the cache key: the
-        # padded core reads the topology from the arrays, so every
-        # single-model sweep cell of the same track_iso kind resolves to
-        # the same executable
-        key_cfg = dataclasses.replace(cfg, seed=0, scheme="tolfl",
-                                      num_clusters=1)
-        bcast = (dx, counts, valid, tx) + _padded_topology_arrays(topo,
-                                                                  pad_k)
-    ndev = (exec_plan.num_devices()
-            if exec_plan is not None and exec_plan.shard else None)
-    batched = _executable("single", ae_cfg, key_cfg, pad_k, ndev,
-                          track_iso)
-    out = _run_batched(batched, bcast,
-                       (batch_traces, jnp.asarray(seed_arr)), exec_plan)
-
-    return _post_process(cfg, out, trace_idx, seed_arr, test_y,
-                         target_loss)
+    A thin shim over the declarative pipeline
+    (:mod:`repro.core.experiment`): one-cell spec, per-cell dispatch."""
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(
+        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+                        device_counts=device_counts, test_x=test_x,
+                        test_y=test_y),
+        base=cfg,
+        cells=(X.CellSpec(scheme=cfg.scheme, k=cfg.num_clusters, cfg=cfg,
+                          traces=traces),),
+        seeds=X.SeedSpec(tuple(seeds)), exec_plan=exec_plan,
+        target_loss=target_loss, fuse=False,
+        pad_k=(pad_k is not None), k_pad=pad_k)
+    return X.run_experiment(spec).results[0]
 
 
 def _post_process(cfg, out, trace_idx, seed_arr, test_y, target_loss
@@ -450,31 +470,20 @@ def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
     default targets (see :func:`as_multimodel_trace`).  The client/group
     trace split happens in-graph inside the core, so one compiled
     executable covers the whole grid.  ``cfg.seed`` is ignored — seeds
-    come from the grid."""
-    norm = [as_multimodel_trace(t, cfg.num_devices) for t in traces]
-    trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
-    if len(trace_idx) == 0:
-        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
-    stacked = stack_traces(norm)
-    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+    come from the grid.
 
-    dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
-    tx = jnp.asarray(test_x)
-    assert dx.shape[0] == cfg.num_devices, (dx.shape, cfg.num_devices)
-    key_cfg = dataclasses.replace(cfg, seed=0)
-    ndev = (exec_plan.num_devices()
-            if exec_plan is not None and exec_plan.shard else None)
-    batched = _executable("multi", ae_cfg, key_cfg, None, ndev)
-    model_valid = jnp.ones((cfg.num_models,), jnp.float32)
-    out = _run_batched(batched, (dx, counts, valid, tx, model_valid),
-                       (batch_traces, jnp.asarray(seed_arr)), exec_plan)
-
-    best, multi = _multi_metrics(np.asarray(out.final_scores), test_y)
-    return MultiCampaignResult(cfg=cfg, trace_index=trace_idx,
-                               seed=seed_arr, best_auroc=best,
-                               multi_auroc=multi,
-                               loss_curves=np.asarray(out.losses),
-                               assignments=np.asarray(out.assignments))
+    A thin shim over the declarative pipeline
+    (:mod:`repro.core.experiment`): one-cell spec, per-cell dispatch."""
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(
+        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+                        device_counts=device_counts, test_x=test_x,
+                        test_y=test_y),
+        base=SimConfig(num_devices=cfg.num_devices),
+        cells=(X.CellSpec(scheme=cfg.scheme, k=cfg.num_models, cfg=cfg,
+                          traces=traces),),
+        seeds=X.SeedSpec(tuple(seeds)), exec_plan=exec_plan, fuse=False)
+    return X.run_experiment(spec).results[0]
 
 
 def _multi_metrics(finals: np.ndarray, test_y,
@@ -538,6 +547,10 @@ def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
 
     "batch" cells centralise the data (different array shapes) and are
     rejected — run them through :func:`run_campaign`.
+
+    A thin shim over the declarative pipeline
+    (:mod:`repro.core.experiment`): per-cell explicit trace lists,
+    fused buckets grouped by :func:`plan`.
     """
     if not cells:
         return []
@@ -546,67 +559,18 @@ def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
             raise ValueError("'batch' cells centralise the data onto one "
                              "device (different array shapes); run them "
                              "via run_campaign")
-    dx, counts, valid = _prepare_arrays(cells[0][0], device_x,
-                                        device_counts)
-    tx = jnp.asarray(test_x)
-    ndev = (exec_plan.num_devices()
-            if exec_plan is not None and exec_plan.shard else None)
-
-    groups: Dict[Tuple[SimConfig, bool], List[int]] = {}
-    for i, (cfg, _) in enumerate(cells):
-        key_cfg = dataclasses.replace(cfg, seed=0, scheme="tolfl",
-                                      num_clusters=1)
-        groups.setdefault((key_cfg, cfg.scheme == "fl"), []).append(i)
-
-    results: List[Optional[CampaignResult]] = [None] * len(cells)
-    trace_cache: dict = {}    # one stacked batch per distinct resolution
-    for (key_cfg, track_iso), idxs in groups.items():
-        kp = k_pad or max(cells[i][0].topology().num_clusters
-                          for i in idxs)
-        cids_l, heads_l, hv_l, tr_l = [], [], [], []
-        meta = []
-        for i in idxs:
-            cfg, traces = cells[i]
-            topo = cfg.topology()
-            assert dx.shape[0] == topo.num_devices, (dx.shape,
-                                                     topo.num_devices)
-            ck = (tuple(id(t) for t in traces),
-                  _single_trace_key(traces, topo))
-            if ck not in trace_cache:
-                norm = [as_trace(t, topo) for t in traces]
-                trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
-                if len(trace_idx) == 0:
-                    raise ValueError("empty campaign: need >=1 trace and "
-                                     ">=1 seed")
-                stacked = stack_traces(norm)
-                trace_cache[ck] = (
-                    jax.tree.map(lambda x: x[trace_idx], stacked),
-                    trace_idx, seed_arr)
-            batch_traces, trace_idx, seed_arr = trace_cache[ck]
-            b = len(seed_arr)
-            cids, heads, hvalid = _padded_topology_arrays(topo, kp)
-            cids_l.append(jnp.broadcast_to(cids, (b,) + cids.shape))
-            heads_l.append(jnp.broadcast_to(heads, (b,) + heads.shape))
-            hv_l.append(jnp.broadcast_to(hvalid, (b,) + hvalid.shape))
-            tr_l.append(batch_traces)
-            meta.append((i, cfg, trace_idx, seed_arr, b))
-
-        mapped = (jnp.concatenate(cids_l), jnp.concatenate(heads_l),
-                  jnp.concatenate(hv_l), concat_traces(tr_l),
-                  jnp.asarray(np.concatenate([m[3] for m in meta])))
-        batched = _executable("single", ae_cfg, key_cfg, kp, ndev,
-                              track_iso, fused=True)
-        out = _run_batched(batched, (dx, counts, valid, tx), mapped,
-                           exec_plan)
-        fields = _post_process_arrays(track_iso, out, test_y, target_loss)
-        off = 0
-        for i, cfg, trace_idx, seed_arr, b in meta:
-            cell = {name: arr[off:off + b]
-                    for name, arr in fields.items()}
-            results[i] = CampaignResult(cfg=cfg, trace_index=trace_idx,
-                                        seed=seed_arr, **cell)
-            off += b
-    return results
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(
+        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+                        device_counts=device_counts, test_x=test_x,
+                        test_y=test_y),
+        base=cells[0][0],
+        cells=tuple(X.CellSpec(scheme=cfg.scheme, k=cfg.num_clusters,
+                               cfg=cfg, traces=traces)
+                    for cfg, traces in cells),
+        seeds=X.SeedSpec(tuple(seeds)), exec_plan=exec_plan,
+        target_loss=target_loss, k_pad=k_pad)
+    return X.run_experiment(spec).results
 
 
 def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
@@ -630,71 +594,24 @@ def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
     seed) axis, so cells with DIFFERENT model counts share one compiled
     executable and one dispatch.  Padded model slots are exact no-ops
     (never assigned, never aggregated, masked out of the loss/metrics),
-    so per-cell results match :func:`run_multimodel_campaign`."""
+    so per-cell results match :func:`run_multimodel_campaign`.
+
+    A thin shim over the declarative pipeline
+    (:mod:`repro.core.experiment`)."""
     if not cells:
         return []
-    dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
-    tx = jnp.asarray(test_x)
-    ndev = (exec_plan.num_devices()
-            if exec_plan is not None and exec_plan.shard else None)
-
-    groups: Dict[MultiModelConfig, List[int]] = {}
-    for i, (cfg, _) in enumerate(cells):
-        key_cfg = dataclasses.replace(cfg, seed=0, num_models=0)
-        groups.setdefault(key_cfg, []).append(i)
-
-    results: List[Optional[MultiCampaignResult]] = [None] * len(cells)
-    trace_cache: dict = {}
-    for key_cfg, idxs in groups.items():
-        mp = pad_m or max(cells[i][0].num_models for i in idxs)
-        mv_l, tr_l = [], []
-        meta = []
-        for i in idxs:
-            cfg, traces = cells[i]
-            assert dx.shape[0] == cfg.num_devices, (dx.shape,
-                                                    cfg.num_devices)
-            ck = (tuple(id(t) for t in traces), cfg.num_devices)
-            if ck not in trace_cache:
-                norm = [as_multimodel_trace(t, cfg.num_devices)
-                        for t in traces]
-                trace_idx, seed_arr = _scenario_grid(len(norm), seeds)
-                if len(trace_idx) == 0:
-                    raise ValueError("empty campaign: need >=1 trace and "
-                                     ">=1 seed")
-                stacked = stack_traces(norm)
-                trace_cache[ck] = (
-                    jax.tree.map(lambda x: x[trace_idx], stacked),
-                    trace_idx, seed_arr)
-            batch_traces, trace_idx, seed_arr = trace_cache[ck]
-            b = len(seed_arr)
-            assert mp >= cfg.num_models, (mp, cfg.num_models)
-            mv = np.zeros((mp,), np.float32)
-            mv[:cfg.num_models] = 1.0
-            mv_l.append(jnp.broadcast_to(jnp.asarray(mv), (b, mp)))
-            tr_l.append(batch_traces)
-            meta.append((i, cfg, trace_idx, seed_arr, b))
-
-        mapped = (jnp.concatenate(mv_l), concat_traces(tr_l),
-                  jnp.asarray(np.concatenate([m[3] for m in meta])))
-        exe_cfg = dataclasses.replace(key_cfg, num_models=mp)
-        batched = _executable("multi", ae_cfg, exe_cfg, None, ndev,
-                              fused=True)
-        out = _run_batched(batched, (dx, counts, valid, tx), mapped,
-                           exec_plan)
-        model_valid = np.asarray(mapped[0])
-        best, multi = _multi_metrics(np.asarray(out.final_scores),
-                                     test_y, model_valid)
-        losses = np.asarray(out.losses)
-        assigns = np.asarray(out.assignments)
-        off = 0
-        for i, cfg, trace_idx, seed_arr, b in meta:
-            sl = slice(off, off + b)
-            results[i] = MultiCampaignResult(
-                cfg=cfg, trace_index=trace_idx, seed=seed_arr,
-                best_auroc=best[sl], multi_auroc=multi[sl],
-                loss_curves=losses[sl], assignments=assigns[sl])
-            off += b
-    return results
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(
+        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+                        device_counts=device_counts, test_x=test_x,
+                        test_y=test_y),
+        base=SimConfig(num_devices=cells[0][0].num_devices),
+        cells=tuple(X.CellSpec(scheme=cfg.scheme, k=cfg.num_models,
+                               cfg=cfg, traces=traces)
+                    for cfg, traces in cells),
+        seeds=X.SeedSpec(tuple(seeds)), exec_plan=exec_plan,
+        m_pad=pad_m)
+    return X.run_experiment(spec).results
 
 
 def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
@@ -737,67 +654,22 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     share one executable and one dispatch
     (:func:`run_fused_multimodel_campaigns`); ``fuse=False`` dispatches
     each through :func:`run_multimodel_campaign`.  Every cell covers
-    the full (trace x seed) scenario batch under ``exec_plan``."""
-    def mcfg_for(scheme, k):
-        # multi-model engines take ONE local step per round: give them
-        # the single-model cells' TOTAL local-step budget (rounds x E)
-        # so grid columns compare equal work
-        return MultiModelConfig(scheme=scheme,
-                                num_devices=base.num_devices,
-                                num_models=k,
-                                rounds=base.rounds * base.local_epochs,
-                                lr=base.lr, dropout=base.dropout)
+    the full (trace x seed) scenario batch under ``exec_plan``.
 
-    single = [(scheme, k) for scheme, k in scheme_ks
-              if scheme not in MULTI_SCHEMES and scheme != "batch"]
-    multi = [(scheme, k) for scheme, k in scheme_ks
-             if scheme in MULTI_SCHEMES]
-    out: Dict[Tuple[str, int], CampaignResult] = {}
-    if fuse and pad_k:
-        if single:
-            res = run_fused_campaigns(
-                ae_cfg, device_x, device_counts, test_x, test_y,
-                [(dataclasses.replace(base, scheme=s, num_clusters=k),
-                  traces) for s, k in single],
-                seeds, target_loss, exec_plan)
-            out.update(zip(single, res))
-        if multi:
-            res = run_fused_multimodel_campaigns(
-                ae_cfg, device_x, device_counts, test_x, test_y,
-                [(mcfg_for(s, k), traces) for s, k in multi],
-                seeds, exec_plan)
-            out.update(zip(multi, res))
-        for scheme, k in scheme_ks:
-            if scheme == "batch":
-                cfg = dataclasses.replace(base, scheme=scheme,
-                                          num_clusters=k)
-                out[(scheme, k)] = run_campaign(
-                    ae_cfg, device_x, device_counts, test_x, test_y, cfg,
-                    traces, seeds, target_loss, exec_plan=exec_plan)
-        return {key: out[key] for key in scheme_ks}
-
-    # per-cell dispatch: pad cluster arrays to the PER-KIND max k (each
-    # iso-tracking kind has its own executable either way, so e.g. an fl
-    # cell never pays a wider combine than its kind's cells need)
-    k_kind = {}
-    for scheme, k in single:
-        kind = (scheme == "fl")
-        cfg_k = dataclasses.replace(base, scheme=scheme, num_clusters=k)
-        k_kind[kind] = max(k_kind.get(kind, 1),
-                           cfg_k.topology().num_clusters)
-    for scheme, k in scheme_ks:
-        if scheme in MULTI_SCHEMES:
-            out[(scheme, k)] = run_multimodel_campaign(
-                ae_cfg, device_x, device_counts, test_x, test_y,
-                mcfg_for(scheme, k), traces, seeds, exec_plan=exec_plan)
-        else:
-            cfg = dataclasses.replace(base, scheme=scheme, num_clusters=k)
-            cell_pad = (k_kind[scheme == "fl"]
-                        if pad_k and scheme != "batch" else None)
-            out[(scheme, k)] = run_campaign(ae_cfg, device_x,
-                                            device_counts, test_x, test_y,
-                                            cfg, traces, seeds,
-                                            target_loss,
-                                            exec_plan=exec_plan,
-                                            pad_k=cell_pad)
-    return out
+    A thin shim over the declarative pipeline: the grid IS an
+    :class:`repro.core.experiment.ExperimentSpec` (one
+    :class:`CellSpec` per (scheme, k), configs derived from ``base``),
+    and bucketing / padding decisions live in
+    :func:`repro.core.experiment.plan`."""
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(
+        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+                        device_counts=device_counts, test_x=test_x,
+                        test_y=test_y),
+        base=base,
+        cells=tuple(X.CellSpec(scheme=s, k=k) for s, k in scheme_ks),
+        traces=X.TraceSpec(traces=tuple(traces)),
+        seeds=X.SeedSpec(tuple(seeds)), exec_plan=exec_plan,
+        target_loss=target_loss, fuse=fuse, pad_k=pad_k)
+    res = X.run_experiment(spec)
+    return dict(zip(tuple(scheme_ks), res.results))

@@ -1,0 +1,816 @@
+"""Declarative experiment layer: one spec -> plan -> execute pipeline.
+
+The paper's headline results (Figs. 4-6, Tables III-V) are grids over
+{scheme, k, failure pattern, seed}.  The campaign engine can sweep such
+grids at hardware speed (:mod:`repro.core.campaign`), but its entry
+points grew organically — six functions with 8-12 positional arguments,
+and every benchmark re-implemented data prep and cell bookkeeping.
+This module is the single choke point instead:
+
+* an :class:`ExperimentSpec` *declares* a study — dataset
+  (:class:`DataSpec`), a grid of (scheme, k/M) cells
+  (:class:`CellSpec`), the failure conditions (:class:`TraceSpec`:
+  explicit traces and/or sampled failure-rate grids), the seed
+  population (:class:`SeedSpec`) and the execution policy
+  (:class:`repro.core.campaign.ExecPlan`);
+* :func:`plan` *lowers* the spec to an :class:`ExecutionPlan` — groups
+  cells into fused iso-tracking dispatch buckets, chooses per-kind
+  pad-k / pad-M, resolves per-topology trace sampling, and computes the
+  shard / chunk geometry.  Planning never builds or dispatches a
+  compiled executable (``campaign.TRACE_COUNT`` stays put), so plans
+  are printable (:meth:`ExecutionPlan.describe`) and unit-testable for
+  free;
+* :func:`execute` runs the plan through the batched campaign machinery
+  — one ``jit(vmap)`` dispatch per bucket — and returns an
+  :class:`ExperimentResult`: per-scenario arrays keyed by (cell, trace,
+  seed) with ``.summary()`` / ``.per_cell()`` / ``.to_rows()``.
+
+The legacy entry points (``run_campaign``, ``run_multimodel_campaign``,
+``sweep_grid``, ``run_fused_campaigns``,
+``run_fused_multimodel_campaigns``) are thin shims over this pipeline
+(bit-identical results — the shims build the same executable-cache keys
+and stacked operands, pinned by ``tests/test_experiment.py``), and
+``run_simulation`` is the scalar core the pipeline vmaps.  The coming
+multi-host work (``jax.distributed`` process meshes) extends exactly
+one seam: the bucket geometry that :func:`plan` computes.
+
+Typical use::
+
+    from repro.api import (CellSpec, DataSpec, ExperimentSpec, SeedSpec,
+                           TraceSpec, execute, plan)
+
+    spec = ExperimentSpec(
+        data=DataSpec(ae_cfg=ae, device_x=dx, device_counts=counts,
+                      test_x=tx, test_y=ty),
+        base=SimConfig(num_devices=10, rounds=40, lr=1e-3),
+        cells=(CellSpec("tolfl", 5), CellSpec("fl", 1),
+               CellSpec("ifca", 3)),
+        traces=TraceSpec(traces=(NO_FAILURE, FailureSpec(20, "server")),
+                         p_grid=(0.1, 0.3), traces_per_p=4),
+        seeds=SeedSpec.range(3))
+    p = plan(spec)            # pure; inspect p.describe() before running
+    res = execute(p)          # one fused dispatch per bucket
+    res.per_cell()[("tolfl", 5)].summary()["auroc_used_mean"]
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import campaign as _c
+from repro.core.baselines import (MultiModelConfig, as_multimodel_trace,
+                                  prepare_multimodel_arrays)
+from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
+                                 MultiCampaignResult)
+from repro.core.failure import (Failure, FailureSpec, FailureTrace, as_trace,
+                                concat_traces, sample_rate_grid,
+                                stack_traces)
+from repro.core.simulate import SimConfig, _prepare_arrays
+from repro.core.topology import Topology
+
+#: single-model schemes the simulator core understands
+SINGLE_SCHEMES = ("batch", "fl", "sbt", "tolfl")
+
+
+# ---------------------------------------------------------------------------
+# Spec dataclasses (the declarative surface)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True, eq=False)
+class DataSpec:
+    """Dataset + federated partition of one experiment.
+
+    ``device_x`` is the (N, n_max, D) padded per-device tensor,
+    ``device_counts`` the (N,) true sample counts — exactly the arrays
+    :func:`repro.data.federated.pad_devices` returns.  ``name`` is
+    cosmetic (it tags :meth:`ExperimentResult.to_rows`)."""
+    ae_cfg: AutoencoderConfig
+    device_x: np.ndarray
+    device_counts: np.ndarray
+    test_x: np.ndarray
+    test_y: np.ndarray
+    name: str = ""
+
+
+@dataclass(frozen=True, eq=False)
+class CellSpec:
+    """One grid cell: a scheme plus its k (clusters) or M (models).
+
+    ``overrides`` are (field, value) pairs applied on top of the config
+    derived from the experiment's base :class:`SimConfig` — e.g.
+    ``(("lr", 1e-4),)``.  ``traces`` (optional) replaces the
+    experiment-level explicit trace list for THIS cell only (sampled
+    grids from the :class:`TraceSpec` still apply) — the escape hatch
+    for ragged grids like "batch has no client-failure column".
+    ``cfg`` (optional) bypasses derivation entirely with a fully-formed
+    :class:`SimConfig` / :class:`MultiModelConfig` — the legacy shims
+    use it; spec authors should not need it.
+
+    Single-model schemes (batch / fl / sbt / tolfl) read k as the
+    cluster count; multi-model schemes (fedgroup / ifca / fesem) read
+    it as the model count M and inherit the single-model cells' TOTAL
+    local-step budget (base.rounds x base.local_epochs) so grid columns
+    compare equal work."""
+    scheme: str
+    k: int = 1
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+    traces: Optional[Sequence[Failure]] = None
+    label: Optional[str] = None
+    cfg: Optional[Union[SimConfig, MultiModelConfig]] = None
+
+    @property
+    def kind(self) -> str:
+        """"single" or "multi" — which engine runs this cell."""
+        scheme = (self.cfg.scheme if self.cfg is not None else self.scheme)
+        if scheme in MULTI_SCHEMES:
+            return "multi"
+        if scheme in SINGLE_SCHEMES:
+            return "single"
+        raise ValueError(
+            f"unknown scheme {scheme!r}: single-model schemes are "
+            f"{SINGLE_SCHEMES}, multi-model baselines {MULTI_SCHEMES}")
+
+    def resolve(self, base: SimConfig
+                ) -> Union[SimConfig, MultiModelConfig]:
+        """The cell's full config, derived from ``base`` (or ``cfg``)."""
+        if self.cfg is not None:
+            return self.cfg
+        if self.kind == "multi":
+            cfg: Any = MultiModelConfig(
+                scheme=self.scheme, num_devices=base.num_devices,
+                num_models=self.k,
+                rounds=base.rounds * base.local_epochs,
+                lr=base.lr, dropout=base.dropout)
+        else:
+            cfg = dataclasses.replace(base, scheme=self.scheme,
+                                      num_clusters=self.k)
+        if self.overrides:
+            cfg = dataclasses.replace(cfg, **dict(self.overrides))
+        return cfg
+
+    def key(self) -> Any:
+        """Result-dict key: the label if given, else (scheme, k)."""
+        if self.label is not None:
+            return self.label
+        if self.cfg is not None:
+            k = (self.cfg.num_models if self.kind == "multi"
+                 else self.cfg.num_clusters)
+            return (self.cfg.scheme, k)
+        return (self.scheme, self.k)
+
+
+def cell(scheme: str, k: int = 1, traces: Optional[Sequence[Failure]] = None,
+         label: Optional[str] = None, **overrides) -> CellSpec:
+    """Sugar: ``cell("tolfl", 5, lr=1e-4)`` ==
+    ``CellSpec("tolfl", 5, overrides=(("lr", 1e-4),))``."""
+    return CellSpec(scheme, k, tuple(sorted(overrides.items())), traces,
+                    label)
+
+
+@dataclass(frozen=True, eq=False)
+class TraceSpec:
+    """Failure conditions of an experiment.
+
+    Two composable parts:
+
+    * ``traces`` — explicit conditions (legacy ``FailureSpec``s or
+      ``FailureTrace``s), shared by every cell (a cell may override its
+      list via :attr:`CellSpec.traces`).
+    * ``p_grid`` — sampled failure-rate grids: for each rate p,
+      ``traces_per_p`` multi-event failure-and-recovery scenarios are
+      drawn via :func:`repro.core.failure.sample_rate_grid` against
+      EACH CELL'S OWN topology (a tolfl head is a plain client under
+      fl; multi-model baselines sample against the FL topology, device
+      0 = the aggregator).  Draws are deduplicated per cell and the
+      explicit traces join the dedup as the grid's base conditions, so
+      an all-none draw aliases the no-failure condition instead of
+      retraining it.  ``plan()`` records the draw -> trace-index map in
+      :attr:`CellPlan.draws`.
+
+    When ``p_grid`` is non-empty the explicit entries are normalised to
+    traces at the slot budget (``max_events``, default 2N — enough for
+    every device to fail AND recover); a "client" ``FailureSpec`` is
+    dropped for batch cells (batch centralises the data: there are no
+    clients), recorded as ``None`` in :attr:`CellPlan.explicit_index`.
+    Without sampling, explicit entries pass through to the engine
+    verbatim — bit-compatible with the legacy entry points."""
+    traces: Tuple[Failure, ...] = ()
+    p_grid: Tuple[float, ...] = ()
+    traces_per_p: int = 4
+    recover_prob: float = 0.5
+    sample_seed: int = 0
+    max_events: Optional[int] = None
+
+    @staticmethod
+    def explicit(*traces: Failure) -> "TraceSpec":
+        return TraceSpec(traces=tuple(traces))
+
+    @staticmethod
+    def sampled(p_grid: Sequence[float], traces_per_p: int = 4,
+                base: Sequence[Failure] = (), recover_prob: float = 0.5,
+                sample_seed: int = 0,
+                max_events: Optional[int] = None) -> "TraceSpec":
+        return TraceSpec(traces=tuple(base), p_grid=tuple(p_grid),
+                         traces_per_p=traces_per_p,
+                         recover_prob=recover_prob,
+                         sample_seed=sample_seed, max_events=max_events)
+
+
+@dataclass(frozen=True)
+class SeedSpec:
+    """The seed population every (cell, trace) pair crosses with."""
+    seeds: Tuple[int, ...] = (0,)
+
+    @staticmethod
+    def range(n: int, start: int = 0) -> "SeedSpec":
+        return SeedSpec(tuple(builtins_range(start, start + n)))
+
+
+builtins_range = range
+
+
+@dataclass(frozen=True, eq=False)
+class ExperimentSpec:
+    """A whole study, declaratively: see the module docstring example.
+
+    ``base`` seeds every cell's config derivation
+    (:meth:`CellSpec.resolve`); ``fuse`` / ``pad_k`` / ``k_pad`` /
+    ``m_pad`` mirror the legacy ``sweep_grid`` execution knobs (the
+    defaults — fuse with per-kind max pads — are what you want; the
+    per-cell paths exist for parity pinning)."""
+    data: DataSpec
+    base: SimConfig
+    cells: Tuple[CellSpec, ...]
+    traces: TraceSpec = TraceSpec()
+    seeds: SeedSpec = SeedSpec()
+    exec_plan: Optional[ExecPlan] = None
+    target_loss: Optional[float] = None
+    fuse: bool = True
+    pad_k: bool = True
+    k_pad: Optional[int] = None      # explicit pad-k override (all buckets)
+    m_pad: Optional[int] = None      # explicit pad-M override (all buckets)
+
+
+# ---------------------------------------------------------------------------
+# The lowered plan
+# ---------------------------------------------------------------------------
+@dataclass
+class CellPlan:
+    """One cell, resolved: full config + its trace list and draw map."""
+    index: int
+    spec: CellSpec
+    cfg: Union[SimConfig, MultiModelConfig]
+    kind: str                       # "single" | "multi"
+    traces: Sequence[Failure]       # resolved per-cell trace list
+    explicit_index: Dict[int, Optional[int]]   # explicit pos -> trace idx
+    draws: Dict[float, List[int]]   # rate p -> one trace idx per draw
+    num_scenarios: int              # len(traces) * len(seeds)
+
+    @property
+    def key(self) -> Any:
+        return self.spec.key()
+
+
+@dataclass
+class BucketPlan:
+    """One dispatch bucket: the cells that share a compiled executable
+    AND (when ``fused``) a single stacked ``jit(vmap)`` dispatch."""
+    index: int
+    kind: str                       # "single" | "multi"
+    fused: bool
+    cell_indices: List[int]
+    key_cfg: Union[SimConfig, MultiModelConfig]   # executable-cache key
+    track_iso: bool = False         # single: the fl fallback branch
+    k_pad: Optional[int] = None     # single: padded cluster-axis length
+    m_pad: Optional[int] = None     # multi fused: padded model-axis length
+    num_scenarios: int = 0          # flattened (cell x trace x seed) B
+    chunk: int = 0                  # scenarios resident per dispatch
+    num_chunks: int = 0
+    padded_scenarios: int = 0       # B rounded up to chunk * num_chunks
+    devices: Optional[int] = None   # shard width (None = unsharded)
+
+    def describe(self) -> str:
+        mode = ("fused" if self.fused else
+                "per-cell" if (self.k_pad or self.m_pad) else "static")
+        pads = []
+        if self.k_pad is not None:
+            pads.append(f"pad_k={self.k_pad}")
+        if self.m_pad is not None:
+            pads.append(f"pad_m={self.m_pad}")
+        if self.track_iso:
+            pads.append("iso")
+        geom = f"B={self.num_scenarios}"
+        if self.padded_scenarios != self.num_scenarios:
+            geom += f"(pad {self.padded_scenarios})"
+        geom += f" chunks={self.num_chunks}x{self.chunk}"
+        if self.devices:
+            geom += f" shard={self.devices}dev"
+        return (f"bucket {self.index}: {self.kind} {mode} "
+                f"[{' '.join(pads) or '-'}] cells={self.cell_indices} "
+                f"{geom}")
+
+
+@dataclass
+class ExecutionPlan:
+    """What :func:`execute` will run — computed without building or
+    dispatching any executable, so it is printable and testable for
+    free (``plan()`` unit tests assert ``campaign.TRACE_COUNT`` never
+    moves)."""
+    spec: ExperimentSpec
+    cells: List[CellPlan]
+    buckets: List[BucketPlan]
+
+    @property
+    def num_scenarios(self) -> int:
+        return sum(c.num_scenarios for c in self.cells)
+
+    @property
+    def num_dispatch_buckets(self) -> int:
+        return len(self.buckets)
+
+    def cell(self, key) -> CellPlan:
+        for c in self.cells:
+            if c.key == key:
+                return c
+        raise KeyError(key)
+
+    def describe(self) -> str:
+        seeds = self.spec.seeds.seeds
+        lines = [f"ExperimentPlan: {len(self.cells)} cells x "
+                 f"{len(seeds)} seeds -> {self.num_scenarios} scenarios "
+                 f"in {len(self.buckets)} dispatch buckets"]
+        for c in self.cells:
+            lines.append(f"  cell {c.index} {c.key}: {len(c.traces)} "
+                         f"traces, {c.num_scenarios} scenarios")
+        lines.extend("  " + b.describe() for b in self.buckets)
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# plan(): spec -> ExecutionPlan
+# ---------------------------------------------------------------------------
+def _resolve_cell_traces(spec: ExperimentSpec, cspec: CellSpec,
+                         cfg, kind: str, shared_explicit: Sequence[Failure]):
+    """(traces, explicit_index, draws) of one cell per the TraceSpec."""
+    ts = spec.traces
+    explicit = (list(cspec.traces) if cspec.traces is not None
+                else shared_explicit)
+    if not ts.p_grid:
+        # verbatim pass-through: no normalisation, no dedup — the
+        # legacy-compatible path every shim rides
+        return explicit, {j: j for j in range(len(explicit))}, {}
+
+    if kind == "single":
+        topo = cfg.topology()
+        n = topo.num_devices
+        rounds = cfg.rounds
+    else:
+        # baselines have no cluster heads: sample against the FL
+        # topology (device 0 = the aggregator -> server events)
+        topo = Topology(cfg.num_devices, 1)
+        n = cfg.num_devices
+        rounds = cfg.rounds
+    max_events = ts.max_events or 2 * n
+
+    base_traces: List[FailureTrace] = []
+    explicit_index: Dict[int, Optional[int]] = {}
+    for j, f in enumerate(explicit):
+        if (kind == "single" and cfg.scheme == "batch"
+                and isinstance(f, FailureSpec) and f.kind == "client"):
+            # batch centralises the data: there are no clients to fail
+            explicit_index[j] = None
+            continue
+        if kind == "multi":
+            t = as_multimodel_trace(f, n, max_events)
+        else:
+            t = as_trace(f, topo, max_events)
+        explicit_index[j] = len(base_traces)
+        base_traces.append(t)
+
+    rng = np.random.default_rng(ts.sample_seed)
+    traces, draws = sample_rate_grid(rng, topo, ts.p_grid, rounds,
+                                     ts.traces_per_p,
+                                     max_events=max_events,
+                                     recover_prob=ts.recover_prob,
+                                     base_traces=base_traces)
+    return traces, explicit_index, draws
+
+
+def _geometry(bucket: BucketPlan, exec_plan: Optional[ExecPlan]) -> None:
+    """Fill the bucket's shard / chunk geometry (mirrors
+    ``campaign._run_batched`` arithmetic)."""
+    plan_ = exec_plan or ExecPlan()
+    B = bucket.num_scenarios
+    chunk = min(plan_.chunk_size or B, B)
+    # warn (about shard degrading to one device) once per plan, not
+    # once per bucket
+    ndev = plan_.resolved_devices(warn=(bucket.index == 0))
+    if ndev:
+        chunk = -(-chunk // ndev) * ndev
+    bucket.devices = ndev
+    bucket.chunk = chunk
+    bucket.num_chunks = -(-B // chunk)
+    bucket.padded_scenarios = bucket.num_chunks * chunk
+
+
+def plan(spec: ExperimentSpec) -> ExecutionPlan:
+    """Lower a spec to dispatch buckets — pure host-side work.
+
+    Raises ``ValueError`` up front for empty grids, unknown schemes and
+    invalid :class:`ExecPlan` values (the legacy paths failed deep
+    inside ``_run_batched``)."""
+    if not spec.cells:
+        raise ValueError("empty experiment: need >= 1 cell")
+    if len(spec.seeds.seeds) == 0:
+        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
+
+    shared_explicit = list(spec.traces.traces)
+    cells: List[CellPlan] = []
+    for i, cspec in enumerate(spec.cells):
+        kind = cspec.kind            # validates the scheme
+        cfg = cspec.resolve(spec.base)
+        traces, explicit_index, draws = _resolve_cell_traces(
+            spec, cspec, cfg, kind, shared_explicit)
+        if len(traces) == 0:
+            raise ValueError("empty campaign: need >=1 trace and "
+                             ">=1 seed")
+        cells.append(CellPlan(
+            index=i, spec=cspec, cfg=cfg, kind=kind, traces=traces,
+            explicit_index=explicit_index, draws=draws,
+            num_scenarios=len(traces) * len(spec.seeds.seeds)))
+
+    buckets: List[BucketPlan] = []
+    fused_mode = spec.fuse and spec.pad_k
+
+    def add(bucket: BucketPlan) -> None:
+        bucket.index = len(buckets)
+        bucket.num_scenarios = sum(cells[i].num_scenarios
+                                   for i in bucket.cell_indices)
+        _geometry(bucket, spec.exec_plan)
+        buckets.append(bucket)
+
+    singles = [c for c in cells
+               if c.kind == "single" and c.cfg.scheme != "batch"]
+    multis = [c for c in cells if c.kind == "multi"]
+    batches = [c for c in cells
+               if c.kind == "single" and c.cfg.scheme == "batch"]
+
+    if fused_mode:
+        groups: Dict[Tuple[SimConfig, bool], List[int]] = {}
+        for c in singles:
+            key_cfg = dataclasses.replace(c.cfg, seed=0, scheme="tolfl",
+                                          num_clusters=1)
+            groups.setdefault((key_cfg, c.cfg.scheme == "fl"),
+                              []).append(c.index)
+        for (key_cfg, track_iso), idxs in groups.items():
+            kp = spec.k_pad or max(
+                cells[i].cfg.topology().num_clusters for i in idxs)
+            add(BucketPlan(index=0, kind="single", fused=True,
+                           cell_indices=idxs, key_cfg=key_cfg,
+                           track_iso=track_iso, k_pad=kp))
+        mgroups: Dict[MultiModelConfig, List[int]] = {}
+        for c in multis:
+            key_cfg = dataclasses.replace(c.cfg, seed=0, num_models=0)
+            mgroups.setdefault(key_cfg, []).append(c.index)
+        for key_cfg, idxs in mgroups.items():
+            mp = spec.m_pad or max(cells[i].cfg.num_models for i in idxs)
+            add(BucketPlan(index=0, kind="multi", fused=True,
+                           cell_indices=idxs, key_cfg=key_cfg, m_pad=mp))
+    else:
+        # per-cell dispatch: pad cluster arrays to the PER-KIND max k
+        # (each iso-tracking kind owns its executable either way)
+        k_kind: Dict[bool, int] = {}
+        if spec.pad_k:
+            for c in singles:
+                kind_key = (c.cfg.scheme == "fl")
+                k_kind[kind_key] = max(k_kind.get(kind_key, 1),
+                                       c.cfg.topology().num_clusters)
+        for c in singles:
+            kp = (spec.k_pad or k_kind.get(c.cfg.scheme == "fl")
+                  if spec.pad_k else None)
+            if kp is None:
+                key_cfg = dataclasses.replace(c.cfg, seed=0)
+            else:
+                key_cfg = dataclasses.replace(c.cfg, seed=0,
+                                              scheme="tolfl",
+                                              num_clusters=1)
+            add(BucketPlan(index=0, kind="single", fused=False,
+                           cell_indices=[c.index], key_cfg=key_cfg,
+                           track_iso=(c.cfg.scheme == "fl"), k_pad=kp))
+        for c in multis:
+            add(BucketPlan(index=0, kind="multi", fused=False,
+                           cell_indices=[c.index],
+                           key_cfg=dataclasses.replace(c.cfg, seed=0)))
+    # "batch" cells centralise the data onto one device, so their array
+    # SHAPES differ from every other cell: they can neither fuse nor
+    # share the padded executable (whose cache key carries the
+    # uncentralised device count) — k_pad is deliberately ignored and
+    # each batch cell is its own static single-cell dispatch
+    for c in batches:
+        add(BucketPlan(index=0, kind="single", fused=False,
+                       cell_indices=[c.index],
+                       key_cfg=dataclasses.replace(c.cfg, seed=0)))
+
+    return ExecutionPlan(spec=spec, cells=cells, buckets=buckets)
+
+
+# ---------------------------------------------------------------------------
+# execute(): ExecutionPlan -> ExperimentResult
+# ---------------------------------------------------------------------------
+@dataclass
+class ExperimentResult:
+    """Per-cell campaign results of one executed plan, in cell order.
+
+    ``results[i]`` is the :class:`CampaignResult` /
+    :class:`MultiCampaignResult` of ``plan.cells[i]`` — every scenario
+    keyed by (cell, trace index, seed)."""
+    plan: ExecutionPlan
+    results: List[Union[CampaignResult, MultiCampaignResult]]
+
+    @property
+    def num_scenarios(self) -> int:
+        return sum(r.num_scenarios for r in self.results)
+
+    def per_cell(self) -> Dict[Any, Union[CampaignResult,
+                                          MultiCampaignResult]]:
+        """{cell key: result} — keys from :meth:`CellSpec.key`."""
+        return {c.key: r for c, r in zip(self.plan.cells, self.results)}
+
+    def __getitem__(self, key):
+        return self.per_cell()[key]
+
+    def summary(self) -> Dict[Any, Dict[str, float]]:
+        """{cell key: that cell's summary dict} (see the result types)."""
+        return {c.key: r.summary()
+                for c, r in zip(self.plan.cells, self.results)}
+
+    def to_rows(self) -> List[Dict[str, Any]]:
+        """One tidy dict per scenario — the benches' CSV fodder."""
+        rows: List[Dict[str, Any]] = []
+        name = self.plan.spec.data.name
+        for c, r in zip(self.plan.cells, self.results):
+            for b in builtins_range(r.num_scenarios):
+                row: Dict[str, Any] = {
+                    "dataset": name, "cell": c.key,
+                    "scheme": r.cfg.scheme,
+                    "trace": int(r.trace_index[b]),
+                    "seed": int(r.seed[b]),
+                }
+                if isinstance(r, CampaignResult):
+                    row.update(k=r.cfg.num_clusters,
+                               auroc=float(r.auroc_used[b]),
+                               final_auroc=float(r.final_auroc[b]),
+                               iso_active=bool(r.iso_active[b]),
+                               rounds_to_loss=float(r.rounds_to_loss[b]))
+                else:
+                    row.update(k=r.cfg.num_models,
+                               auroc=float(r.best_auroc[b]),
+                               multi_auroc=float(r.multi_auroc[b]))
+                rows.append(row)
+        return rows
+
+
+def _exec_single_cell(data: DataSpec, cfg: SimConfig,
+                      traces: Sequence[Failure], seeds: Sequence[int],
+                      target_loss, exec_plan, pad_k: Optional[int]
+                      ) -> CampaignResult:
+    """One single-model cell, unfused (the legacy ``run_campaign``
+    body): topology closed over statically (``pad_k=None``) or entering
+    as broadcast padded arrays (``pad_k=int``)."""
+    topo = cfg.topology()
+    norm = [as_trace(t, topo) for t in traces]
+    trace_idx, seed_arr = _c._scenario_grid(len(norm), seeds)
+    if len(trace_idx) == 0:
+        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
+    stacked = stack_traces(norm)
+    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+
+    dx, counts, valid = _prepare_arrays(cfg, data.device_x,
+                                        data.device_counts)
+    tx = jnp.asarray(data.test_x)
+    assert dx.shape[0] == topo.num_devices, (dx.shape, topo.num_devices)
+
+    track_iso = (cfg.scheme == "fl")
+    if pad_k is None:
+        key_cfg = dataclasses.replace(cfg, seed=0)
+        bcast = (dx, counts, valid, tx)
+    else:
+        # scheme / num_clusters are normalised OUT of the cache key: the
+        # padded core reads the topology from the arrays, so every
+        # single-model sweep cell of the same track_iso kind resolves to
+        # the same executable
+        key_cfg = dataclasses.replace(cfg, seed=0, scheme="tolfl",
+                                      num_clusters=1)
+        bcast = (dx, counts, valid, tx) + _c._padded_topology_arrays(
+            topo, pad_k)
+    ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
+    batched = _c._executable("single", data.ae_cfg, key_cfg, pad_k, ndev,
+                             track_iso)
+    out = _c._run_batched(batched, bcast,
+                          (batch_traces, jnp.asarray(seed_arr)),
+                          exec_plan)
+    return _c._post_process(cfg, out, trace_idx, seed_arr, data.test_y,
+                            target_loss)
+
+
+def _exec_multi_cell(data: DataSpec, cfg: MultiModelConfig,
+                     traces: Sequence[Failure], seeds: Sequence[int],
+                     exec_plan) -> MultiCampaignResult:
+    """One multi-model cell, unfused (the legacy
+    ``run_multimodel_campaign`` body)."""
+    norm = [as_multimodel_trace(t, cfg.num_devices) for t in traces]
+    trace_idx, seed_arr = _c._scenario_grid(len(norm), seeds)
+    if len(trace_idx) == 0:
+        raise ValueError("empty campaign: need >=1 trace and >=1 seed")
+    stacked = stack_traces(norm)
+    batch_traces = jax.tree.map(lambda x: x[trace_idx], stacked)
+
+    dx, counts, valid = prepare_multimodel_arrays(data.device_x,
+                                                  data.device_counts)
+    tx = jnp.asarray(data.test_x)
+    assert dx.shape[0] == cfg.num_devices, (dx.shape, cfg.num_devices)
+    key_cfg = dataclasses.replace(cfg, seed=0)
+    ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
+    batched = _c._executable("multi", data.ae_cfg, key_cfg, None, ndev)
+    model_valid = jnp.ones((cfg.num_models,), jnp.float32)
+    out = _c._run_batched(batched, (dx, counts, valid, tx, model_valid),
+                          (batch_traces, jnp.asarray(seed_arr)),
+                          exec_plan)
+
+    best, multi = _c._multi_metrics(np.asarray(out.final_scores),
+                                    data.test_y)
+    return MultiCampaignResult(cfg=cfg, trace_index=trace_idx,
+                               seed=seed_arr, best_auroc=best,
+                               multi_auroc=multi,
+                               loss_curves=np.asarray(out.losses),
+                               assignments=np.asarray(out.assignments))
+
+
+def _stacked_scenarios(cells, seeds, trace_cache, trace_key_fn, norm_fn):
+    """Per-cell (stacked traces, trace_idx, seed_arr, b) with the
+    stacked batch shared between cells that pass the same trace list
+    (one stacking per distinct resolution, not per cell)."""
+    metas = []
+    for cfg, traces in cells:
+        ck = trace_key_fn(cfg, traces)
+        if ck not in trace_cache:
+            norm = norm_fn(cfg, traces)
+            trace_idx, seed_arr = _c._scenario_grid(len(norm), seeds)
+            if len(trace_idx) == 0:
+                raise ValueError("empty campaign: need >=1 trace and "
+                                 ">=1 seed")
+            stacked = stack_traces(norm)
+            trace_cache[ck] = (
+                jax.tree.map(lambda x: x[trace_idx], stacked),
+                trace_idx, seed_arr)
+        batch_traces, trace_idx, seed_arr = trace_cache[ck]
+        metas.append((cfg, batch_traces, trace_idx, seed_arr,
+                      len(seed_arr)))
+    return metas
+
+
+def _exec_fused_single_group(data: DataSpec, cells, seeds, target_loss,
+                             exec_plan, kp: int, key_cfg,
+                             track_iso: bool, trace_cache
+                             ) -> List[CampaignResult]:
+    """One fused single-model bucket (the legacy ``run_fused_campaigns``
+    group body): every cell's padded cluster arrays stacked as VMAPPED
+    operands along the flattened (cell x trace x seed) axis — ONE
+    dispatch for the whole bucket."""
+    dx, counts, valid = _prepare_arrays(cells[0][0], data.device_x,
+                                        data.device_counts)
+    tx = jnp.asarray(data.test_x)
+    ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
+
+    def trace_key(cfg, traces):
+        return (tuple(id(t) for t in traces),
+                _c._single_trace_key(traces, cfg.topology()))
+
+    def norm(cfg, traces):
+        return [as_trace(t, cfg.topology()) for t in traces]
+
+    metas = _stacked_scenarios(cells, seeds, trace_cache, trace_key, norm)
+    cids_l, heads_l, hv_l, tr_l, seeds_l = [], [], [], [], []
+    for cfg, batch_traces, trace_idx, seed_arr, b in metas:
+        topo = cfg.topology()
+        assert dx.shape[0] == topo.num_devices, (dx.shape,
+                                                 topo.num_devices)
+        cids, heads, hvalid = _c._padded_topology_arrays(topo, kp)
+        cids_l.append(jnp.broadcast_to(cids, (b,) + cids.shape))
+        heads_l.append(jnp.broadcast_to(heads, (b,) + heads.shape))
+        hv_l.append(jnp.broadcast_to(hvalid, (b,) + hvalid.shape))
+        tr_l.append(batch_traces)
+        seeds_l.append(seed_arr)
+
+    mapped = (jnp.concatenate(cids_l), jnp.concatenate(heads_l),
+              jnp.concatenate(hv_l), concat_traces(tr_l),
+              jnp.asarray(np.concatenate(seeds_l)))
+    batched = _c._executable("single", data.ae_cfg, key_cfg, kp, ndev,
+                             track_iso, fused=True)
+    out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
+                          exec_plan)
+    fields = _c._post_process_arrays(track_iso, out, data.test_y,
+                                     target_loss)
+    results, off = [], 0
+    for cfg, _, trace_idx, seed_arr, b in metas:
+        cell_fields = {name: arr[off:off + b]
+                       for name, arr in fields.items()}
+        results.append(CampaignResult(cfg=cfg, trace_index=trace_idx,
+                                      seed=seed_arr, **cell_fields))
+        off += b
+    return results
+
+
+def _exec_fused_multi_group(data: DataSpec, cells, seeds, exec_plan,
+                            mp: int, key_cfg, trace_cache
+                            ) -> List[MultiCampaignResult]:
+    """One fused multi-model bucket (the legacy
+    ``run_fused_multimodel_campaigns`` group body): cells with
+    DIFFERENT model counts share one executable via the padded-M
+    ``model_valid`` mask."""
+    dx, counts, valid = prepare_multimodel_arrays(data.device_x,
+                                                  data.device_counts)
+    tx = jnp.asarray(data.test_x)
+    ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
+
+    def trace_key(cfg, traces):
+        return (tuple(id(t) for t in traces), cfg.num_devices)
+
+    def norm(cfg, traces):
+        return [as_multimodel_trace(t, cfg.num_devices) for t in traces]
+
+    metas = _stacked_scenarios(cells, seeds, trace_cache, trace_key, norm)
+    mv_l, tr_l, seeds_l = [], [], []
+    for cfg, batch_traces, trace_idx, seed_arr, b in metas:
+        assert dx.shape[0] == cfg.num_devices, (dx.shape,
+                                                cfg.num_devices)
+        assert mp >= cfg.num_models, (mp, cfg.num_models)
+        mv = np.zeros((mp,), np.float32)
+        mv[:cfg.num_models] = 1.0
+        mv_l.append(jnp.broadcast_to(jnp.asarray(mv), (b, mp)))
+        tr_l.append(batch_traces)
+        seeds_l.append(seed_arr)
+
+    mapped = (jnp.concatenate(mv_l), concat_traces(tr_l),
+              jnp.asarray(np.concatenate(seeds_l)))
+    exe_cfg = dataclasses.replace(key_cfg, num_models=mp)
+    batched = _c._executable("multi", data.ae_cfg, exe_cfg, None, ndev,
+                             fused=True)
+    out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
+                          exec_plan)
+    model_valid = np.asarray(mapped[0])
+    best, multi = _c._multi_metrics(np.asarray(out.final_scores),
+                                    data.test_y, model_valid)
+    losses = np.asarray(out.losses)
+    assigns = np.asarray(out.assignments)
+    results, off = [], 0
+    for cfg, _, trace_idx, seed_arr, b in metas:
+        sl = slice(off, off + b)
+        results.append(MultiCampaignResult(
+            cfg=cfg, trace_index=trace_idx, seed=seed_arr,
+            best_auroc=best[sl], multi_auroc=multi[sl],
+            loss_curves=losses[sl], assignments=assigns[sl]))
+        off += b
+    return results
+
+
+def execute(plan_: ExecutionPlan) -> ExperimentResult:
+    """Run every bucket of a lowered plan; results align with
+    ``plan_.cells`` (and with the spec's cell order)."""
+    spec = plan_.spec
+    data, seeds = spec.data, spec.seeds.seeds
+    exec_plan, target_loss = spec.exec_plan, spec.target_loss
+    results: List[Optional[Any]] = [None] * len(plan_.cells)
+    trace_cache: dict = {}   # one stacked batch per distinct resolution
+    for bucket in plan_.buckets:
+        cells = [plan_.cells[i] for i in bucket.cell_indices]
+        pairs = [(c.cfg, c.traces) for c in cells]
+        if bucket.kind == "single" and bucket.fused:
+            rs = _exec_fused_single_group(
+                data, pairs, seeds, target_loss, exec_plan,
+                bucket.k_pad, bucket.key_cfg, bucket.track_iso,
+                trace_cache)
+        elif bucket.kind == "multi" and bucket.fused:
+            rs = _exec_fused_multi_group(data, pairs, seeds, exec_plan,
+                                         bucket.m_pad, bucket.key_cfg,
+                                         trace_cache)
+        elif bucket.kind == "single":
+            rs = [_exec_single_cell(data, cells[0].cfg, cells[0].traces,
+                                    seeds, target_loss, exec_plan,
+                                    bucket.k_pad)]
+        else:
+            rs = [_exec_multi_cell(data, cells[0].cfg, cells[0].traces,
+                                   seeds, exec_plan)]
+        for c, r in zip(cells, rs):
+            results[c.index] = r
+    return ExperimentResult(plan=plan_, results=results)
+
+
+def run_experiment(spec: ExperimentSpec) -> ExperimentResult:
+    """``execute(plan(spec))`` — the one-call entry point."""
+    return execute(plan(spec))

@@ -246,7 +246,9 @@ def sample_rate_grid(rng: np.random.Generator, topo: Topology,
     ``base_traces`` (already at ``max_events``, e.g. canonical
     conditions the caller also wants in the batch) are prepended to the
     pool and join the dedup, so an all-none draw aliases a no-failure
-    base trace instead of retraining it.  Returns ``(traces, draws)``
+    base trace instead of retraining it.  (This is the sampler behind a
+    sampled :class:`repro.core.experiment.TraceSpec`: ``plan(spec)``
+    calls it once per cell against the cell's own topology.)  Returns ``(traces, draws)``
     with the base traces first; ``draws[p]`` lists one trace index per
     original draw — a duplicated draw repeats its index, so per-p means
     over ``result.select(i) for i in draws[p]`` equal the

@@ -16,7 +16,10 @@ shared by
   call with a new trace/seed reuses the compiled executable), and
 * :mod:`repro.core.campaign` — which ``vmap``s the same core over a
   stacked batch of (trace, seed) scenarios so an entire Monte-Carlo
-  sweep is ONE compile.
+  sweep is ONE compile.  Whole (scheme, k) grids are declared through
+  the spec -> plan -> execute pipeline on top
+  (:mod:`repro.core.experiment` / :mod:`repro.api`);
+  :func:`run_simulation` stays the scalar core beneath it.
 
 FL server failure triggers the paper's fallback: remaining devices
 continue training *isolated* local models (Section V-C / Fig 4); the

@@ -1,0 +1,366 @@
+"""Declarative experiment pipeline contracts (ISSUE 5).
+
+What is proven:
+
+* **ExecPlan validation** — ``chunk_size <= 0`` / ``devices <= 0``
+  raise a clear ``ValueError`` at construction (they used to fail as
+  shape errors deep inside ``_run_batched``), and ``shard=True`` on a
+  single-device host warns and degrades to the unsharded path.
+* **plan() is executable-free** — lowering a mixed
+  (single + fl + batch + multi) spec builds the bucket structure,
+  per-kind pad-k / padded-M choices, sampled per-topology trace grids
+  and the shard/chunk geometry WITHOUT building or dispatching any
+  compiled campaign core (``campaign.TRACE_COUNT`` never moves).
+* **bucket grouping** — non-fl single cells share one fused bucket at
+  the group max k, fl cells get their own iso bucket, batch cells are
+  per-cell static, multi cells group per scheme with padded M;
+  ``fuse=False`` / ``pad_k=False`` lower to the per-cell / static
+  bucket modes.
+* **shim parity** — ``sweep_grid`` / ``run_campaign`` /
+  ``run_fused_campaigns`` are thin shims over spec -> plan -> execute:
+  a hand-built spec reproduces them BIT-IDENTICALLY (same executables,
+  same stacked operands), and a warm re-execute costs zero traces.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (NO_FAILURE, AutoencoderConfig, CellSpec, DataSpec,
+                       ExecPlan, ExperimentSpec, FailureSpec, SeedSpec,
+                       SimConfig, TraceSpec, cell, execute, plan,
+                       run_campaign, run_experiment, run_fused_campaigns,
+                       sweep_grid)
+from repro.core import campaign
+from repro.core.failure import sample_traces
+from repro.data import commsml, federated
+
+# distinct from every other campaign test in the suite: the executable
+# cache is global and the zero-compile assertions below need cold keys
+ROUNDS = 7
+
+
+@pytest.fixture(scope="module")
+def small_ae():
+    return AutoencoderConfig(input_dim=commsml.N_FEATURES, hidden=(16,),
+                             code_dim=4, dropout=0.2)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    X, y = commsml.generate(seed=0, samples_per_class=60)
+    split = federated.make_split(X, y, num_devices=10, num_clusters=5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    return dx, counts, split.test_x, split.test_y
+
+
+def _data_spec(small_ae, small_data):
+    dx, counts, tx, ty = small_data
+    return DataSpec(ae_cfg=small_ae, device_x=dx, device_counts=counts,
+                    test_x=tx, test_y=ty, name="commsml")
+
+
+def _base():
+    return SimConfig(num_devices=10, rounds=ROUNDS, lr=1e-3,
+                     dropout=False)
+
+
+def _traces(n=3):
+    cfg = dataclasses.replace(_base(), scheme="tolfl", num_clusters=5)
+    return sample_traces(np.random.default_rng(3), cfg.topology(), 0.5,
+                         max_events=8, rounds=ROUNDS, num_traces=n)
+
+
+# ---------------------------------------------------------------------------
+# ExecPlan validation (satellite: reject bad values up front)
+# ---------------------------------------------------------------------------
+def test_execplan_rejects_nonpositive_chunk_size():
+    with pytest.raises(ValueError, match="chunk_size must be a positive"):
+        ExecPlan(chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        ExecPlan(chunk_size=-4)
+
+
+def test_execplan_rejects_nonpositive_devices():
+    with pytest.raises(ValueError, match="devices must be a positive"):
+        ExecPlan(devices=0)
+    with pytest.raises(ValueError, match="devices"):
+        ExecPlan(shard=True, devices=-1)
+
+
+def test_execplan_shard_degrades_on_single_device():
+    if jax.local_device_count() > 1:
+        pytest.skip("host has multiple devices")
+    with pytest.warns(UserWarning, match="single local device"):
+        assert ExecPlan(shard=True).resolved_devices() is None
+    # the silent form (used internally after the entry point warned)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ExecPlan(shard=True).resolved_devices(warn=False) is None
+    assert ExecPlan(shard=False).resolved_devices() is None
+
+
+def test_plan_rejects_empty_grids(small_ae, small_data):
+    data = _data_spec(small_ae, small_data)
+    with pytest.raises(ValueError, match="need >= 1 cell"):
+        plan(ExperimentSpec(data=data, base=_base(), cells=()))
+    spec = ExperimentSpec(data=data, base=_base(),
+                          cells=(CellSpec("tolfl", 5),),
+                          traces=TraceSpec.explicit(NO_FAILURE),
+                          seeds=SeedSpec(()))
+    with pytest.raises(ValueError, match=">=1 trace and >=1 seed"):
+        plan(spec)
+    spec = ExperimentSpec(data=data, base=_base(),
+                          cells=(CellSpec("tolfl", 5),))
+    with pytest.raises(ValueError, match=">=1 trace and >=1 seed"):
+        plan(spec)   # no traces declared anywhere
+    with pytest.raises(ValueError, match="unknown scheme"):
+        plan(ExperimentSpec(data=data, base=_base(),
+                            cells=(CellSpec("fedavg", 3),),
+                            traces=TraceSpec.explicit(NO_FAILURE)))
+
+
+# ---------------------------------------------------------------------------
+# plan(): pure lowering, no executables
+# ---------------------------------------------------------------------------
+def test_plan_bucket_grouping_without_any_dispatch(small_ae, small_data):
+    """The mixed grid lowers to: one fused non-fl single bucket at the
+    group max k, one fl iso bucket, per-scheme multi buckets with the
+    padded-M choice, one static batch bucket — and planning never
+    touches the executable cache."""
+    data = _data_spec(small_ae, small_data)
+    spec = ExperimentSpec(
+        data=data, base=_base(),
+        cells=(CellSpec("tolfl", 5), CellSpec("tolfl", 2),
+               CellSpec("sbt", 10), CellSpec("fl", 1),
+               CellSpec("batch", 1), CellSpec("ifca", 2),
+               CellSpec("ifca", 3), CellSpec("fesem", 2)),
+        traces=TraceSpec(traces=tuple(_traces())),
+        seeds=SeedSpec((0, 1)))
+    before = campaign.TRACE_COUNT
+    p = plan(spec)
+    assert campaign.TRACE_COUNT == before, "plan() built an executable"
+
+    by_cells = {tuple(b.cell_indices): b for b in p.buckets}
+    nonfl = by_cells[(0, 1, 2)]
+    assert (nonfl.kind, nonfl.fused, nonfl.track_iso) == \
+        ("single", True, False)
+    assert nonfl.k_pad == 10                 # group max k (sbt k=N=10)
+    fl = by_cells[(3,)]
+    assert (fl.kind, fl.fused, fl.track_iso, fl.k_pad) == \
+        ("single", True, True, 1)
+    ifca = by_cells[(5, 6)]
+    assert (ifca.kind, ifca.fused, ifca.m_pad) == ("multi", True, 3)
+    fesem = by_cells[(7,)]
+    assert (fesem.kind, fesem.m_pad) == ("multi", 2)
+    batch = by_cells[(4,)]
+    assert (batch.kind, batch.fused, batch.k_pad) == \
+        ("single", False, None)
+    # 6 scenarios per cell (3 traces x 2 seeds), 8 cells
+    assert p.num_scenarios == 48
+    assert nonfl.num_scenarios == 18
+    # printable without running anything
+    desc = p.describe()
+    assert "pad_k=10" in desc and "pad_m=3" in desc and "iso" in desc
+    assert campaign.TRACE_COUNT == before
+
+
+def test_plan_percell_and_static_modes(small_ae, small_data):
+    """``fuse=False`` lowers singles to per-cell buckets padded to the
+    PER-KIND max k; ``pad_k=False`` to static per-cell builds."""
+    data = _data_spec(small_ae, small_data)
+    kw = dict(data=data, base=_base(),
+              cells=(CellSpec("tolfl", 2), CellSpec("sbt", 10),
+                     CellSpec("fl", 1)),
+              traces=TraceSpec(traces=tuple(_traces())),
+              seeds=SeedSpec((0,)))
+    before = campaign.TRACE_COUNT
+    p = plan(ExperimentSpec(fuse=False, **kw))
+    assert [b.cell_indices for b in p.buckets] == [[0], [1], [2]]
+    assert [b.fused for b in p.buckets] == [False] * 3
+    assert [b.k_pad for b in p.buckets] == [10, 10, 1]   # per kind
+    p = plan(ExperimentSpec(fuse=False, pad_k=False, **kw))
+    assert [b.k_pad for b in p.buckets] == [None] * 3
+    # an explicit k_pad override applies to every bucket (the legacy
+    # run_fused_campaigns semantics), fl's included
+    p = plan(ExperimentSpec(k_pad=12, **kw))
+    assert [b.k_pad for b in p.buckets] == [12, 12]
+    # a batch cell always lowers to a static bucket, whatever the pad
+    # knobs say: centralising the data changes the array shapes, so it
+    # can never share the padded executable (pad_k=K used to crash deep
+    # inside the vmapped core on this path)
+    bkw = dict(kw, cells=(CellSpec("batch", 1),))
+    assert plan(ExperimentSpec(k_pad=12, **bkw)).buckets[0].k_pad is None
+    p = plan(ExperimentSpec(fuse=False, k_pad=12, **bkw))
+    assert p.buckets[0].k_pad is None
+    assert campaign.TRACE_COUNT == before
+
+
+def test_plan_geometry_mirrors_run_batched(small_ae, small_data):
+    """chunk_size=5 over B=12 -> 3 chunks of 5 with 3 padded rows,
+    computed at plan time (and still zero executables)."""
+    data = _data_spec(small_ae, small_data)
+    spec = ExperimentSpec(
+        data=data, base=_base(), cells=(CellSpec("tolfl", 5),),
+        traces=TraceSpec(traces=tuple(_traces(4))),
+        seeds=SeedSpec((0, 1, 2)), exec_plan=ExecPlan(chunk_size=5))
+    before = campaign.TRACE_COUNT
+    b = plan(spec).buckets[0]
+    assert (b.num_scenarios, b.chunk, b.num_chunks,
+            b.padded_scenarios) == (12, 5, 3, 15)
+    assert b.devices is None
+    assert campaign.TRACE_COUNT == before
+
+
+def test_plan_sampled_traces_per_topology(small_ae, small_data):
+    """A sampled TraceSpec resolves per cell: canonical conditions are
+    normalised at the 2N slot budget and prepended (batch drops the
+    client condition — no clients exist), each cell samples against its
+    OWN topology, and the draw -> trace map covers every rate."""
+    data = _data_spec(small_ae, small_data)
+    canonical = (NO_FAILURE, FailureSpec(epoch=2, kind="client"),
+                 FailureSpec(epoch=2, kind="server"))
+    spec = ExperimentSpec(
+        data=data, base=_base(),
+        cells=(CellSpec("tolfl", 5), CellSpec("fl", 1),
+               CellSpec("batch", 1), CellSpec("ifca", 3)),
+        traces=TraceSpec(traces=canonical, p_grid=(0.3, 0.6),
+                         traces_per_p=3, sample_seed=7),
+        seeds=SeedSpec((0,)))
+    before = campaign.TRACE_COUNT
+    p = plan(spec)
+    assert campaign.TRACE_COUNT == before
+    tolfl, fl, batch, ifca = p.cells
+    for c in (tolfl, fl, ifca):
+        assert c.explicit_index == {0: 0, 1: 1, 2: 2}
+        assert set(c.draws) == {0.3, 0.6}
+        assert all(len(d) == 3 for d in c.draws.values())
+        assert all(t.max_events == 20 for t in c.traces)  # 2N budget
+    # batch has no clients: the client condition is dropped, later
+    # canonicals shift down
+    assert batch.explicit_index == {0: 0, 1: None, 2: 1}
+    # all-none draws alias the canonical no-failure trace (dedup): every
+    # draw index is in range and the trace lists stay deduplicated
+    for c in p.cells:
+        keys = set()
+        for t in c.traces:
+            keys.add(tuple(np.asarray(l).tobytes() for l in
+                           (t.epochs, t.devices, t.alive_after, t.kinds)))
+        assert len(keys) == len(c.traces)
+        for idxs in c.draws.values():
+            assert all(0 <= i < len(c.traces) for i in idxs)
+    # different topologies -> different server/client attribution, so
+    # the sampled grids genuinely differ between tolfl and fl
+    assert len(tolfl.traces) != len(fl.traces) or any(
+        not np.array_equal(np.asarray(a.devices), np.asarray(b.devices))
+        for a, b in zip(tolfl.traces, fl.traces))
+
+
+# ---------------------------------------------------------------------------
+# spec -> plan -> execute == the legacy entry points, bit-identical
+# ---------------------------------------------------------------------------
+GRID = [("tolfl", 5), ("tolfl", 2), ("sbt", 10), ("fl", 1),
+        ("batch", 1), ("ifca", 2), ("ifca", 3)]
+
+
+def test_spec_execute_reproduces_sweep_grid(small_ae, small_data):
+    """The acceptance contract: a hand-built ExperimentSpec reproduces
+    ``sweep_grid(fuse=True)`` bit-identically — same executables, same
+    stacked operands — and a warm re-execute costs ZERO new traces."""
+    dx, counts, tx, ty = small_data
+    base = _base()
+    traces = _traces()
+    grid = sweep_grid(small_ae, dx, counts, tx, ty, base, GRID, traces,
+                      seeds=[0, 1], target_loss=2430.0)
+
+    spec = ExperimentSpec(
+        data=_data_spec(small_ae, small_data), base=base,
+        cells=tuple(CellSpec(s, k) for s, k in GRID),
+        traces=TraceSpec(traces=tuple(traces)),
+        seeds=SeedSpec((0, 1)), target_loss=2430.0)
+    before = campaign.TRACE_COUNT
+    res = execute(plan(spec))
+    assert campaign.TRACE_COUNT == before, \
+        "spec pipeline missed the executable cache the shim warmed"
+    assert res.num_scenarios == len(GRID) * 6
+    for key, r in res.per_cell().items():
+        g = grid[key]
+        if hasattr(g, "auroc_used"):
+            np.testing.assert_array_equal(g.auroc_used, r.auroc_used)
+            np.testing.assert_array_equal(g.loss_curves, r.loss_curves)
+            np.testing.assert_array_equal(g.iso_active, r.iso_active)
+            np.testing.assert_array_equal(g.rounds_to_loss,
+                                          r.rounds_to_loss)
+        else:
+            np.testing.assert_array_equal(g.best_auroc, r.best_auroc)
+            np.testing.assert_array_equal(g.multi_auroc, r.multi_auroc)
+            np.testing.assert_array_equal(g.assignments, r.assignments)
+    # result-frame views agree with the per-cell arrays
+    rows = res.to_rows()
+    assert len(rows) == res.num_scenarios
+    assert rows[0]["dataset"] == "commsml"
+    summ = res.summary()
+    for key in res.per_cell():
+        assert summ[key]["num_scenarios"] == 6.0
+
+
+def test_run_campaign_shim_parity(small_ae, small_data):
+    """``run_campaign`` is a one-cell spec: same results, and the
+    explicit-pad path keys the same shared executable."""
+    dx, counts, tx, ty = small_data
+    cfg = dataclasses.replace(_base(), scheme="tolfl", num_clusters=5)
+    traces = _traces()
+    solo = run_campaign(small_ae, dx, counts, tx, ty, cfg, traces,
+                        seeds=range(2), pad_k=7)
+    spec = ExperimentSpec(
+        data=_data_spec(small_ae, small_data), base=cfg,
+        cells=(CellSpec("tolfl", 5, traces=tuple(traces)),),
+        seeds=SeedSpec((0, 1)), fuse=False, k_pad=7)
+    before = campaign.TRACE_COUNT
+    res = run_experiment(spec)
+    assert campaign.TRACE_COUNT == before
+    np.testing.assert_array_equal(solo.auroc_used,
+                                  res.results[0].auroc_used)
+    np.testing.assert_array_equal(solo.loss_curves,
+                                  res.results[0].loss_curves)
+
+
+def test_fused_shim_ragged_parity(small_ae, small_data):
+    """``run_fused_campaigns`` with ragged per-cell trace lists == the
+    same cells declared with per-cell ``CellSpec.traces``."""
+    dx, counts, tx, ty = small_data
+    base = _base()
+    cfg_a = dataclasses.replace(base, scheme="tolfl", num_clusters=5)
+    cfg_b = dataclasses.replace(base, scheme="sbt", num_clusters=10)
+    tr_a, tr_b = _traces(3), _traces(2)
+    fused = run_fused_campaigns(small_ae, dx, counts, tx, ty,
+                                [(cfg_a, tr_a), (cfg_b, tr_b)],
+                                seeds=[0])
+    spec = ExperimentSpec(
+        data=_data_spec(small_ae, small_data), base=base,
+        cells=(CellSpec("tolfl", 5, traces=tuple(tr_a)),
+               CellSpec("sbt", 10, traces=tuple(tr_b))),
+        seeds=SeedSpec((0,)))
+    res = run_experiment(spec)
+    assert [r.num_scenarios for r in res.results] == [3, 2]
+    for a, b in zip(fused, res.results):
+        np.testing.assert_array_equal(a.auroc_used, b.auroc_used)
+        np.testing.assert_array_equal(a.loss_curves, b.loss_curves)
+
+
+def test_cell_sugar_and_overrides(small_ae, small_data):
+    """``cell(...)`` kwargs become SimConfig overrides; labels key the
+    result frame."""
+    c = cell("tolfl", 5, label="wide", lr=5e-4)
+    assert c.resolve(_base()).lr == 5e-4
+    assert c.key() == "wide"
+    spec = ExperimentSpec(
+        data=_data_spec(small_ae, small_data), base=_base(),
+        cells=(c,), traces=TraceSpec.explicit(*_traces(2)),
+        seeds=SeedSpec((0,)))
+    p = plan(spec)
+    assert p.cells[0].cfg.lr == 5e-4
+    assert p.cell("wide").num_scenarios == 2
