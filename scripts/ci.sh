@@ -29,16 +29,24 @@ rm -f "$baseline"
 cp BENCH_campaign.json "$baseline" 2>/dev/null || true
 python -m benchmarks.run --smoke
 
-echo "== campaign scenarios/sec vs committed baseline =="
+echo "== campaign scenarios/sec + wall vs committed baseline =="
+# wall_s carries the compile cost on the cold rows (sweep_*_cold,
+# sweep_aot_cold), so its delta column is the compile-time trajectory
 python - "$baseline" <<'PY'
 import json, os, sys
 base_path = sys.argv[1]
 fresh = json.load(open("BENCH_campaign.json"))
 base = json.load(open(base_path)) if os.path.exists(base_path) else {}
-print(f"{'row':<22}{'base':>9}{'fresh':>9}{'delta':>8}")
+hdr = (f"{'row':<22}{'base/s':>9}{'fresh/s':>9}{'delta':>8}"
+       f"{'base_w':>9}{'fresh_w':>9}{'wdelta':>8}")
+print(hdr)
 for row in sorted(fresh):
     f = fresh[row]["scenarios_per_s"]
+    fw = fresh[row]["wall_s"]
     b = base.get(row, {}).get("scenarios_per_s")
+    bw = base.get(row, {}).get("wall_s")
     delta = f"{(f - b) / b * 100.0:+.0f}%" if b else "new"
-    print(f"{row:<22}{b if b is not None else '-':>9}{f:>9}{delta:>8}")
+    wdelta = f"{(fw - bw) / bw * 100.0:+.0f}%" if bw else "new"
+    print(f"{row:<22}{b if b is not None else '-':>9}{f:>9}{delta:>8}"
+          f"{bw if bw is not None else '-':>9}{fw:>9}{wdelta:>8}")
 PY

@@ -16,12 +16,18 @@ from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import (MultiModelConfig, MultiModelResult,
                                   run_multimodel)
 from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
-                                 MultiCampaignResult, mean_ci95,
+                                 MultiCampaignResult,
+                                 clear_executable_caches, mean_ci95,
                                  run_campaign, run_fused_campaigns,
                                  run_fused_multimodel_campaigns,
                                  run_multimodel_campaign, sweep_grid)
-from repro.core.experiment import (SINGLE_SCHEMES, BucketPlan, CellPlan,
-                                   CellSpec, DataSpec, ExecutionPlan,
+from repro.core.compilecache import (disable_persistent_cache,
+                                     enable_persistent_cache,
+                                     persistent_cache_dir,
+                                     xla_compile_stats)
+from repro.core.experiment import (SINGLE_SCHEMES, BucketCompileStats,
+                                   BucketPlan, CellPlan, CellSpec,
+                                   CompileReport, DataSpec, ExecutionPlan,
                                    ExperimentResult, ExperimentSpec,
                                    SeedSpec, TraceSpec, cell, execute,
                                    plan, run_experiment)
@@ -38,6 +44,10 @@ __all__ = [
     "CellPlan", "BucketPlan", "ExperimentResult",
     # execution policy + results
     "ExecPlan", "CampaignResult", "MultiCampaignResult", "mean_ci95",
+    # compilation & caching
+    "CompileReport", "BucketCompileStats", "clear_executable_caches",
+    "enable_persistent_cache", "disable_persistent_cache",
+    "persistent_cache_dir", "xla_compile_stats",
     # configs / schemes
     "AutoencoderConfig", "SimConfig", "MultiModelConfig", "Topology",
     "SINGLE_SCHEMES", "MULTI_SCHEMES",

@@ -67,9 +67,11 @@ bit-identical by ``tests/test_experiment.py``.
 from __future__ import annotations
 
 import functools
+import threading
+import time
 import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,8 +85,11 @@ from repro.sharding import scenario_shard_map
 from repro.training.metrics import auroc_batch
 
 #: incremented each time a batched campaign core is (re)traced — lets
-#: tests assert that a whole campaign costs exactly one compile.
+#: tests assert that a whole campaign costs exactly one compile.  AOT
+#: lowering (``aot_executable``) traces on worker threads, so the
+#: increment is lock-guarded.
 TRACE_COUNT = 0
+_TRACE_LOCK = threading.Lock()
 
 #: schemes dispatched to the multi-model engine by :func:`sweep_grid`
 MULTI_SCHEMES = ("fedgroup", "ifca", "fesem")
@@ -107,6 +112,15 @@ class ExecPlan:
     devices
         Cap on the number of local devices used when sharding
         (default: all of ``jax.local_device_count()``).
+    aot
+        Ahead-of-time compilation: ``execute()`` lowers and compiles
+        every dispatch bucket (``jit(...).lower().compile()``) on a
+        thread pool at plan-finalise time, overlapping XLA with the
+        host-side data/trace array builds, and dispatches through the
+        compiled executables.  Results are bit-identical to the jit
+        path (pinned by ``tests/test_aot.py``); combined with the
+        persistent disk cache (:mod:`repro.core.compilecache`) a warm
+        re-run in a fresh process skips XLA entirely.
 
     Invalid values raise ``ValueError`` at construction (they used to
     surface as shape errors deep inside ``_run_batched``).
@@ -114,6 +128,7 @@ class ExecPlan:
     shard: bool = False
     chunk_size: Optional[int] = None
     devices: Optional[int] = None
+    aot: bool = False
 
     def __post_init__(self):
         if self.chunk_size is not None and self.chunk_size <= 0:
@@ -260,9 +275,47 @@ def _scenario_grid(num_traces: int, seeds: Sequence[int]
 # the static config, so repeated campaigns with the same shapes reuse the
 # compiled executable instead of re-tracing per campaign.
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=64)
+def _exe_key(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+             track_iso: bool, fused: bool) -> tuple:
+    """Canonical executable-cache key.
+
+    Everything that changes the lowered program is in here — the static
+    config (scheme/k-normalised by the caller on padded paths), the
+    cluster-axis pad, the shard width, the iso-tracking kind and the
+    fused/broadcast operand split — and NOTHING else: redundant degrees
+    of freedom are normalised away so two spellings of the same
+    configuration can never compile twice (``functools.lru_cache``
+    would otherwise key ``f(a, b)`` and ``f(a, b=...)`` differently,
+    and a ``track_iso`` flag disagreeing with ``cfg.scheme`` on the
+    static path would duplicate an identical program).  Shapes/dtypes
+    are deliberately NOT part of this key: the jit path retraces per
+    shape inside one entry, and the AOT path extends the key with the
+    abstract-argument signature (``aot_executable``).  Pinned by
+    ``tests/test_cache_semantics.py``."""
+    if kind == "multi":
+        assert k_pad is None, "multi-model cells pad M via cfg.num_models"
+        track_iso = False          # the multi core has no iso branch
+    elif k_pad is None:
+        # static build: _build_core derives the iso branch from
+        # cfg.scheme and there is no fused-static path — a divergent
+        # flag would alias a second identical executable
+        track_iso = cfg.scheme == "fl"
+        fused = False
+    return (kind, ae_cfg, cfg, k_pad, ndev, bool(track_iso), bool(fused))
+
+
 def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
                 track_iso: bool = False, fused: bool = False):
+    """Batched scenario executable (see :func:`_build_executable`); the
+    lru key is the canonical :func:`_exe_key`, never the raw call
+    spelling."""
+    return _build_executable(*_exe_key(kind, ae_cfg, cfg, k_pad, ndev,
+                                       track_iso, fused))
+
+
+@functools.lru_cache(maxsize=64)
+def _build_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad,
+                      ndev, track_iso: bool, fused: bool):
     """Batched scenario executable.
 
     kind
@@ -301,7 +354,8 @@ def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
 
     def scenario(*args):
         global TRACE_COUNT
-        TRACE_COUNT += 1          # runs at trace time only: 1 per compile
+        with _TRACE_LOCK:         # AOT lowers on worker threads
+            TRACE_COUNT += 1      # runs at trace time only: 1 per compile
         return core(*args)
 
     vm = jax.vmap(scenario,
@@ -311,14 +365,130 @@ def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
     return jax.jit(scenario_shard_map(vm, ndev, n_bcast, n_mapped))
 
 
-def _run_batched(batched_call, bcast_args, mapped, plan: Optional[ExecPlan]):
+# ---------------------------------------------------------------------------
+# AOT entry path.  Same canonical key-space as the jit path, extended by
+# the abstract-argument signature (a compiled executable is pinned to
+# exact shapes/dtypes, unlike a jit that retraces per shape).  Because
+# ``aot_executable`` lowers THROUGH the lru-cached jit wrapper, the
+# trace cache is shared: an AOT compile followed by a jit call on the
+# same shapes re-traces nothing, and vice versa — the warm in-process
+# path is untouched and bit-identical.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AotTimes:
+    """Wall-clock of one :func:`aot_executable` resolution.  ``source``
+    is where the executable came from: ``"memory"`` (in-process AOT
+    cache, both times 0), ``"disk"`` (deserialised from the persistent
+    executable cache — ``compile_s`` is the load time and NOTHING was
+    traced or XLA-compiled) or ``"compiled"`` (lowered + compiled this
+    call)."""
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    source: str = "compiled"
+
+    @property
+    def cached(self) -> bool:
+        return self.source == "memory"
+
+
+_AOT_CACHE: Dict[tuple, Any] = {}
+_AOT_LOCK = threading.Lock()
+
+#: AOT bucket compiles pass this explicit (default-valued, so codegen
+#: is unchanged) option override: it lands in the compile-options hash,
+#: giving AOT compiles a module-cache key DISJOINT from the jit path's.
+#: An executable that XLA's persistent module cache served cannot be
+#: re-serialised ("Symbols not found" on reload, jaxlib 0.4.36 CPU), so
+#: an AOT compile must never be satisfied by a module entry a previous
+#: jit-path run wrote — the key split guarantees a genuine, whole-
+#: serialisable compile without touching global config (the host's
+#: utility jits keep caching normally while the worker pool compiles).
+_AOT_COMPILER_OPTIONS = {"xla_embed_ir_in_executable": False}
+
+
+def _avals_signature(abstract_args) -> tuple:
+    """Hashable (treedef, leaf shape/dtype) signature of an abstract
+    argument tuple — what distinguishes compiled executables within one
+    jit cache entry."""
+    leaves, treedef = jax.tree.flatten(abstract_args)
+    return (str(treedef),
+            tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                  for l in leaves))
+
+
+def aot_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+                   track_iso: bool, fused: bool, abstract_args
+                   ) -> Tuple[Any, AotTimes]:
+    """Lower + compile the batched core for ``abstract_args`` (a tuple
+    of ``jax.ShapeDtypeStruct`` pytrees matching the concrete call) and
+    cache the compiled executable under canonical key + aval signature.
+
+    Returns ``(compiled, AotTimes)``; ``compiled(*concrete_args)`` is
+    bit-identical to calling the jitted executable (it IS the same
+    lowering — pinned by ``tests/test_aot.py``).  Thread-safe: the
+    experiment layer compiles buckets on a worker pool while the host
+    builds data arrays."""
+    from repro.core import compilecache as _cc
+    key = _exe_key(kind, ae_cfg, cfg, k_pad, ndev, track_iso, fused)
+    full_key = key + _avals_signature(abstract_args)
+    with _AOT_LOCK:
+        hit = _AOT_CACHE.get(full_key)
+    if hit is not None:
+        return hit, AotTimes(source="memory")
+    # persistent executable cache: a warm fresh process deserialises
+    # the whole compiled executable — no trace, no lower, no XLA
+    fp = _cc.exe_fingerprint(full_key)
+    t0 = time.perf_counter()
+    loaded = _cc.load_executable(fp)
+    if loaded is not None:
+        with _AOT_LOCK:
+            loaded = _AOT_CACHE.setdefault(full_key, loaded)
+        return loaded, AotTimes(compile_s=time.perf_counter() - t0,
+                                source="disk")
+    jitted = _build_executable(*key)
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*abstract_args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile(compiler_options=_AOT_COMPILER_OPTIONS)
+    t2 = time.perf_counter()
+    _cc.store_executable(fp, compiled)
+    with _AOT_LOCK:
+        # a racing thread may have compiled the same key; keep the first
+        compiled = _AOT_CACHE.setdefault(full_key, compiled)
+    return compiled, AotTimes(lower_s=t1 - t0, compile_s=t2 - t1)
+
+
+def clear_executable_caches() -> None:
+    """Drop every in-process executable cache (jit lru, AOT compiled,
+    the single-shot simulator's core cache) — cold-start benchmarking
+    and cache-semantics tests use this to force genuine re-compiles.
+    The persistent disk cache (:mod:`repro.core.compilecache`) is NOT
+    touched; clear its directory to simulate a truly cold machine."""
+    from repro.core import baselines as _bl
+    from repro.core import simulate as _sim
+    _build_executable.cache_clear()
+    with _AOT_LOCK:
+        _AOT_CACHE.clear()
+    _sim._jitted_core_cached.cache_clear()
+    _bl._jitted_multimodel_core_cached.cache_clear()
+    jax.clear_caches()
+
+
+def _run_batched(batched_call, bcast_args, mapped, plan: Optional[ExecPlan],
+                 aot_resolve=None):
     """Dispatch a stacked scenario batch through ``batched_call`` with
     host-side chunking and batch padding per ``plan``; returns the
     outputs pytree as numpy arrays with the padding stripped.
 
     ``mapped`` is a tuple of pytrees sharing the scenario leading axis —
     (traces, seeds) for a single campaign, plus the stacked per-cell
-    topology/model-mask operands on the fused sweep path."""
+    topology/model-mask operands on the fused sweep path.
+
+    ``aot_resolve`` (the AOT path) maps the per-chunk abstract-argument
+    tuple — derived here from the CONCRETE arrays, so it is exact by
+    construction — to a compiled executable that replaces
+    ``batched_call`` (every chunk shares one padded shape, so one
+    executable serves them all)."""
     plan = plan or ExecPlan()
     B = int(jax.tree.leaves(mapped)[0].shape[0])
     chunk = min(plan.chunk_size or B, B)
@@ -332,6 +502,15 @@ def _run_batched(batched_call, bcast_args, mapped, plan: Optional[ExecPlan]):
         # rows are stripped below before post-processing
         sel = np.concatenate([np.arange(B), np.zeros(b_pad - B, np.int64)])
         mapped = jax.tree.map(lambda x: x[sel], mapped)
+    if aot_resolve is not None:
+        sds = jax.ShapeDtypeStruct
+        avals = tuple(
+            jax.tree.map(lambda x: sds(x.shape, x.dtype), a)
+            for a in bcast_args) + tuple(
+            jax.tree.map(lambda x: sds((chunk,) + x.shape[1:], x.dtype),
+                         m)
+            for m in mapped)
+        batched_call = aot_resolve(avals)
     outs = []
     for c in range(n_chunks):
         sl = slice(c * chunk, (c + 1) * chunk)

@@ -1,0 +1,254 @@
+"""Persistent XLA compilation-cache wiring + compile accounting.
+
+Cold campaign runs pay XLA twice over: once to trace/lower each dispatch
+bucket and once to compile it (BENCH_campaign.json: ``sweep_fused_cold``
+at roughly half of ``sweep_fused`` steady-state throughput).  The AOT
+path in :mod:`repro.core.experiment` kills the in-process share of that
+tax; this module kills the cross-process share by pointing JAX's
+persistent compilation cache at a stable on-disk directory, so a second
+process running the same spec deserialises every executable instead of
+invoking XLA.
+
+* :func:`enable_persistent_cache` — point
+  ``jax_compilation_cache_dir`` at :func:`default_cache_dir` (or an
+  explicit path) and drop the min-compile-time threshold so every
+  campaign core is cached.  Idempotent; safe to call repeatedly.
+* :func:`ensure_persistent_cache` — the lazy entry point
+  ``experiment.execute`` calls: enables the default cache once per
+  process unless the user opted out (``REPRO_CACHE_DIR=off``) or
+  already enabled a custom dir.
+* :func:`xla_compile_stats` — process-wide counters of persistent-cache
+  compile requests / hits / misses, fed by a ``jax.monitoring`` event
+  listener.  ``misses`` counts ACTUAL XLA compiles; a warm-disk re-run
+  of a spec reports ``misses == 0`` (pinned by
+  ``tests/test_aot.py::test_disk_cache_second_process_zero_xla_compiles``).
+* :func:`load_executable` / :func:`store_executable` — a persistent
+  WHOLE-EXECUTABLE cache on top of XLA's module cache: the AOT path
+  (:func:`repro.core.campaign.aot_executable`) serialises each compiled
+  bucket executable (``jax.experimental.serialize_executable``) under
+  ``<cache>/executables/<jax+backend fingerprint>/``, so a warm re-run
+  in a fresh process skips TRACING as well as XLA — XLA's own cache
+  only short-circuits compilation, and for campaign-sized programs the
+  Python trace/lower step costs seconds of its own.
+
+Environment:
+
+``REPRO_CACHE_DIR``
+    Overrides the cache directory.  The values ``off`` / ``none`` /
+    ``0`` / empty disable the persistent cache entirely.  Unset, the
+    cache lives under ``~/.cache/repro-jax``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+ENV_VAR = "REPRO_CACHE_DIR"
+#: set REPRO_CACHE_DEBUG=1 to surface the otherwise-swallowed
+#: executable-cache store/load failures on stderr
+DEBUG_VAR = "REPRO_CACHE_DEBUG"
+_OFF_VALUES = {"", "0", "off", "none", "disabled", "false"}
+
+
+def _debug(msg: str, exc: Exception) -> None:
+    if os.environ.get(DEBUG_VAR):
+        import sys
+        import traceback
+        print(f"[repro.compilecache] {msg}: {exc!r}", file=sys.stderr)
+        traceback.print_exc(file=sys.stderr)
+
+#: monitoring events the listener folds into :func:`xla_compile_stats`.
+_REQUEST_EVENT = "/jax/compilation_cache/compile_requests_use_cache"
+_HIT_EVENT = "/jax/compilation_cache/cache_hits"
+
+_lock = threading.Lock()
+_counts = {"requests": 0, "hits": 0, "exe_hits": 0, "exe_stores": 0}
+_state = {"dir": None, "listening": False, "ensured": False}
+
+
+def default_cache_dir() -> Optional[str]:
+    """Resolved cache directory: ``REPRO_CACHE_DIR`` override first
+    (``off``-like values -> None = disabled), else ``~/.cache/repro-jax``."""
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        if env.strip().lower() in _OFF_VALUES:
+            return None
+        return os.path.abspath(os.path.expanduser(env))
+    return os.path.expanduser(os.path.join("~", ".cache", "repro-jax"))
+
+
+def _listener(event: str, **kwargs) -> None:
+    if event == _REQUEST_EVENT:
+        with _lock:
+            _counts["requests"] += 1
+    elif event == _HIT_EVENT:
+        with _lock:
+            _counts["hits"] += 1
+
+
+def _register_listener() -> None:
+    if _state["listening"]:
+        return
+    from jax._src import monitoring
+    monitoring.register_event_listener(_listener)
+    _state["listening"] = True
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> Optional[str]:
+    """Enable the on-disk compilation cache at ``path`` (default:
+    :func:`default_cache_dir`); returns the directory in use, or None
+    when disabled via ``REPRO_CACHE_DIR``.  Re-pointing at a new
+    directory resets JAX's in-process handle so subsequent compiles hit
+    the new location."""
+    path = default_cache_dir() if path is None else os.path.abspath(
+        os.path.expanduser(path))
+    if path is None:
+        return None
+    _register_listener()
+    if _state["dir"] == path:
+        return path
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # campaign cores compile in ~seconds but MUST be cached: drop the
+    # default >1s threshold and the min-entry-size floor
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    _reset_jax_cache_handle()
+    _state["dir"] = path
+    return path
+
+
+def disable_persistent_cache() -> None:
+    """Turn the persistent cache off for this process (tests use this
+    to time genuinely cold compiles)."""
+    jax.config.update("jax_compilation_cache_dir", None)
+    _reset_jax_cache_handle()
+    _state["dir"] = None
+    _state["ensured"] = True   # an explicit choice: ensure() stays out
+
+
+def ensure_persistent_cache() -> Optional[str]:
+    """Lazy default wiring: the first ``execute()`` of a process lands
+    here and enables the default directory, honouring ``REPRO_CACHE_DIR``
+    opt-out and never overriding an explicit
+    :func:`enable_persistent_cache` / :func:`disable_persistent_cache`
+    call made earlier."""
+    if _state["ensured"] or _state["dir"] is not None:
+        return _state["dir"]
+    _state["ensured"] = True
+    return enable_persistent_cache()
+
+
+def persistent_cache_dir() -> Optional[str]:
+    """The directory currently wired, or None when disabled."""
+    return _state["dir"]
+
+
+def _reset_jax_cache_handle() -> None:
+    """Drop jax's in-process cache object so the next compile re-reads
+    ``jax_compilation_cache_dir`` (private API; tolerated to be absent)."""
+    try:
+        from jax._src import compilation_cache as _cc
+        _cc.reset_cache()
+    except Exception:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Whole-executable cache (the layer above XLA's module cache)
+# ---------------------------------------------------------------------------
+def _exe_dir() -> Optional[str]:
+    """Executable-cache directory, fingerprinted by the jax/jaxlib
+    version and backend — a serialized executable only loads into the
+    runtime that produced it, so upgrades silently start a fresh
+    namespace instead of failing deserialisation."""
+    d = _state["dir"]
+    if d is None:
+        return None
+    import jaxlib
+    tag = (f"jax-{jax.__version__}-jaxlib-{jaxlib.__version__}"
+           f"-{jax.default_backend()}")
+    return os.path.join(d, "executables", tag)
+
+
+def exe_fingerprint(parts: Any) -> str:
+    """Stable file name of one executable-cache entry.  ``parts`` is
+    the campaign layer's canonical key + abstract-argument signature —
+    all reprs of frozen dataclasses, strings, ints and tuples, so the
+    digest is deterministic across processes."""
+    return hashlib.sha256(repr(parts).encode()).hexdigest()
+
+
+def load_executable(fingerprint: str) -> Optional[Any]:
+    """Deserialise a previously stored compiled executable, or None on
+    any miss (absent dir, absent entry, stale/undeserialisable payload
+    — the cache must never turn into a failure mode)."""
+    d = _exe_dir()
+    if d is None:
+        return None
+    path = os.path.join(d, fingerprint + ".pkl")
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        from jax.experimental import serialize_executable as _se
+        exe = _se.deserialize_and_load(*payload)
+    except Exception as e:
+        _debug(f"load_executable({fingerprint[:12]}) miss", e)
+        return None
+    with _lock:
+        _counts["exe_hits"] += 1
+    return exe
+
+
+def store_executable(fingerprint: str, compiled: Any) -> None:
+    """Serialise a compiled executable into the cache (atomic rename;
+    best-effort — storage failures are silent, the executable in hand
+    still runs)."""
+    d = _exe_dir()
+    if d is None:
+        return
+    try:
+        from jax.experimental import serialize_executable as _se
+        payload = _se.serialize(compiled)
+        # an entry on disk must be an entry that LOADS: round-trip the
+        # payload before persisting.  Serialisation can silently produce
+        # an unloadable payload (an executable served from XLA's module
+        # cache drops its jit-compiled symbols — see
+        # campaign._module_cache_disabled), and a poisoned entry would
+        # force every future process through a fail-load + recompile.
+        _se.deserialize_and_load(*payload)
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, fingerprint + ".pkl")
+        tmp = f"{path}.tmp{os.getpid()}"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f)
+        os.replace(tmp, path)
+    except Exception as e:
+        _debug(f"store_executable({fingerprint[:12]}) failed", e)
+        return
+    with _lock:
+        _counts["exe_stores"] += 1
+
+
+def xla_compile_stats() -> Dict[str, int]:
+    """Persistent-cache counters since process start (or the last
+    :func:`reset_stats`): ``requests`` = compiles that consulted the
+    disk cache, ``hits`` = served from disk, ``misses`` = actual XLA
+    compiles that then populated it.  ``exe_hits`` / ``exe_stores``
+    count whole-executable loads and writes (the AOT layer).  All zero
+    while the cache is disabled (the events never fire)."""
+    with _lock:
+        c = dict(_counts)
+    c["misses"] = c["requests"] - c["hits"]
+    return c
+
+
+def reset_stats() -> None:
+    with _lock:
+        for k in _counts:
+            _counts[k] = 0

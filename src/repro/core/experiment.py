@@ -55,6 +55,8 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -64,6 +66,7 @@ import numpy as np
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import campaign as _c
+from repro.core import compilecache
 from repro.core.baselines import (MultiModelConfig, as_multimodel_trace,
                                   prepare_multimodel_arrays)
 from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
@@ -407,9 +410,11 @@ def _geometry(bucket: BucketPlan, exec_plan: Optional[ExecPlan]) -> None:
     plan_ = exec_plan or ExecPlan()
     B = bucket.num_scenarios
     chunk = min(plan_.chunk_size or B, B)
-    # warn (about shard degrading to one device) once per plan, not
-    # once per bucket
-    ndev = plan_.resolved_devices(warn=(bucket.index == 0))
+    # planning never warns: the shard-degradation warning fires exactly
+    # once per execute() (the old bucket.index == 0 gate fired per
+    # plan() call — zero times for entry points that bypassed plan(),
+    # twice for plan()+execute())
+    ndev = plan_.resolved_devices(warn=False)
     if ndev:
         chunk = -(-chunk // ndev) * ndev
     bucket.devices = ndev
@@ -523,14 +528,154 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
 # execute(): ExecutionPlan -> ExperimentResult
 # ---------------------------------------------------------------------------
 @dataclass
+class BucketCompileStats:
+    """Compile/dispatch accounting of one bucket of an executed plan.
+
+    ``lower_s`` / ``compile_s`` are wall times of the AOT lowering and
+    XLA compile (0 on the jit path and on in-process AOT cache hits);
+    ``execute_s`` is the bucket's whole dispatch — array builds,
+    executable resolution and the batched call(s).  ``cache`` is
+    ``""`` (jit path), ``"memory"`` (in-process AOT cache already held
+    the executable), ``"disk"`` (deserialised whole from the persistent
+    executable cache — no trace, no XLA; ``compile_s`` is the load
+    time) or ``"compiled"`` (lower+compile ran this execute).
+    ``aval_match``
+    records whether the plan-time shape prediction matched the concrete
+    arguments (a mismatch falls back to a synchronous compile — correct
+    but un-overlapped; pinned True by ``tests/test_aot.py``)."""
+    bucket: int
+    kind: str
+    fused: bool
+    aot: bool
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    execute_s: float = 0.0
+    cache: str = ""
+    aval_match: Optional[bool] = None
+
+
+@dataclass
+class CompileReport:
+    """Where one ``execute()`` spent its compile budget.
+
+    ``traces`` is the ``campaign.TRACE_COUNT`` delta across the whole
+    execute (0 on a warm process); ``xla`` is the
+    :func:`repro.core.compilecache.xla_compile_stats` delta —
+    ``xla['misses']`` counts ACTUAL XLA compiles, so a warm-disk re-run
+    of a spec in a fresh process shows ``misses == 0`` with
+    ``hits > 0``.  ``cache_dir`` is the persistent cache directory in
+    use (None when disabled)."""
+    aot: bool
+    buckets: List[BucketCompileStats]
+    traces: int = 0
+    xla: Dict[str, int] = field(default_factory=dict)
+    cache_dir: Optional[str] = None
+
+    @property
+    def lower_s(self) -> float:
+        return sum(b.lower_s for b in self.buckets)
+
+    @property
+    def compile_s(self) -> float:
+        return sum(b.compile_s for b in self.buckets)
+
+    @property
+    def execute_s(self) -> float:
+        return sum(b.execute_s for b in self.buckets)
+
+    def describe(self) -> str:
+        lines = [f"CompileReport: aot={self.aot} traces={self.traces} "
+                 f"xla={self.xla or '{}'} cache_dir={self.cache_dir}"]
+        for b in self.buckets:
+            lines.append(
+                f"  bucket {b.bucket} ({b.kind}"
+                f"{' fused' if b.fused else ''}): "
+                f"lower={b.lower_s:.3f}s compile={b.compile_s:.3f}s "
+                f"execute={b.execute_s:.3f}s"
+                + (f" cache={b.cache}" if b.cache else "")
+                + (f" aval_match={b.aval_match}"
+                   if b.aval_match is not None else ""))
+        return "\n".join(lines)
+
+
+def _bucket_exe_args(data: DataSpec, bucket: BucketPlan) -> tuple:
+    """``(kind, ae_cfg, cfg, k_pad, ndev, track_iso, fused)`` — the
+    executable-cache key parts the bucket's ``_exec_*`` helper will
+    resolve (fused multi buckets compile at the PADDED model count)."""
+    if bucket.kind == "multi":
+        cfg = (dataclasses.replace(bucket.key_cfg,
+                                   num_models=bucket.m_pad)
+               if bucket.fused else bucket.key_cfg)
+        return ("multi", data.ae_cfg, cfg, None, bucket.devices, False,
+                bucket.fused)
+    return ("single", data.ae_cfg, bucket.key_cfg, bucket.k_pad,
+            bucket.devices, bucket.track_iso, bucket.fused)
+
+
+def _bucket_avals(data: DataSpec, bucket: BucketPlan,
+                  cells: Sequence[CellPlan]) -> tuple:
+    """Predicted abstract arguments of one bucket's batched call — the
+    exact ``ShapeDtypeStruct`` tuple ``_run_batched`` will derive from
+    the concrete arrays, computed from the plan alone so AOT compiles
+    can start BEFORE the host builds data/trace arrays.  Mirrors the
+    ``_exec_*`` arg builders: ``_prepare_arrays`` shapes (batch cells
+    centralise onto one device), per-chunk mapped operands at
+    ``bucket.chunk``, trace leaves from one normalised representative
+    trace (``stack_traces``/``concat_traces`` assert the batch is
+    uniform, so cell 0's first trace is authoritative)."""
+    sds = jax.ShapeDtypeStruct
+    canon = jax.dtypes.canonicalize_dtype
+    f32, i32 = canon(np.float32), canon(np.int32)
+    c0 = cells[0]
+    cfg0 = c0.cfg
+    chunk = bucket.chunk
+    dxa = np.asarray(data.device_x)
+    if bucket.kind == "single" and cfg0.scheme == "batch":
+        n_dev, n_max = 1, int(np.sum(np.asarray(data.device_counts)))
+    else:
+        n_dev, n_max = int(dxa.shape[0]), int(dxa.shape[1])
+    txa = np.asarray(data.test_x)
+    bcast = (sds((n_dev, n_max, int(dxa.shape[2])), canon(dxa.dtype)),
+             sds((n_dev,), f32),
+             sds((n_dev, n_max), f32),
+             sds(tuple(txa.shape), canon(txa.dtype)))
+
+    if bucket.kind == "multi":
+        t0 = as_multimodel_trace(c0.traces[0], cfg0.num_devices)
+    else:
+        t0 = as_trace(c0.traces[0], cfg0.topology())
+    traces = jax.tree.map(
+        lambda x: sds((chunk,) + tuple(x.shape), canon(x.dtype)), t0)
+    seeds = sds((chunk,), i32)
+
+    if bucket.kind == "multi":
+        if bucket.fused:
+            return bcast + (sds((chunk, bucket.m_pad), f32), traces,
+                            seeds)
+        return bcast + (sds((cfg0.num_models,), f32), traces, seeds)
+    if bucket.fused:
+        kp = bucket.k_pad
+        return bcast + (sds((chunk, n_dev), i32), sds((chunk, kp), i32),
+                        sds((chunk, kp), f32), traces, seeds)
+    if bucket.k_pad is not None:
+        kp = bucket.k_pad
+        bcast = bcast + (sds((n_dev,), i32), sds((kp,), i32),
+                        sds((kp,), f32))
+    return bcast + (traces, seeds)
+
+
+@dataclass
 class ExperimentResult:
     """Per-cell campaign results of one executed plan, in cell order.
 
     ``results[i]`` is the :class:`CampaignResult` /
     :class:`MultiCampaignResult` of ``plan.cells[i]`` — every scenario
-    keyed by (cell, trace index, seed)."""
+    keyed by (cell, trace index, seed).  ``compile_report`` accounts
+    for where the execute spent its compile budget
+    (:class:`CompileReport`)."""
     plan: ExecutionPlan
     results: List[Union[CampaignResult, MultiCampaignResult]]
+    compile_report: Optional[CompileReport] = None
 
     @property
     def num_scenarios(self) -> int:
@@ -577,8 +722,8 @@ class ExperimentResult:
 
 def _exec_single_cell(data: DataSpec, cfg: SimConfig,
                       traces: Sequence[Failure], seeds: Sequence[int],
-                      target_loss, exec_plan, pad_k: Optional[int]
-                      ) -> CampaignResult:
+                      target_loss, exec_plan, pad_k: Optional[int],
+                      aot_resolve=None) -> CampaignResult:
     """One single-model cell, unfused (the legacy ``run_campaign``
     body): topology closed over statically (``pad_k=None``) or entering
     as broadcast padded arrays (``pad_k=int``)."""
@@ -613,14 +758,14 @@ def _exec_single_cell(data: DataSpec, cfg: SimConfig,
                              track_iso)
     out = _c._run_batched(batched, bcast,
                           (batch_traces, jnp.asarray(seed_arr)),
-                          exec_plan)
+                          exec_plan, aot_resolve=aot_resolve)
     return _c._post_process(cfg, out, trace_idx, seed_arr, data.test_y,
                             target_loss)
 
 
 def _exec_multi_cell(data: DataSpec, cfg: MultiModelConfig,
                      traces: Sequence[Failure], seeds: Sequence[int],
-                     exec_plan) -> MultiCampaignResult:
+                     exec_plan, aot_resolve=None) -> MultiCampaignResult:
     """One multi-model cell, unfused (the legacy
     ``run_multimodel_campaign`` body)."""
     norm = [as_multimodel_trace(t, cfg.num_devices) for t in traces]
@@ -640,7 +785,7 @@ def _exec_multi_cell(data: DataSpec, cfg: MultiModelConfig,
     model_valid = jnp.ones((cfg.num_models,), jnp.float32)
     out = _c._run_batched(batched, (dx, counts, valid, tx, model_valid),
                           (batch_traces, jnp.asarray(seed_arr)),
-                          exec_plan)
+                          exec_plan, aot_resolve=aot_resolve)
 
     best, multi = _c._multi_metrics(np.asarray(out.final_scores),
                                     data.test_y)
@@ -676,8 +821,8 @@ def _stacked_scenarios(cells, seeds, trace_cache, trace_key_fn, norm_fn):
 
 def _exec_fused_single_group(data: DataSpec, cells, seeds, target_loss,
                              exec_plan, kp: int, key_cfg,
-                             track_iso: bool, trace_cache
-                             ) -> List[CampaignResult]:
+                             track_iso: bool, trace_cache,
+                             aot_resolve=None) -> List[CampaignResult]:
     """One fused single-model bucket (the legacy ``run_fused_campaigns``
     group body): every cell's padded cluster arrays stacked as VMAPPED
     operands along the flattened (cell x trace x seed) axis — ONE
@@ -713,7 +858,7 @@ def _exec_fused_single_group(data: DataSpec, cells, seeds, target_loss,
     batched = _c._executable("single", data.ae_cfg, key_cfg, kp, ndev,
                              track_iso, fused=True)
     out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
-                          exec_plan)
+                          exec_plan, aot_resolve=aot_resolve)
     fields = _c._post_process_arrays(track_iso, out, data.test_y,
                                      target_loss)
     results, off = [], 0
@@ -727,8 +872,8 @@ def _exec_fused_single_group(data: DataSpec, cells, seeds, target_loss,
 
 
 def _exec_fused_multi_group(data: DataSpec, cells, seeds, exec_plan,
-                            mp: int, key_cfg, trace_cache
-                            ) -> List[MultiCampaignResult]:
+                            mp: int, key_cfg, trace_cache,
+                            aot_resolve=None) -> List[MultiCampaignResult]:
     """One fused multi-model bucket (the legacy
     ``run_fused_multimodel_campaigns`` group body): cells with
     DIFFERENT model counts share one executable via the padded-M
@@ -762,7 +907,7 @@ def _exec_fused_multi_group(data: DataSpec, cells, seeds, exec_plan,
     batched = _c._executable("multi", data.ae_cfg, exe_cfg, None, ndev,
                              fused=True)
     out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
-                          exec_plan)
+                          exec_plan, aot_resolve=aot_resolve)
     model_valid = np.asarray(mapped[0])
     best, multi = _c._multi_metrics(np.asarray(out.final_scores),
                                     data.test_y, model_valid)
@@ -779,36 +924,114 @@ def _exec_fused_multi_group(data: DataSpec, cells, seeds, exec_plan,
     return results
 
 
+def _make_resolver(stats: BucketCompileStats, key_args: tuple, future):
+    """Per-bucket AOT executable resolver ``_run_batched`` calls with
+    the concrete abstract-argument tuple.  Waits for the speculative
+    plan-time compile (``future``), then resolves through the AOT cache:
+    a hit means the prediction matched (the usual case — the compile
+    overlapped the host-side array builds); a miss means the prediction
+    drifted from the real shapes and we compile synchronously — slower
+    but still bit-identical."""
+    def resolve(avals):
+        spec_times = None
+        if future is not None:
+            _, spec_times = future.result()
+        compiled, times = _c.aot_executable(*key_args, avals)
+        stats.aval_match = bool(times.cached and spec_times is not None)
+        if times.cached and spec_times is not None:
+            # the speculative compile did the work; report ITS times
+            # and source (compiled / disk) rather than the memory hit
+            times = spec_times
+        stats.lower_s, stats.compile_s = times.lower_s, times.compile_s
+        stats.cache = times.source
+        return compiled
+    return resolve
+
+
 def execute(plan_: ExecutionPlan) -> ExperimentResult:
     """Run every bucket of a lowered plan; results align with
-    ``plan_.cells`` (and with the spec's cell order)."""
+    ``plan_.cells`` (and with the spec's cell order).
+
+    Wires the persistent XLA disk cache
+    (:func:`repro.core.compilecache.ensure_persistent_cache`) and, when
+    the spec's :class:`ExecPlan` sets ``aot=True``, launches every
+    bucket's lower+compile on a thread pool BEFORE dispatching —
+    ``plan()`` already knows each bucket's shapes
+    (:func:`_bucket_avals`), so XLA overlaps the host-side data/trace
+    array builds and the buckets dispatch through compiled executables.
+    Either path attaches a :class:`CompileReport`."""
     spec = plan_.spec
     data, seeds = spec.data, spec.seeds.seeds
     exec_plan, target_loss = spec.exec_plan, spec.target_loss
+    compilecache.ensure_persistent_cache()
+    # exactly ONE shard-degradation warning per execute(), whatever the
+    # entry point: plan() and every helper pass warn=False
+    if exec_plan is not None:
+        exec_plan.resolved_devices(warn=True)
+
+    use_aot = bool(exec_plan is not None and exec_plan.aot)
+    stats = [BucketCompileStats(bucket=b.index, kind=b.kind,
+                                fused=b.fused, aot=use_aot)
+             for b in plan_.buckets]
+    traces0 = _c.TRACE_COUNT
+    xla0 = compilecache.xla_compile_stats()
+
+    pool = futures = None
+    if use_aot:
+        pool = ThreadPoolExecutor(
+            max_workers=min(4, len(plan_.buckets)),
+            thread_name_prefix="aot-compile")
+        futures = {
+            b.index: pool.submit(
+                _c.aot_executable, *_bucket_exe_args(data, b),
+                _bucket_avals(data, b,
+                              [plan_.cells[i] for i in b.cell_indices]))
+            for b in plan_.buckets}
+
     results: List[Optional[Any]] = [None] * len(plan_.cells)
     trace_cache: dict = {}   # one stacked batch per distinct resolution
-    for bucket in plan_.buckets:
-        cells = [plan_.cells[i] for i in bucket.cell_indices]
-        pairs = [(c.cfg, c.traces) for c in cells]
-        if bucket.kind == "single" and bucket.fused:
-            rs = _exec_fused_single_group(
-                data, pairs, seeds, target_loss, exec_plan,
-                bucket.k_pad, bucket.key_cfg, bucket.track_iso,
-                trace_cache)
-        elif bucket.kind == "multi" and bucket.fused:
-            rs = _exec_fused_multi_group(data, pairs, seeds, exec_plan,
-                                         bucket.m_pad, bucket.key_cfg,
-                                         trace_cache)
-        elif bucket.kind == "single":
-            rs = [_exec_single_cell(data, cells[0].cfg, cells[0].traces,
-                                    seeds, target_loss, exec_plan,
-                                    bucket.k_pad)]
-        else:
-            rs = [_exec_multi_cell(data, cells[0].cfg, cells[0].traces,
-                                   seeds, exec_plan)]
-        for c, r in zip(cells, rs):
-            results[c.index] = r
-    return ExperimentResult(plan=plan_, results=results)
+    try:
+        for bucket in plan_.buckets:
+            cells = [plan_.cells[i] for i in bucket.cell_indices]
+            pairs = [(c.cfg, c.traces) for c in cells]
+            resolve = (_make_resolver(stats[bucket.index],
+                                      _bucket_exe_args(data, bucket),
+                                      futures[bucket.index])
+                       if use_aot else None)
+            t0 = time.perf_counter()
+            if bucket.kind == "single" and bucket.fused:
+                rs = _exec_fused_single_group(
+                    data, pairs, seeds, target_loss, exec_plan,
+                    bucket.k_pad, bucket.key_cfg, bucket.track_iso,
+                    trace_cache, aot_resolve=resolve)
+            elif bucket.kind == "multi" and bucket.fused:
+                rs = _exec_fused_multi_group(
+                    data, pairs, seeds, exec_plan, bucket.m_pad,
+                    bucket.key_cfg, trace_cache, aot_resolve=resolve)
+            elif bucket.kind == "single":
+                rs = [_exec_single_cell(data, cells[0].cfg,
+                                        cells[0].traces, seeds,
+                                        target_loss, exec_plan,
+                                        bucket.k_pad,
+                                        aot_resolve=resolve)]
+            else:
+                rs = [_exec_multi_cell(data, cells[0].cfg,
+                                       cells[0].traces, seeds, exec_plan,
+                                       aot_resolve=resolve)]
+            stats[bucket.index].execute_s = time.perf_counter() - t0
+            for c, r in zip(cells, rs):
+                results[c.index] = r
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    xla1 = compilecache.xla_compile_stats()
+    report = CompileReport(
+        aot=use_aot, buckets=stats, traces=_c.TRACE_COUNT - traces0,
+        xla={k: xla1[k] - xla0[k] for k in xla1},
+        cache_dir=compilecache.persistent_cache_dir())
+    return ExperimentResult(plan=plan_, results=results,
+                            compile_report=report)
 
 
 def run_experiment(spec: ExperimentSpec) -> ExperimentResult:

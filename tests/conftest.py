@@ -5,11 +5,28 @@ and benches must see the single real CPU device (brief, step 0).  The
 multi-device distributed tests spawn subprocesses that set the flag
 themselves (tests/test_distributed.py).
 """
+import os
+
 import numpy as np
 import pytest
 
 from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import compilecache
 from repro.data import commsml, federated
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _hermetic_compile_cache(tmp_path_factory):
+    """Point the persistent compilation cache at a per-session temp
+    directory so the suite never writes ``~/.cache/repro-jax``.  An
+    explicit ``REPRO_CACHE_DIR`` still wins (the cross-process
+    disk-cache tests set it in their subprocess env, not here)."""
+    if os.environ.get(compilecache.ENV_VAR):
+        yield
+        return
+    compilecache.enable_persistent_cache(
+        str(tmp_path_factory.mktemp("repro-jax-cache")))
+    yield
 
 
 @pytest.fixture(scope="session")

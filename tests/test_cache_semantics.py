@@ -1,5 +1,13 @@
-"""Serving-cache semantics unit tests: slot validity, ring wraps,
-pad_cache alignment."""
+"""Cache-semantics unit tests.
+
+* Serving caches: slot validity, ring wraps, pad_cache alignment.
+* Campaign executable cache: the canonical lru key
+  (``campaign._exe_key``) must normalise redundant call spellings to
+  ONE entry (no duplicate compiles) while keeping every degree of
+  freedom that changes the lowered program distinct (no stale-program
+  collisions), and the AOT layer's abstract-argument signature must
+  separate executables per shape/dtype/tree.
+"""
 import dataclasses
 
 import jax
@@ -8,6 +16,11 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import campaign as C
+from repro.core.baselines import MultiModelConfig
+from repro.core.campaign import ExecPlan
+from repro.core.simulate import SimConfig
 from repro.models.attention import cache_slot_validity
 from repro.serving.decode import cache_shape, init_cache, pad_cache
 
@@ -108,3 +121,109 @@ def test_cache_shape_families():
     cs = cache_shape(ARCHS["rwkv6-7b"].reduced(), 2, 32)
     for l in jax.tree.leaves(cs):
         assert 32 not in l.shape[1:]  # no seq-length dim
+
+
+# ---------------------------------------------------------------------------
+# campaign executable cache keys (cache-correctness bugfix satellite)
+# ---------------------------------------------------------------------------
+AE = AutoencoderConfig(input_dim=8, hidden=(4,), code_dim=2)
+
+
+def _scfg(scheme="tolfl", k=2):
+    return SimConfig(scheme=scheme, num_devices=6, num_clusters=k,
+                     rounds=2, dropout=False)
+
+
+def test_exe_key_spelling_invariance():
+    """Omitted trailing defaults and explicit kwargs must land on the
+    SAME lru entry — raw ``functools.lru_cache`` would key them apart
+    and silently compile the identical program twice."""
+    cfg = _scfg()
+    a = C._executable("single", AE, cfg, 4, None)
+    b = C._executable("single", AE, cfg, 4, None, track_iso=False,
+                      fused=False)
+    assert a is b
+
+
+def test_exe_key_static_path_normalises_flags():
+    """Static builds (k_pad=None) derive the iso branch from
+    ``cfg.scheme`` inside ``_build_core``; a caller flag disagreeing
+    with the scheme must not mint a second identical executable."""
+    cfg = _scfg("tolfl")
+    assert (C._exe_key("single", AE, cfg, None, None, True, True)
+            == C._exe_key("single", AE, cfg, None, None, False, False))
+    # fl statically builds the isolated-fallback branch: forced on
+    kf = C._exe_key("single", AE, _scfg("fl", 1), None, None, False, False)
+    assert kf[-2] is True
+    # ... and there is no fused-static path
+    assert kf[-1] is False
+    # object identity through the public wrapper
+    assert (C._executable("single", AE, cfg, None, None,
+                          track_iso=True, fused=True)
+            is C._executable("single", AE, cfg, None, None))
+
+
+def test_exe_key_multi_normalises_track_iso():
+    mcfg = MultiModelConfig(num_devices=6, num_models=2, rounds=2,
+                            dropout=False)
+    assert (C._exe_key("multi", AE, mcfg, None, None, True, False)
+            == C._exe_key("multi", AE, mcfg, None, None, False, False))
+
+
+def test_exe_key_multi_rejects_k_pad():
+    mcfg = MultiModelConfig(num_devices=6, num_models=2, rounds=2,
+                            dropout=False)
+    with pytest.raises(AssertionError, match="multi-model"):
+        C._exe_key("multi", AE, mcfg, 3, None, False, False)
+
+
+def test_exe_key_distinct_programs_stay_distinct():
+    """Every knob that changes the lowered program must stay in the
+    key: collapsing any pair would serve a stale/wrong executable."""
+    cfg = _scfg()
+    keys = [
+        C._exe_key("single", AE, cfg, 4, None, False, True),
+        C._exe_key("single", AE, cfg, 8, None, False, True),     # k_pad
+        C._exe_key("single", AE, cfg, 4, 2, False, True),        # ndev
+        C._exe_key("single", AE, cfg, 4, None, True, True),      # iso kind
+        C._exe_key("single", AE, cfg, 4, None, False, False),    # op split
+        C._exe_key("single", AE, _scfg(k=3), 4, None, False, True),  # cfg
+        C._exe_key("single", AE, dataclasses.replace(cfg, rounds=3),
+                   4, None, False, True),                        # cfg
+    ]
+    assert len(set(keys)) == len(keys)
+
+
+def test_exe_key_shard_degrade_shares_unsharded_entry():
+    """``ExecPlan(shard=True)`` on a single-device host degrades to
+    ``ndev=None`` — the same cache entry as the unsharded path, never a
+    duplicate compile."""
+    if jax.local_device_count() > 1:
+        pytest.skip("host has multiple devices")
+    ndev = ExecPlan(shard=True).resolved_devices(warn=False)
+    assert ndev is None
+    cfg = _scfg()
+    assert (C._exe_key("single", AE, cfg, 4, ndev, False, True)
+            == C._exe_key("single", AE, cfg, 4, None, False, True))
+
+
+def test_avals_signature_separates_executables():
+    """The AOT key extension: same canonical key, different chunk
+    shapes / dtypes / pytree structure -> different compiled
+    executables (and equal avals -> equal signature, so re-planning the
+    same spec hits the cache)."""
+    sds = jax.ShapeDtypeStruct
+    a = (sds((4, 3), jnp.float32),)
+    assert C._avals_signature(a) == C._avals_signature(
+        (sds((4, 3), jnp.float32),))
+    assert C._avals_signature(a) != C._avals_signature(
+        (sds((8, 3), jnp.float32),))
+    assert C._avals_signature(a) != C._avals_signature(
+        (sds((4, 3), jnp.int32),))
+    assert C._avals_signature(a) != C._avals_signature(
+        ((sds((4, 3), jnp.float32),),))   # same leaves, deeper tree
+    # dict pytrees: insertion order must not split the cache
+    assert (C._avals_signature({"x": sds((2,), jnp.float32),
+                                "y": sds((3,), jnp.int32)})
+            == C._avals_signature({"y": sds((3,), jnp.int32),
+                                   "x": sds((2,), jnp.float32)}))
