@@ -274,7 +274,7 @@ def _run_rows(out_path, shard, chunk_size, cold_iter, diskwarm_iter
         results["spec_sweep"]
     # ... comparing MEDIAN walls: best-of-3 picks each row's independent
     # noise minimum, which flakes the ratio on a 1-core container
-    _med = lambda r: float(np.median(r["walls_s"]))
+    _med = lambda r: float(np.median(r["walls_s"]))  # noqa: E731
     assert _med(results["spec_sweep"]) <= 1.05 * _med(results["sweep_fused"]), \
         (results["spec_sweep"], results["sweep_fused"])
     # AOT row: iteration 1 traces + compiles + populates the disk;

@@ -10,11 +10,9 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 from typing import List
 
 import jax
-import numpy as np
 
 from benchmarks.datasets import prepare
 from repro.core.simulate import comm_mb_per_round, comm_transfers_per_round

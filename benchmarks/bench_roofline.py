@@ -6,7 +6,6 @@ import glob
 import json
 from typing import List
 
-from repro.analysis.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
 
 
 def run(pattern: str = "results/dryrun/*.json") -> List[str]:

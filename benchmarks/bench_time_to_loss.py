@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import List
 
 import jax
-import numpy as np
 
 from benchmarks.datasets import prepare
 from repro.core.simulate import (SimConfig, round_time_model,

@@ -6,6 +6,25 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff) =="
+# generic lint (pyflakes / curated pycodestyle / isort) — config in
+# pyproject.toml; gated so local runs without ruff still work (the
+# container bakes no ruff; the GitHub workflow installs it)
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "ruff not installed; skipping (CI installs and enforces it)"
+fi
+
+echo "== plancheck =="
+# repo-specific static analysis: AST lint over src/repro, the
+# executable-cache-key completeness contract, and the plan-time jaxpr
+# pass over a demo plan covering every executable kind.  Fails on any
+# finding NOT covered by the committed plancheck_baseline.toml; the
+# full report (new + baselined) lands in plancheck_report.json
+python -m repro.analysis.plancheck \
+  --baseline plancheck_baseline.toml --report plancheck_report.json
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,49 @@
+"""plancheck: plan-time static analysis for the campaign engine.
+
+Two passes plus a cache-key contract check:
+
+* **Pass 1** (:mod:`.jaxprpass`) lowers every dispatch bucket of an
+  :class:`repro.core.experiment.ExecutionPlan` at its plan-predicted
+  abstract shapes (zero execution) and walks the jaxpr for retrace
+  hazards, by-value data captures, host-sync primitives and size-budget
+  breaches.
+* **Pass 2** (:mod:`.astpass`) lints the repo source for stray
+  jit/vmap, Python-loop metrics, PRNG key reuse and nondeterminism in
+  traced-core position.
+* :mod:`.cachekey` statically checks that every program-shape-changing
+  knob reaches ``campaign._exe_key`` (or is allowlisted with a reason).
+
+Run the whole battery from the repo root::
+
+    PYTHONPATH=src python -m repro.analysis.plancheck
+
+or get a per-bucket report straight off a plan::
+
+    plan = experiment.plan(spec, check=True)
+    print(plan.describe())          # includes the static-report section
+
+Findings are suppressed inline (``# plancheck: ignore[RULE]``) or via
+the committed ``plancheck_baseline.toml`` (:mod:`.findings`).
+"""
+from repro.analysis.plancheck.astpass import check_repo, check_source
+from repro.analysis.plancheck.budgets import (BUDGETS, Budget,
+                                              check_budget,
+                                              constant_across,
+                                              count_jaxpr, eqn_count)
+from repro.analysis.plancheck.cachekey import (classify_field,
+                                               check_cache_keys)
+from repro.analysis.plancheck.findings import (RULES, Finding, Report,
+                                               apply_baseline,
+                                               apply_inline,
+                                               format_baseline,
+                                               load_baseline)
+from repro.analysis.plancheck.jaxprpass import (check_jaxpr, check_plan,
+                                                trace_closed_jaxpr)
+
+__all__ = [
+    "BUDGETS", "Budget", "Finding", "RULES", "Report",
+    "apply_baseline", "apply_inline", "check_budget", "check_cache_keys",
+    "check_jaxpr", "check_plan", "check_repo", "check_source",
+    "classify_field", "constant_across", "count_jaxpr", "eqn_count",
+    "format_baseline", "load_baseline", "trace_closed_jaxpr",
+]

@@ -1,0 +1,113 @@
+"""CLI driver: ``PYTHONPATH=src python -m repro.analysis.plancheck``.
+
+Runs the full battery from the repo root:
+
+1. **AST lint** (pass 2) over ``src/repro``;
+2. **cache-key completeness** (``PC-KEY``) against the live
+   ``campaign._exe_key`` / ``ExecPlan`` / ``BucketPlan`` definitions;
+3. **plan analysis** (pass 1) on a tiny built-in demo spec that lowers
+   all three executable kinds (fused single, fl/iso single, multi) —
+   nothing executes, but the buckets trace exactly like a first
+   compile, so what ships is what gets analysed.
+
+Findings are filtered against ``plancheck_baseline.toml`` (committed
+suppressions, each with a reason); the full report lands in
+``plancheck_report.json``.  Exit status 1 iff NEW findings remain —
+the CI contract (``scripts/ci.sh``).
+
+``--write-baseline`` rewrites the baseline from the current findings
+(then edit in real reasons); ``--skip-plan`` skips the jaxpr pass for
+fast editor loops.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.plancheck import (Report, apply_baseline,
+                                      check_cache_keys, check_plan,
+                                      check_repo, format_baseline,
+                                      load_baseline)
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+#: src/repro, found relative to this file so the CLI works from any cwd
+SRC_REPRO = os.path.normpath(os.path.join(_HERE, os.pardir, os.pardir))
+
+
+def _demo_plan():
+    """A minimal ExecutionPlan exercising every executable kind."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.api import (AutoencoderConfig, CellSpec, DataSpec,
+                           ExperimentSpec, SeedSpec, SimConfig,
+                           TraceSpec, plan)
+    from repro.core.failure import sample_traces
+    from repro.data import commsml, federated
+
+    ae = AutoencoderConfig(input_dim=commsml.N_FEATURES, hidden=(16,),
+                           code_dim=4, dropout=0.2)
+    X, y = commsml.generate(seed=0, samples_per_class=40)
+    split = federated.make_split(X, y, num_devices=6, num_clusters=3,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    base = SimConfig(num_devices=6, rounds=2, lr=1e-3, dropout=False)
+    tcfg = dataclasses.replace(base, scheme="tolfl", num_clusters=3)
+    traces = sample_traces(np.random.default_rng(0), tcfg.topology(),
+                           0.5, max_events=6, rounds=2, num_traces=1)
+    spec = ExperimentSpec(
+        data=DataSpec(ae_cfg=ae, device_x=dx, device_counts=counts,
+                      test_x=split.test_x, test_y=split.test_y,
+                      name="plancheck-demo"),
+        base=base,
+        cells=(CellSpec("tolfl", 2), CellSpec("fl", 1),
+               CellSpec("ifca", 2)),
+        traces=TraceSpec(traces=tuple(traces)), seeds=SeedSpec((0,)))
+    return plan(spec)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.plancheck",
+        description="static analysis: repo lint + cache-key contract "
+                    "+ plan-time jaxpr checks")
+    ap.add_argument("--baseline", default="plancheck_baseline.toml",
+                    help="suppression baseline (default: %(default)s)")
+    ap.add_argument("--report", default="plancheck_report.json",
+                    help="JSON report output (default: %(default)s)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline from current findings")
+    ap.add_argument("--skip-plan", action="store_true",
+                    help="skip the (slower) jaxpr plan pass")
+    ap.add_argument("--src", default=SRC_REPRO,
+                    help="source tree for the AST pass")
+    args = ap.parse_args(argv)
+
+    findings, inline_suppressed = check_repo(args.src,
+                                             rel_prefix="src/repro/")
+    findings += check_cache_keys()
+    if not args.skip_plan:
+        findings += check_plan(_demo_plan())
+
+    if args.write_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            f.write(format_baseline(findings))
+        print(f"wrote {len(findings)} suppression(s) to {args.baseline}"
+              f" -- now fill in the reasons")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, baselined = apply_baseline(findings, baseline)
+    report = Report(findings=new,
+                    suppressed=baselined + inline_suppressed)
+    with open(args.report, "w", encoding="utf-8") as f:
+        f.write(report.to_json() + "\n")
+    print(report.describe())
+    print(f"report: {args.report}")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,378 @@
+"""Pass 2: repo-specific AST lint over ``src/``.
+
+Four rules, each encoding a bug class this repo has actually hit (or
+structurally guards against):
+
+``PC-AST-JIT``
+    ``jax.jit`` / ``jax.vmap`` / ``jax.pmap`` referenced outside the
+    blessed executable-builder modules (:data:`BLESSED_JIT_MODULES` /
+    :data:`BLESSED_JIT_PREFIXES`).  Every campaign executable must flow
+    through ``campaign._exe_key``'s canonical cache key; a stray jit
+    builds an executable the key contract never sees.
+``PC-AST-LOOPMETRIC``
+    The scalar ``auroc`` / ``roc_curve`` called inside a Python loop or
+    comprehension — the pre-PR-3 bug class where per-scenario metrics
+    ran host-side O(B) instead of one ``auroc_batch`` sweep.  Loops
+    over a bounded per-scenario axis (devices) can be inline-ignored
+    with a justification.
+``PC-AST-KEYREUSE``
+    The same PRNG key variable consumed by two ``jax.random.*`` draws
+    in one function scope without an intervening ``split``/``fold_in``
+    or reassignment: the draws are perfectly correlated.
+``PC-AST-NONDET``
+    ``time.*``, stdlib ``random.*`` or legacy global-state
+    ``np.random.*`` calls inside a NESTED function.  In this codebase
+    nested functions are the traced cores (closures built by
+    ``_build_core*``); a host clock or global RNG inside one either
+    bakes a trace-time value into the executable or desyncs under
+    ``vmap``.  Module-level functions (timers around compiles, CLI
+    mains) are exempt by construction.
+
+Findings carry file:line + rule id + fix hint and honour inline
+``# plancheck: ignore[RULE]`` comments (:mod:`.findings`).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.plancheck.findings import (Finding, apply_inline,
+                                               finding)
+
+#: modules (src/repro-relative) allowed to build jit/vmap executables
+BLESSED_JIT_MODULES: Set[str] = {
+    "core/campaign.py", "core/simulate.py", "core/baselines.py",
+}
+#: whole subtrees allowed to jit (kernels, launch entry points, the
+#: sharding wrappers they compose with)
+BLESSED_JIT_PREFIXES: Tuple[str, ...] = ("kernels/", "launch/",
+                                         "sharding/")
+
+#: the module that DEFINES the metrics is exempt from PC-AST-LOOPMETRIC
+METRIC_DEF_MODULES: Set[str] = {"training/metrics.py"}
+
+#: scalar per-scenario metrics that must not run in Python loops
+LOOP_METRIC_NAMES: Set[str] = {"auroc", "roc_curve"}
+
+#: jax.random consumers that legitimately take an unsplit key
+PRNG_NONCONSUMERS: Set[str] = {"split", "fold_in", "PRNGKey", "key",
+                               "wrap_key_data", "key_data", "clone",
+                               "key_impl"}
+
+#: legacy numpy global-RNG entry points (Generator methods are fine)
+NP_RANDOM_LEGACY: Set[str] = {"rand", "randn", "random", "seed",
+                              "randint", "choice", "shuffle",
+                              "permutation", "uniform", "normal",
+                              "random_sample"}
+
+
+class _Imports(ast.NodeVisitor):
+    """Module-alias table: local name -> dotted module it refers to."""
+
+    def __init__(self):
+        self.modules: Dict[str, str] = {}
+        self.names: Dict[str, str] = {}      # from-imports: name -> fqn
+
+    def visit_Import(self, node):
+        for a in node.names:
+            self.modules[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+            if a.asname and "." in a.name:
+                self.modules[a.asname] = a.name
+
+    def visit_ImportFrom(self, node):
+        if node.module is None or node.level:
+            return
+        for a in node.names:
+            fqn = f"{node.module}.{a.name}"
+            self.names[a.asname or a.name] = fqn
+            # `from jax import random` makes `random` a module alias
+            self.modules.setdefault(a.asname or a.name, fqn)
+
+
+def _resolve(node: ast.AST, imp: _Imports) -> Optional[str]:
+    """Dotted name of an expression, import-aware: Name('jnp') ->
+    'jax.numpy', Attribute(jax, 'jit') -> 'jax.jit'."""
+    if isinstance(node, ast.Name):
+        if node.id in imp.names:
+            return imp.names[node.id]
+        return imp.modules.get(node.id, node.id)
+    if isinstance(node, ast.Attribute):
+        base = _resolve(node.value, imp)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _call_name(node: ast.Call, imp: _Imports) -> Optional[str]:
+    return _resolve(node.func, imp)
+
+
+# ---------------------------------------------------------------------------
+# per-file checker
+# ---------------------------------------------------------------------------
+def _jit_blessed(relpath: str) -> bool:
+    return (relpath in BLESSED_JIT_MODULES
+            or relpath.startswith(BLESSED_JIT_PREFIXES))
+
+
+def check_source(source: str, relpath: str,
+                 apply_suppressions: bool = True
+                 ) -> Tuple[List[Finding], List[Finding]]:
+    """(findings, inline-suppressed findings) of one module."""
+    tree = ast.parse(source, filename=relpath)
+    imp = _Imports()
+    imp.visit(tree)
+    out: List[Finding] = []
+
+    out += _check_jit(tree, imp, relpath)
+    if relpath not in METRIC_DEF_MODULES:
+        out += _check_loop_metrics(tree, imp, relpath)
+    out += _check_nondet(tree, imp, relpath)
+    out += _check_key_reuse(tree, imp, relpath)
+
+    out.sort(key=lambda f: (f.line, f.rule))
+    if not apply_suppressions:
+        return out, []
+    return apply_inline(out, source)
+
+
+def _check_jit(tree, imp, relpath) -> List[Finding]:
+    if _jit_blessed(relpath):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        name = None
+        if isinstance(node, ast.Attribute):
+            name = _resolve(node, imp)
+        elif isinstance(node, ast.Name):
+            name = imp.names.get(node.id)
+        if name in ("jax.jit", "jax.vmap", "jax.pmap"):
+            out.append(finding(
+                "PC-AST-JIT", relpath, node.lineno,
+                f"{name} referenced outside the blessed executable-"
+                f"builder modules",
+                hint="route executables through repro.core.campaign's "
+                     "cached builders (or add the module to "
+                     "plancheck.astpass.BLESSED_JIT_MODULES with a "
+                     "review)",
+                tag=f"L{node.lineno}:{name}"))
+    return out
+
+
+def _check_loop_metrics(tree, imp, relpath) -> List[Finding]:
+    out = []
+    loops = (ast.For, ast.While, ast.ListComp, ast.SetComp,
+             ast.DictComp, ast.GeneratorExp)
+
+    def walk(node, in_loop):
+        for child in ast.iter_child_nodes(node):
+            child_in_loop = in_loop or isinstance(child, loops)
+            if isinstance(child, ast.Call) and child_in_loop:
+                name = _call_name(child, imp) or ""
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in LOOP_METRIC_NAMES:
+                    out.append(finding(
+                        "PC-AST-LOOPMETRIC", relpath, child.lineno,
+                        f"scalar metric '{leaf}' called inside a "
+                        f"Python loop",
+                        hint="stack the scores and make ONE "
+                             "auroc_batch call over the batch axis "
+                             "(repro.training.metrics)",
+                        tag=f"L{child.lineno}:{leaf}"))
+            walk(child, child_in_loop)
+
+    walk(tree, False)
+    return out
+
+
+def _check_nondet(tree, imp, relpath) -> List[Finding]:
+    out = []
+
+    def fn_depth_walk(node, depth):
+        for child in ast.iter_child_nodes(node):
+            d = depth + isinstance(child, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))
+            if isinstance(child, ast.Call) and depth >= 2:
+                name = _call_name(child, imp) or ""
+                bad = None
+                if (name.startswith("time.")
+                        and imp.modules.get("time") == "time"):
+                    bad = name
+                elif (name.startswith("random.")
+                        and imp.modules.get("random") == "random"):
+                    bad = name
+                elif (name.startswith("numpy.random.")
+                        and name.rsplit(".", 1)[-1] in NP_RANDOM_LEGACY):
+                    bad = name
+                if bad:
+                    out.append(finding(
+                        "PC-AST-NONDET", relpath, child.lineno,
+                        f"nondeterministic host call {bad}() inside a "
+                        f"nested function (the traced-core position)",
+                        hint="thread explicit seeds/keys through the "
+                             "core's arguments; host clocks and global "
+                             "RNGs must stay at module-function level",
+                        tag=f"L{child.lineno}:{bad}"))
+            fn_depth_walk(child, d)
+
+    fn_depth_walk(tree, 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PRNG key reuse (sequential dataflow per function scope)
+# ---------------------------------------------------------------------------
+def _prng_consumer(call: ast.Call, imp: _Imports) -> Optional[str]:
+    """jax.random function name if ``call`` is a key CONSUMER."""
+    name = _call_name(call, imp)
+    if not name:
+        return None
+    parts = name.split(".")
+    if len(parts) < 2 or parts[-2] != "random":
+        return None
+    root = imp.modules.get(parts[0], parts[0])
+    if not (name.startswith("jax.random.") or root.startswith("jax")):
+        return None
+    fn = parts[-1]
+    return None if fn in PRNG_NONCONSUMERS else fn
+
+
+def _key_args(call: ast.Call) -> List[ast.Name]:
+    names = []
+    if call.args and isinstance(call.args[0], ast.Name):
+        names.append(call.args[0])
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            names.append(kw.value)
+    return names
+
+
+def _assigned_names(target) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+def _walk_same_scope(node):
+    """Source-ordered depth-first walk that does NOT descend into
+    nested function / lambda scopes (each gets its own scan)."""
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield from _walk_same_scope(child)
+
+
+def _check_key_reuse(tree, imp, relpath) -> List[Finding]:
+    out = []
+
+    def flag_consumers(node, consumed):
+        for sub in _walk_same_scope(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn_name = _prng_consumer(sub, imp)
+            if fn_name is None:
+                continue
+            for key in _key_args(sub):
+                if key.id in consumed:
+                    line0, fn0 = consumed[key.id]
+                    out.append(finding(
+                        "PC-AST-KEYREUSE", relpath, sub.lineno,
+                        f"PRNG key '{key.id}' consumed by "
+                        f"jax.random.{fn_name} was already consumed "
+                        f"by jax.random.{fn0} at line {line0} with "
+                        f"no split/fold_in between",
+                        hint="split the key (k1, k2 = "
+                             "jax.random.split(key)) and give each "
+                             "draw its own stream",
+                        tag=f"L{sub.lineno}:{key.id}"))
+                else:
+                    consumed[key.id] = (sub.lineno, fn_name)
+
+    def scan_block(stmts, consumed):
+        # consumed: key name -> (line, fn) of its first consuming draw
+        for stmt in stmts:
+            if isinstance(stmt, ast.If):
+                flag_consumers(stmt.test, consumed)
+                before = dict(consumed)
+                scan_block(stmt.body, consumed)
+                other = dict(before)
+                scan_block(stmt.orelse, other)
+                consumed.update(other)
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                flag_consumers(stmt.iter, consumed)
+                for name in _assigned_names(stmt.target):
+                    consumed.pop(name, None)
+                scan_block(stmt.body, consumed)
+                scan_block(stmt.orelse, consumed)
+                continue
+            if isinstance(stmt, ast.While):
+                flag_consumers(stmt.test, consumed)
+                scan_block(stmt.body, consumed)
+                scan_block(stmt.orelse, consumed)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    flag_consumers(item.context_expr, consumed)
+                scan_block(stmt.body, consumed)
+                continue
+            if isinstance(stmt, ast.Try):
+                scan_block(stmt.body, consumed)
+                for handler in stmt.handlers:
+                    scan_block(handler.body, consumed)
+                scan_block(stmt.orelse, consumed)
+                scan_block(stmt.finalbody, consumed)
+                continue
+            flag_consumers(stmt, consumed)
+            if isinstance(stmt, (ast.Assign, ast.AugAssign,
+                                 ast.AnnAssign)):
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for t in targets:
+                    for name in _assigned_names(t):
+                        consumed.pop(name, None)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_block(node.body, {})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# repo driver
+# ---------------------------------------------------------------------------
+def check_repo(src_root: str,
+               rel_prefix: str = "") -> Tuple[List[Finding],
+                                              List[Finding]]:
+    """Run the AST pass over every ``*.py`` under ``src_root``;
+    returns (findings, inline-suppressed).  ``rel_prefix`` prepends to
+    reported paths (e.g. ``src/repro/``)."""
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as f:
+                source = f.read()
+            kept, silenced = check_source(source, rel)
+            prefix = rel_prefix
+            if prefix:
+                kept = [finding(f.rule, prefix + f.file, f.line,
+                                f.message, f.hint, f.tag)
+                        for f in kept]
+                silenced = [finding(f.rule, prefix + f.file, f.line,
+                                    f.message, f.hint, f.tag)
+                            for f in silenced]
+            findings.extend(kept)
+            suppressed.extend(silenced)
+    return findings, suppressed

@@ -1,0 +1,129 @@
+"""Named jaxpr-size budgets for the engine's traced cores.
+
+The repo has carried one such guard informally since PR 3:
+``failure.trace_alive_mask`` must lower to a FIXED handful of ops
+whatever ``max_events`` is (the unrolled fold it replaced emitted O(M)
+``where``s, which blew up compile time on sampled grids where
+M = 2 * num_devices).  That invariant used to live as ad-hoc arithmetic
+inside ``tests/test_failure_trace.py``; this module is its promotion to
+a shared, named contract:
+
+* :data:`BUDGETS` names every guarded core and its equation ceiling;
+* :func:`eqn_count` / :func:`count_jaxpr` measure a traced callable /
+  lowered jaxpr (recursively — scan/cond/jit bodies count, so a budget
+  bounds the WHOLE program, not just the top level);
+* :func:`check_budget` turns a breach into a plancheck
+  :class:`~repro.analysis.plancheck.findings.Finding`;
+* :func:`constant_across` pins the O(1)-in-knob property itself (equal
+  counts across a sweep of the knob, e.g. ``max_events``).
+
+The jaxpr analysis pass applies the ``campaign_core_*`` budgets to
+every dispatch bucket of an :class:`repro.core.experiment.ExecutionPlan`
+(rule ``PC-JAX-BUDGET``), and ``tests/test_plancheck.py`` applies them
+directly to the simulator's cached core and the fused campaign core.
+
+Budget values are ceilings with ~2x headroom over the measured counts
+at the time they were set — they exist to catch the *class* of
+regression where a graph starts scaling with a knob that used to be
+shape-only (an unrolled Python fold, a per-slot ``where`` chain), not
+to pin exact op counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Optional, Sequence
+
+import jax
+
+from repro.analysis.plancheck.findings import Finding, finding
+
+
+@dataclass(frozen=True)
+class Budget:
+    """One named ceiling on a traced core's recursive equation count."""
+    name: str
+    max_eqns: int
+    note: str = ""
+
+
+#: the named per-core budgets (recursive equation counts, 2x headroom)
+BUDGETS: Dict[str, Budget] = {
+    b.name: b for b in (
+        Budget("trace_alive_mask", 30,
+               "O(1) in max_events: one reversed argmax, never a "
+               "per-slot where chain (PR 3 regression class; measured "
+               "19 recursive eqns)"),
+        Budget("campaign_core_single", 1400,
+               "static-topology single-model scenario core, whole scan "
+               "body included (measured 669 / 727 with track_iso)"),
+        Budget("campaign_core_single_fused", 1400,
+               "padded-topology fused single-model core, track_iso "
+               "either way (measured 650 / 709 with track_iso)"),
+        Budget("campaign_core_multi", 1500,
+               "multi-model baseline core (kmeans init + assignment "
+               "scan; measured 757)"),
+    )
+}
+
+
+def count_jaxpr(jaxpr) -> int:
+    """Recursive equation count of a (Closed)Jaxpr: every sub-jaxpr
+    reachable through eqn params (scan/while/cond bodies, inner jits)
+    contributes, so the count bounds the whole lowered program."""
+    if hasattr(jaxpr, "jaxpr"):         # ClosedJaxpr -> Jaxpr
+        jaxpr = jaxpr.jaxpr
+    total = 0
+    for eqn in jaxpr.eqns:
+        total += 1
+        for sub in subjaxprs(eqn):
+            total += count_jaxpr(sub)
+    return total
+
+
+def subjaxprs(eqn) -> Iterable[object]:
+    """Every jaxpr nested in one equation's params (duck-typed so no
+    private jax.core imports are needed)."""
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                yield x
+
+
+def eqn_count(fn: Callable, *args, **kwargs) -> int:
+    """Recursive equation count of ``fn`` traced at ``args`` (abstract
+    values or concrete arrays — nothing executes)."""
+    return count_jaxpr(jax.make_jaxpr(fn, **kwargs)(*args))
+
+
+def check_budget(name: str, count: int, where: str = "",
+                 file: str = "", line: int = 0) -> Optional[Finding]:
+    """None when ``count`` fits the named budget, else a
+    ``PC-JAX-BUDGET`` finding."""
+    budget = BUDGETS[name]
+    if count <= budget.max_eqns:
+        return None
+    loc = where or name
+    return finding(
+        "PC-JAX-BUDGET", file or loc, line,
+        f"{loc}: {count} equations > budget {budget.max_eqns} "
+        f"({budget.name})",
+        hint=(budget.note or "find the knob the graph started scaling "
+              "with and move it into array shapes"),
+        tag=name)
+
+
+def constant_across(make_count: Callable[[int], int],
+                    values: Sequence[int]) -> bool:
+    """True iff the count is identical across every knob value — the
+    O(1)-in-knob property (``make_count(v)`` measures at knob v)."""
+    counts = {make_count(v) for v in values}
+    return len(counts) == 1
+
+
+def bucket_budget_name(kind: str, fused: bool) -> str:
+    """The budget governing one experiment dispatch bucket."""
+    if kind == "multi":
+        return "campaign_core_multi"
+    return ("campaign_core_single_fused" if fused
+            else "campaign_core_single")

@@ -1,0 +1,173 @@
+"""Static completeness check of the executable-cache key.
+
+PR 6 fixed, by hand, a class of production bug this module makes a lint
+error: a knob that changes the lowered program but not
+``campaign._exe_key`` silently aliases two DIFFERENT programs to one
+cache entry (or, on the AOT path, serialises the wrong executable).
+The check is structural, so it fires the moment someone ADDS such a
+knob — before any campaign runs:
+
+* ``SimConfig`` / ``MultiModelConfig`` / ``AutoencoderConfig`` enter
+  the key as whole frozen dataclasses, so every field they ever grow is
+  covered BY CONSTRUCTION — the check verifies that containment
+  property (frozen + eq + hash) rather than enumerating fields.
+* ``ExecPlan`` / ``BucketPlan`` fields do NOT ride along wholesale;
+  each field must either map onto a key component
+  (:data:`KEY_COMPONENTS`) via :data:`FIELD_COVERAGE`, or appear in the
+  allowlist with a reason (shape-only / bookkeeping knobs).  A new
+  field in either dataclass that is in neither place is a ``PC-KEY``
+  finding.
+* ``_exe_key`` and ``_build_executable`` must agree on their parameter
+  list (the key must span exactly the builder's degrees of freedom);
+  a parameter added to the builder but not the key — or vice versa —
+  is a ``PC-KEY`` finding.
+
+``tests/test_plancheck.py`` runs the same classification as a
+generated test (one case per field), so the contract is enforced both
+statically (this pass, in CI via ``python -m repro.analysis.plancheck``)
+and at test time — the runtime twin the issue asks for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.plancheck.findings import Finding, finding
+
+#: the canonical key components (campaign._exe_key's parameters)
+KEY_COMPONENTS: Tuple[str, ...] = ("kind", "ae_cfg", "cfg", "k_pad",
+                                   "ndev", "track_iso", "fused")
+
+#: program-changing fields -> the key component that carries them
+FIELD_COVERAGE: Dict[Tuple[str, str], str] = {
+    ("ExecPlan", "shard"): "ndev",      # resolved_devices() -> ndev
+    ("ExecPlan", "devices"): "ndev",
+    ("BucketPlan", "kind"): "kind",
+    ("BucketPlan", "fused"): "fused",
+    ("BucketPlan", "track_iso"): "track_iso",
+    ("BucketPlan", "k_pad"): "k_pad",
+    ("BucketPlan", "key_cfg"): "cfg",
+    ("BucketPlan", "m_pad"): "cfg",     # folded into cfg.num_models by
+    #                                     experiment._bucket_exe_args
+    ("BucketPlan", "devices"): "ndev",
+}
+
+#: fields that deliberately stay OUT of the key, each with its reason
+#: (the "explicitly allowlisted with a comment" contract)
+ALLOWLIST: Dict[Tuple[str, str], str] = {
+    ("ExecPlan", "chunk_size"):
+        "shape-only: chunking changes batch SHAPES, not the program; "
+        "the jit path retraces per shape inside one entry and the AOT "
+        "key extends with the abstract-argument signature "
+        "(_avals_signature)",
+    ("ExecPlan", "aot"):
+        "path-only: AOT lowers THROUGH the same lru-cached jitted "
+        "executable, so the program is identical by construction "
+        "(pinned by tests/test_aot.py)",
+    ("BucketPlan", "index"): "bookkeeping: dispatch order only",
+    ("BucketPlan", "cell_indices"):
+        "bookkeeping: which cells ride the bucket; their program-"
+        "relevant content is normalised into key_cfg / k_pad / m_pad",
+    ("BucketPlan", "num_scenarios"):
+        "shape-only: batch length, covered by the aval signature",
+    ("BucketPlan", "chunk"):
+        "shape-only: per-dispatch batch length, covered by the aval "
+        "signature",
+    ("BucketPlan", "num_chunks"): "shape-only: host-side loop count",
+    ("BucketPlan", "padded_scenarios"):
+        "shape-only: padded batch length, covered by the aval "
+        "signature",
+}
+
+
+def _field_findings(cls, file: str,
+                    extra_fields: Sequence[str] = ()) -> List[Finding]:
+    """Classify every field of ``cls``: covered, allowlisted, or a
+    PC-KEY finding.  ``extra_fields`` lets tests simulate a knob being
+    added without editing the dataclass."""
+    out: List[Finding] = []
+    names = [f.name for f in dataclasses.fields(cls)]
+    names += list(extra_fields)
+    for name in names:
+        slot = (cls.__name__, name)
+        if slot in FIELD_COVERAGE:
+            assert FIELD_COVERAGE[slot] in KEY_COMPONENTS, slot
+            continue
+        if slot in ALLOWLIST:
+            continue
+        out.append(finding(
+            "PC-KEY", file, 0,
+            f"{cls.__name__}.{name} is not mapped to an executable-"
+            f"cache key component and not allowlisted: if it changes "
+            f"the lowered program, two configurations will share one "
+            f"cache entry (the PR-6 bug class)",
+            hint=("either thread it into campaign._exe_key (and "
+                  "FIELD_COVERAGE) or add it to "
+                  "plancheck.cachekey.ALLOWLIST with a reason"),
+            tag=f"{cls.__name__}.{name}"))
+    return out
+
+
+def classify_field(cls_name: str, field_name: str) -> Optional[str]:
+    """'covered' | 'allowlisted' | None (= unaccounted) — the single
+    source of truth the generated test enumerates."""
+    slot = (cls_name, field_name)
+    if slot in FIELD_COVERAGE:
+        return "covered"
+    if slot in ALLOWLIST:
+        return "allowlisted"
+    return None
+
+
+def check_cache_keys(extra_execplan_fields: Sequence[str] = (),
+                     extra_bucket_fields: Sequence[str] = ()
+                     ) -> List[Finding]:
+    """The full PC-KEY pass (see the module docstring)."""
+    from repro.core import campaign as _c
+    from repro.core.experiment import BucketPlan
+
+    out: List[Finding] = []
+    key_params = tuple(inspect.signature(_c._exe_key).parameters)
+    build_params = tuple(
+        inspect.signature(_c._build_executable.__wrapped__).parameters)
+    if key_params != KEY_COMPONENTS:
+        out.append(finding(
+            "PC-KEY", "repro/core/campaign.py", 0,
+            f"campaign._exe_key parameters {key_params} drifted from "
+            f"the declared KEY_COMPONENTS {KEY_COMPONENTS}",
+            hint="update plancheck.cachekey.KEY_COMPONENTS and classify "
+                 "the new component's feeding fields",
+            tag="_exe_key.signature"))
+    if build_params != key_params:
+        out.append(finding(
+            "PC-KEY", "repro/core/campaign.py", 0,
+            f"campaign._build_executable parameters {build_params} != "
+            f"_exe_key parameters {key_params}: a builder degree of "
+            f"freedom is outside the cache key",
+            hint="every _build_executable parameter must be produced "
+                 "by _exe_key",
+            tag="_build_executable.signature"))
+
+    # containment property: whole-dataclass key components must be
+    # frozen + hashable, or lru_cache would reject them and ad-hoc
+    # per-field keys (the incomplete kind) would creep back in
+    from repro.configs.autoencoder_paper import AutoencoderConfig
+    from repro.core.baselines import MultiModelConfig
+    from repro.core.simulate import SimConfig
+    for cls in (SimConfig, MultiModelConfig, AutoencoderConfig):
+        params = getattr(cls, "__dataclass_params__", None)
+        if params is None or not params.frozen or not params.eq:
+            out.append(finding(
+                "PC-KEY", f"{cls.__module__}", 0,
+                f"{cls.__name__} must stay a frozen eq dataclass: it "
+                f"enters the executable cache key wholesale, which is "
+                f"what makes every future field covered by "
+                f"construction",
+                tag=f"{cls.__name__}.containment"))
+
+    out += _field_findings(_c.ExecPlan, "repro/core/campaign.py",
+                           extra_execplan_fields)
+    out += _field_findings(BucketPlan, "repro/core/experiment.py",
+                           extra_bucket_fields)
+    return out

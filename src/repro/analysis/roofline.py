@@ -17,7 +17,6 @@ Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from dataclasses import dataclass
 from typing import Dict, Optional

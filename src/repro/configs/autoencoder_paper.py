@@ -5,7 +5,7 @@ code vector length 32, ReLU hidden activations, linear output, dropout 0.2.
 Trained to minimise reconstruction error ||x - x_hat||^2; the reconstruction
 error is the anomaly score.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

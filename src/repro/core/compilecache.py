@@ -248,7 +248,16 @@ def xla_compile_stats() -> Dict[str, int]:
     return c
 
 
-def reset_stats() -> None:
+def reset_xla_compile_stats() -> None:
+    """Zero every counter behind :func:`xla_compile_stats`, opening a
+    fresh observation window IN-PROCESS.  Analyzer runs and tests use
+    this to assert zero-recompile windows (``misses == 0`` across a
+    warm replay) without shelling out to a subprocess; pair with
+    ``campaign.TRACE_COUNT`` deltas for the trace side."""
     with _lock:
         for k in _counts:
             _counts[k] = 0
+
+
+#: legacy name (pre-plancheck); same window reset
+reset_stats = reset_xla_compile_stats

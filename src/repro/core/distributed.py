@@ -20,16 +20,13 @@ step; weights follow the paper's head-failure semantics
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from repro.configs.base import (MeshConfig, ModelConfig, OptimizerConfig,
-                                TolFLConfig)
+from repro.configs.base import ModelConfig, OptimizerConfig, TolFLConfig
 from repro.core import aggregation as agg
 from repro.core.failure import effective_weights
 from repro.core.topology import Topology

@@ -327,6 +327,8 @@ class ExecutionPlan:
     spec: ExperimentSpec
     cells: List[CellPlan]
     buckets: List[BucketPlan]
+    #: cached plancheck report (populated by static_report / check=True)
+    report: Optional[object] = None
 
     @property
     def num_scenarios(self) -> int:
@@ -342,6 +344,18 @@ class ExecutionPlan:
                 return c
         raise KeyError(key)
 
+    def static_report(self, budgets: bool = True):
+        """Run the plan-time static analyzer (plancheck pass 1) over
+        every bucket and cache the :class:`~repro.analysis.plancheck.
+        findings.Report`.  Lowers (traces) each bucket exactly like a
+        first compile would — zero execution, and the trace is shared
+        with a later :func:`execute` of the same plan."""
+        if self.report is None:
+            from repro.analysis.plancheck import Report, check_plan
+            self.report = Report(findings=check_plan(
+                self, budgets=budgets))
+        return self.report
+
     def describe(self) -> str:
         seeds = self.spec.seeds.seeds
         lines = [f"ExperimentPlan: {len(self.cells)} cells x "
@@ -351,6 +365,12 @@ class ExecutionPlan:
             lines.append(f"  cell {c.index} {c.key}: {len(c.traces)} "
                          f"traces, {c.num_scenarios} scenarios")
         lines.extend("  " + b.describe() for b in self.buckets)
+        if self.report is not None:
+            status = ("clean" if self.report.clean else
+                      f"{len(self.report.findings)} finding(s)")
+            lines.append(f"  static analysis: {status}")
+            lines.extend("    " + f.describe().replace("\n", "\n    ")
+                         for f in self.report.findings)
         return "\n".join(lines)
 
 
@@ -423,12 +443,18 @@ def _geometry(bucket: BucketPlan, exec_plan: Optional[ExecPlan]) -> None:
     bucket.padded_scenarios = bucket.num_chunks * chunk
 
 
-def plan(spec: ExperimentSpec) -> ExecutionPlan:
+def plan(spec: ExperimentSpec, check: bool = False) -> ExecutionPlan:
     """Lower a spec to dispatch buckets — pure host-side work.
 
     Raises ``ValueError`` up front for empty grids, unknown schemes and
     invalid :class:`ExecPlan` values (the legacy paths failed deep
-    inside ``_run_batched``)."""
+    inside ``_run_batched``).
+
+    ``check=True`` additionally runs the plan-time static analyzer
+    (:mod:`repro.analysis.plancheck`) over every bucket — this traces
+    each bucket's executable (no execution; the trace is shared with a
+    later compile) and attaches the report, which ``describe()`` then
+    renders as a per-bucket static-analysis section."""
     if not spec.cells:
         raise ValueError("empty experiment: need >= 1 cell")
     if len(spec.seeds.seeds) == 0:
@@ -521,7 +547,10 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                        cell_indices=[c.index],
                        key_cfg=dataclasses.replace(c.cfg, seed=0)))
 
-    return ExecutionPlan(spec=spec, cells=cells, buckets=buckets)
+    out = ExecutionPlan(spec=spec, cells=cells, buckets=buckets)
+    if check:
+        out.static_report()
+    return out
 
 
 # ---------------------------------------------------------------------------

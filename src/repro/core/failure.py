@@ -284,10 +284,11 @@ def trace_alive_mask(trace: FailureTrace, num_devices: int, epoch: jax.Array
     Events are epoch-sorted (stably), so each device's state is the
     ``alive_after`` of the HIGHEST-indexed fired slot targeting it —
     found with one reversed argmax over the slot axis.  The graph is a
-    fixed handful of ops regardless of ``max_events`` (a guarded
-    invariant: ``tests/test_failure_trace.py`` pins the jaxpr size);
-    the previous per-slot Python fold emitted O(M) ``where``s, which
-    blew up compile time on sampled grids where M = 2 * num_devices."""
+    fixed handful of ops regardless of ``max_events`` — a named budget
+    (``"trace_alive_mask"`` in ``repro.analysis.plancheck.budgets``)
+    pinned by ``tests/test_failure_trace.py``; the previous per-slot
+    Python fold emitted O(M) ``where``s, which blew up compile time on
+    sampled grids where M = 2 * num_devices."""
     fired = ((epoch >= trace.epochs)[:, None]              # (M, N)
              & (trace.devices[:, None]
                 == jnp.arange(num_devices)[None, :]))

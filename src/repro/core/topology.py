@@ -10,7 +10,7 @@ ring — shared by the mesh engine and the paper-scale simulator.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -14,7 +14,6 @@ from typing import Dict, Iterator, Optional
 import jax
 import numpy as np
 
-from repro.configs.base import InputShape, ModelConfig
 from repro.sharding import logical as L
 
 

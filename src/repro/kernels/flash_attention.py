@@ -80,7 +80,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(kj == num_kv_blocks - 1)
     def _finalize():
-        l = l_scr[...]
+        l = l_scr[...]  # noqa: E741 -- canonical FA accumulator name
         o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[..., None]
                     ).astype(o_ref.dtype)
 

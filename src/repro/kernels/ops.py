@@ -13,7 +13,6 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref

@@ -19,21 +19,18 @@ Usage:
         [--schedule ring|psum|auto] [--out results/dryrun]
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis import costmodel as CM
 from repro.analysis.roofline import Roofline as R_Roofline
 from repro.analysis.roofline import build_roofline, model_flops_for
 from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, OptimizerConfig, \
     TolFLConfig
-from repro.configs.base import AUDIO, VLM
 from repro.core import distributed as D
 from repro.launch import specs as SP
 from repro.launch.mesh import make_production_mesh

@@ -9,16 +9,14 @@ shape instead of raw audio/pixels.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.configs.base import (InputShape, ModelConfig, OptimizerConfig,
-                                TolFLConfig)
+from repro.configs.base import InputShape, ModelConfig, OptimizerConfig
 from repro.core import distributed as D
-from repro.models.transformer import padded_vocab
 from repro.serving.decode import cache_logical_axes, cache_shape
 from repro.sharding import logical as L
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, INPUT_SHAPES, OptimizerConfig, TolFLConfig
+from repro.configs import ARCHS, OptimizerConfig, TolFLConfig
 from repro.core import distributed as D
 from repro.core.failure import FailureSpec, NO_FAILURE, alive_mask
 from repro.core.topology import Topology

@@ -12,7 +12,6 @@ long-context dense variant), or full (whisper encoder & cross-attention).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -218,7 +217,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                     jnp.max(s_n, axis=-1, keepdims=True))
     p_c = jnp.exp(s_c - m)
     p_n = jnp.exp(s_n - m)
-    l = jnp.sum(p_c, axis=-1, keepdims=True) + jnp.sum(p_n, axis=-1, keepdims=True)
+    l = jnp.sum(p_c, axis=-1, keepdims=True) + jnp.sum(  # noqa: E741
+        p_n, axis=-1, keepdims=True)
     o = (jnp.einsum("bhgk,bkhd->bhgd", p_c.astype(v_cache.dtype), v_cache,
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bhgk,bkhd->bhgd", p_n.astype(v_new.dtype), v_new,

@@ -4,7 +4,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import params as P
 from repro.sharding import logical as L

@@ -7,8 +7,6 @@ shards like the params do.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

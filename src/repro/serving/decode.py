@@ -7,7 +7,6 @@ or O(1) recurrent state (ssm / hybrid).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -21,9 +20,9 @@ from repro.models import rglru as G
 from repro.models import rwkv6 as R
 from repro.models.mlp import mlp_apply
 from repro.models.moe import moe_apply
-from repro.models.transformer import (embed_tokens, logits_fn, padded_vocab,
-                                      sinusoidal_positions, unit_counts,
-                                      unit_pattern)
+from repro.models.transformer import (embed_tokens, logits_fn,
+                                      sinusoidal_positions,
+                                      unit_counts, unit_pattern)
 from repro.sharding import logical as L
 
 

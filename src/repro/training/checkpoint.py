@@ -6,7 +6,6 @@ state + step, atomically (tmp + rename), with a keep-last-k policy.
 from __future__ import annotations
 
 import os
-import shutil
 from typing import Any, Optional, Tuple
 
 import jax

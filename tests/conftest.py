@@ -7,7 +7,6 @@ themselves (tests/test_distributed.py).
 """
 import os
 
-import numpy as np
 import pytest
 
 from repro.configs.autoencoder_paper import AutoencoderConfig

@@ -8,7 +8,6 @@ property-test exactly that.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import aggregation as agg

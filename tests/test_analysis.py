@@ -1,10 +1,9 @@
 """Roofline / cost-model analysis layer tests."""
-import numpy as np
 import pytest
 
 from repro.analysis import costmodel as CM
-from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
-                                     build_roofline, collective_bytes,
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     Roofline, collective_bytes,
                                      model_flops_for)
 from repro.configs import ARCHS, INPUT_SHAPES
 

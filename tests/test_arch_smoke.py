@@ -5,7 +5,6 @@ of the same family (2 layers, d_model<=512, <=4 experts) and run one
 forward/train step on CPU asserting output shapes + no NaNs.  Decode and
 prefill are exercised per family as well.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ and effective weights), and the derived per-device weights always
 normalise to 1 over the surviving clusters or vanish entirely when
 every head is dead.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -172,16 +171,21 @@ def test_trace_alive_mask_tie_break_matches_unrolled():
 def test_trace_alive_mask_graph_size_constant_in_max_events():
     """Compile-size regression guard: the traced graph must be O(1) in
     max_events (the unrolled fold was O(M) `where`s, which blew up
-    compile time at sample_rate_grid's default M = 2 * num_devices)."""
+    compile time at sample_rate_grid's default M = 2 * num_devices).
+    The guard is the shared named budget in plancheck.budgets."""
+    from repro.analysis.plancheck import budgets
+
     def n_eqns(fn, m):
         trace = FailureTrace.none(m)
-        jaxpr = jax.make_jaxpr(lambda e: fn(trace, 16, e))(jnp.int32(0))
-        return len(jaxpr.jaxpr.eqns)
+        return budgets.eqn_count(lambda e: fn(trace, 16, e),
+                                 jnp.int32(0))
 
-    small = n_eqns(trace_alive_mask, 8)
-    big = n_eqns(trace_alive_mask, 64)
-    assert big == small, (small, big)       # slot count never shows up
-    assert big < 30, big                    # a fixed handful of ops
+    # the O(1)-in-knob property itself, across a max_events sweep
+    assert budgets.constant_across(
+        lambda m: n_eqns(trace_alive_mask, m), (4, 8, 64))
+    # and the named ceiling: a breach is a PC-JAX-BUDGET finding
+    count = n_eqns(trace_alive_mask, 64)
+    assert budgets.check_budget("trace_alive_mask", count) is None, count
     assert n_eqns(_trace_alive_mask_unrolled, 64) > 3 * 64
 
 

@@ -1,5 +1,4 @@
 """Model-component unit tests: blocked attention, RoPE, xent, MoE routing."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+from repro.configs.base import ModelConfig, MoEConfig
 from repro.models import attention as A
 from repro.models import params as P
 from repro.models.moe import _capacity, _dispatch_mask, moe_apply, moe_init

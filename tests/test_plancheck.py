@@ -1,0 +1,370 @@
+"""plancheck: one planted violation per rule, plus repo-clean runs.
+
+The battery seeds exactly the defect each rule exists to catch —
+a weak-typed scalar leak, a dataset captured by value, a host callback
+in a core, an oversized jaxpr, a knob missing from ``_exe_key``, a
+reused PRNG key, a stray ``jax.jit`` — and asserts the analyzer flags
+it with the RIGHT rule id (and nothing else).  The repo itself must
+come out clean: the AST pass over ``src/repro``, the cache-key
+contract, and the jaxpr pass over a real ``ExecutionPlan`` covering
+every executable kind.
+"""
+import dataclasses
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import plancheck
+from repro.analysis.plancheck import budgets as pc_budgets
+from repro.analysis.plancheck import cachekey as pc_cachekey
+from repro.analysis.plancheck.findings import (apply_inline, finding,
+                                               inline_suppressions)
+from repro.api import (CellSpec, DataSpec, ExperimentSpec, SeedSpec,
+                       SimConfig, TraceSpec, plan)
+from repro.core import campaign, compilecache
+from repro.core.experiment import BucketPlan
+from repro.core.failure import sample_traces
+
+SRC_REPRO = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                         "repro")
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# findings / suppression layer
+# ---------------------------------------------------------------------------
+def test_finding_requires_registered_rule():
+    with pytest.raises(AssertionError):
+        finding("PC-NOPE", "x.py", 1, "bogus")
+
+
+def test_inline_suppression_own_line_covers_next_line():
+    src = textwrap.dedent("""\
+        x = 1
+        # plancheck: ignore[PC-AST-JIT]
+        y = 2
+        z = 3  # plancheck: ignore
+    """)
+    supp = inline_suppressions(src)
+    assert supp[2] == {"PC-AST-JIT"} and supp[3] == {"PC-AST-JIT"}
+    assert supp[4] is None                     # bare ignore = all rules
+    fs = [finding("PC-AST-JIT", "m.py", 3, "a"),
+          finding("PC-AST-NONDET", "m.py", 3, "b"),
+          finding("PC-AST-KEYREUSE", "m.py", 4, "c")]
+    kept, silenced = apply_inline(fs, src)
+    assert _rules(kept) == ["PC-AST-NONDET"]
+    assert len(silenced) == 2
+
+
+def test_baseline_roundtrip_and_reason_required(tmp_path):
+    fs = [finding("PC-AST-JIT", "src/x.py", 9, "stray jit",
+                  tag="L9:jax.jit")]
+    path = tmp_path / "baseline.toml"
+    path.write_text(plancheck.format_baseline(fs, reason="legacy"))
+    entries = plancheck.load_baseline(str(path))
+    assert entries[0]["rule"] == "PC-AST-JIT"
+    kept, silenced = plancheck.apply_baseline(fs, entries)
+    assert not kept and len(silenced) == 1
+    # a suppression without a reason is itself an error
+    path.write_text('[[suppress]]\nrule = "PC-AST-JIT"\n')
+    with pytest.raises(ValueError, match="reason"):
+        plancheck.load_baseline(str(path))
+    assert plancheck.load_baseline(str(tmp_path / "missing.toml")) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 1: jaxpr analysis (one planted violation per rule)
+# ---------------------------------------------------------------------------
+def test_jaxpr_flags_retrace_hazard():
+    # a Python float operand traces as a WEAK-typed aval: the jit cache
+    # key forks per spelling of the same value
+    closed = jax.make_jaxpr(lambda x: x * 2)(3.0)
+    fs = plancheck.check_jaxpr(closed, "fixture")
+    assert _rules(fs) == ["PC-JAX-RETRACE"]
+
+
+def test_jaxpr_flags_captured_constant():
+    data = jnp.arange(128.0)                   # dataset-sized capture
+    closed = jax.make_jaxpr(
+        lambda x: jnp.dot(data, x))(jnp.zeros((128,)))
+    fs = plancheck.check_jaxpr(closed, "fixture")
+    assert _rules(fs) == ["PC-JAX-CONST"]
+
+
+def test_jaxpr_flags_host_sync():
+    def core(x):
+        jax.debug.print("x={x}", x=x)
+        return x + 1
+    closed = jax.make_jaxpr(core)(jnp.zeros((4,)))
+    fs = plancheck.check_jaxpr(closed, "fixture")
+    assert _rules(fs) == ["PC-JAX-SYNC"]
+
+
+def test_jaxpr_flags_budget_breach():
+    def bloated(x):                            # unrolled Python fold:
+        for _ in range(40):                    # the exact regression
+            x = jnp.where(x > 0, x * 2, x)     # class budgets exist for
+        return x
+    closed = jax.make_jaxpr(bloated)(jnp.zeros((4,)))
+    fs = plancheck.check_jaxpr(closed, "fixture",
+                               budget="trace_alive_mask")
+    assert "PC-JAX-BUDGET" in _rules(fs)
+    assert pc_budgets.check_budget("trace_alive_mask", 10) is None
+
+
+def test_jaxpr_clean_function_flags_nothing():
+    closed = jax.make_jaxpr(
+        lambda x, y: jnp.tanh(x) @ y)(jnp.zeros((4, 4)),
+                                      jnp.zeros((4, 4)))
+    assert plancheck.check_jaxpr(closed, "fixture") == []
+
+
+def test_jaxpr_counts_recurse_into_scan_bodies():
+    def scanned(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2 + 1, ()
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out
+    top = jax.make_jaxpr(scanned)(jnp.zeros((4,)))
+    assert pc_budgets.count_jaxpr(top) > len(top.jaxpr.eqns)
+
+
+# ---------------------------------------------------------------------------
+# PC-KEY: executable-cache key completeness
+# ---------------------------------------------------------------------------
+def test_cache_key_contract_holds_on_repo():
+    assert plancheck.check_cache_keys() == []
+
+
+def test_cache_key_flags_planted_missing_knob():
+    fs = plancheck.check_cache_keys(
+        extra_execplan_fields=["donate_args"])
+    assert _rules(fs) == ["PC-KEY"]
+    assert fs[0].tag == "ExecPlan.donate_args"
+    fs = plancheck.check_cache_keys(
+        extra_bucket_fields=["remat_policy"])
+    assert _rules(fs) == ["PC-KEY"]
+    assert fs[0].tag == "BucketPlan.remat_policy"
+
+
+# generated test: one case per live dataclass field — adding a knob to
+# either dataclass without classifying it fails HERE with its name
+@pytest.mark.parametrize(
+    "cls_name,field_name",
+    [("ExecPlan", f.name) for f in dataclasses.fields(campaign.ExecPlan)]
+    + [("BucketPlan", f.name) for f in dataclasses.fields(BucketPlan)])
+def test_every_exec_knob_is_keyed_or_allowlisted(cls_name, field_name):
+    verdict = pc_cachekey.classify_field(cls_name, field_name)
+    assert verdict in ("covered", "allowlisted"), (
+        f"{cls_name}.{field_name} is neither mapped to an _exe_key "
+        f"component (plancheck.cachekey.FIELD_COVERAGE) nor "
+        f"allowlisted with a reason (plancheck.cachekey.ALLOWLIST)")
+
+
+# ---------------------------------------------------------------------------
+# pass 2: AST lint (one planted violation per rule)
+# ---------------------------------------------------------------------------
+def _lint(src, relpath="training/somefile.py"):
+    fs, _ = plancheck.check_source(textwrap.dedent(src), relpath)
+    return fs
+
+
+def test_ast_flags_stray_jit():
+    src = """\
+        import jax
+        fast = jax.jit(lambda x: x + 1)
+    """
+    fs = _lint(src)
+    assert _rules(fs) == ["PC-AST-JIT"]
+    # the same source in a blessed builder module is fine
+    assert _lint(src, relpath="core/campaign.py") == []
+
+
+def test_ast_flags_jit_via_from_import_and_alias():
+    fs = _lint("""\
+        from jax import jit
+        import jax as j
+        a = jit(lambda x: x)
+        b = j.vmap(lambda x: x)
+    """)
+    assert _rules(fs) == ["PC-AST-JIT", "PC-AST-JIT"]
+
+
+def test_ast_flags_loop_metric():
+    fs = _lint("""\
+        from repro.training.metrics import auroc
+        def report(scores, ys):
+            return [auroc(s, ys) for s in scores]
+    """)
+    assert _rules(fs) == ["PC-AST-LOOPMETRIC"]
+    # one batched call is the fix -- and is clean
+    assert _lint("""\
+        from repro.training.metrics import auroc_batch
+        def report(scores, ys):
+            return auroc_batch(scores, ys)
+    """) == []
+
+
+def test_ast_flags_prng_key_reuse():
+    fs = _lint("""\
+        import jax
+        def draws(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a + b
+    """)
+    assert _rules(fs) == ["PC-AST-KEYREUSE"]
+    assert fs[0].line == 4
+
+
+def test_ast_key_reuse_allows_split_and_reassignment():
+    assert _lint("""\
+        import jax
+        def draws(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.uniform(k2, (3,))
+            key = jax.random.fold_in(key, 7)
+            c = jax.random.normal(key, (3,))
+            return a + b + c
+    """) == []
+
+
+def test_ast_key_reuse_branches_do_not_cross_flag():
+    # each branch consumes the key once: exclusive paths, no reuse
+    assert _lint("""\
+        import jax
+        def draw(key, flag):
+            if flag:
+                return jax.random.normal(key, (3,))
+            else:
+                return jax.random.uniform(key, (3,))
+    """) == []
+
+
+def test_ast_flags_nondet_in_nested_function_only():
+    src = """\
+        import time
+        def build_core(cfg):
+            def core(x):
+                return x * time.time()
+            return core
+    """
+    fs = _lint(src)
+    assert _rules(fs) == ["PC-AST-NONDET"]
+    # module-level timers (compile stopwatches, CLI mains) are exempt
+    assert _lint("""\
+        import time
+        def bench(fn):
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+    """) == []
+
+
+def test_ast_nondet_jax_random_is_not_stdlib_random():
+    assert _lint("""\
+        from jax import random
+        def build(cfg):
+            def core(key):
+                return random.normal(key, (3,))
+            return core
+    """) == []
+
+
+def test_ast_inline_ignore_silences_the_rule():
+    fs, silenced = plancheck.check_source(textwrap.dedent("""\
+        import jax
+        # plancheck: ignore[PC-AST-JIT]
+        fast = jax.jit(lambda x: x + 1)
+    """), "training/somefile.py")
+    assert fs == [] and _rules(silenced) == ["PC-AST-JIT"]
+
+
+def test_repo_ast_pass_is_clean():
+    fs, _ = plancheck.check_repo(SRC_REPRO, rel_prefix="src/repro/")
+    assert fs == [], "\n".join(f.describe() for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# pass 1 over a real ExecutionPlan (+ plan(check=True) wiring)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def plancheck_spec(tiny_ae_cfg, tiny_split, tiny_padded):
+    dx, counts = tiny_padded
+    base = SimConfig(num_devices=10, rounds=2, lr=1e-3, dropout=False)
+    tcfg = dataclasses.replace(base, scheme="tolfl", num_clusters=5)
+    traces = sample_traces(np.random.default_rng(1), tcfg.topology(),
+                           0.5, max_events=6, rounds=2, num_traces=1)
+    return ExperimentSpec(
+        data=DataSpec(ae_cfg=tiny_ae_cfg, device_x=dx,
+                      device_counts=counts, test_x=tiny_split.test_x,
+                      test_y=tiny_split.test_y, name="plancheck"),
+        base=base,
+        # all three executable kinds: fused single, fl/iso, multi
+        cells=(CellSpec("tolfl", 2), CellSpec("fl", 1),
+               CellSpec("ifca", 2)),
+        traces=TraceSpec(traces=tuple(traces)), seeds=SeedSpec((0,)))
+
+
+def test_plan_static_report_is_clean_on_real_buckets(plancheck_spec):
+    p = plan(plancheck_spec, check=True)
+    assert p.report is not None and p.report.clean, p.report.describe()
+    assert "static analysis: clean" in p.describe()
+    # default plan() stays analysis-free (and its describe unchanged)
+    assert plan(plancheck_spec).report is None
+
+
+def test_bucket_cores_fit_their_budgets(plancheck_spec):
+    from repro.core import experiment as _x
+    p = plan(plancheck_spec)
+    assert {(b.kind, b.fused) for b in p.buckets} == {
+        ("single", True), ("multi", True)}
+    for b in p.buckets:
+        cells = [p.cells[i] for i in b.cell_indices]
+        avals = _x._bucket_avals(p.spec.data, b, cells)
+        jitted = campaign._executable(
+            *_x._bucket_exe_args(p.spec.data, b))
+        n = pc_budgets.count_jaxpr(jax.make_jaxpr(jitted)(*avals))
+        name = pc_budgets.bucket_budget_name(b.kind, b.fused)
+        assert pc_budgets.check_budget(name, n) is None, (name, n)
+
+
+def test_simulate_cached_core_fits_budget(tiny_ae_cfg, tiny_padded,
+                                          tiny_split):
+    from repro.core import simulate
+    from repro.core.failure import FailureTrace
+    device_x, device_counts = tiny_padded
+    cfg = SimConfig(num_devices=10, rounds=2, lr=1e-3, dropout=False,
+                    scheme="tolfl", num_clusters=5)
+    core = simulate._jitted_core(tiny_ae_cfg, cfg, score_history=False)
+    dx, counts, valid = simulate._prepare_arrays(cfg, device_x,
+                                                 device_counts)
+    n = pc_budgets.eqn_count(core, dx, counts, valid,
+                             jnp.asarray(tiny_split.test_x),
+                             FailureTrace.none(6), jnp.int32(0))
+    assert pc_budgets.check_budget("campaign_core_single", n) is None, n
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile windows without subprocesses
+# ---------------------------------------------------------------------------
+def test_reset_opens_zero_recompile_window(plancheck_spec):
+    from repro.api import execute
+    p = plan(plancheck_spec)
+    execute(p)                                  # warm everything
+    compilecache.reset_xla_compile_stats()
+    assert compilecache.xla_compile_stats()["misses"] == 0
+    before = campaign.TRACE_COUNT
+    execute(plan(plancheck_spec))               # warm replay
+    stats = compilecache.xla_compile_stats()
+    assert stats["misses"] == 0 and stats["requests"] == stats["hits"]
+    assert campaign.TRACE_COUNT == before
+    assert compilecache.reset_stats is compilecache.reset_xla_compile_stats

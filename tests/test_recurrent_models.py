@@ -1,7 +1,6 @@
 """Model-level tests for the recurrent families (RWKV6 / RG-LRU):
 prefill-vs-decode state algebra, Pallas-vs-XLA parity at the block level,
 and decay/stability properties."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

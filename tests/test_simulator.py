@@ -8,7 +8,6 @@ paper's qualitative claims are asserted:
 * server failure: Tol-FL degrades gracefully (loses one cluster) while
   FL collapses to isolated training — Tol-FL > FL (Table V ordering).
 """
-import numpy as np
 import pytest
 
 from repro.core.failure import NO_FAILURE, FailureSpec

@@ -5,9 +5,7 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -12,7 +12,6 @@ import pytest
 
 from repro.core.failure import NO_FAILURE
 from repro.core.simulate import SimConfig, run_simulation
-from repro.data import federated
 
 
 ROUNDS = 12
