@@ -76,8 +76,8 @@ from typing import List, Optional
 import numpy as np
 
 from benchmarks.datasets import data_spec, prepare
-from repro.api import (CellSpec, ExperimentSpec, SeedSpec, TraceSpec,
-                       run_experiment)
+from repro.api import (CellSpec, DataSpec, ExperimentSpec, SeedSpec,
+                       SeqDetector, TraceSpec, run_experiment)
 from repro.core import campaign, compilecache
 from repro.core.campaign import ExecPlan, run_campaign, sweep_grid
 from repro.core.failure import sample_rate_grid, sample_traces
@@ -221,6 +221,23 @@ def _run_rows(out_path, shard, chunk_size, cold_iter, diskwarm_iter
         seeds=SeedSpec((0, 1)), exec_plan=plan)
     _timed_campaign("spec_sweep", lines, results,
                     lambda: run_experiment(sweep_spec), reps=3)
+    # a SECOND detector body (the RG-LRU windowed sequence detector)
+    # through the same declarative pipeline: its executables key on the
+    # frozen spec (never aliasing the autoencoder's), cold iteration
+    # compiles one per iso-tracking kind, warm reps ride them for free
+    seq_spec = ExperimentSpec(
+        data=DataSpec(
+            model=SeqDetector(input_dim=prep.device_x.shape[-1],
+                              window=16, d_model=8),
+            device_x=prep.device_x, device_counts=prep.counts,
+            test_x=prep.test_x, test_y=prep.test_y,
+            name=prep.name + "-seq"),
+        base=base,
+        cells=(CellSpec("tolfl", 2), CellSpec("fl", 1)),
+        traces=TraceSpec(traces=tuple(traces[:4])),
+        seeds=SeedSpec((0,)), exec_plan=plan)
+    _timed_campaign("sweep_seq_detector", lines, results,
+                    lambda: run_experiment(seq_spec), reps=2)
 
     # the SAME grid under ExecPlan(aot=True): iteration 1 is the true
     # first-ever cold cost (plan-time lowering overlapping the host
@@ -277,6 +294,12 @@ def _run_rows(out_path, shard, chunk_size, cold_iter, diskwarm_iter
     _med = lambda r: float(np.median(r["walls_s"]))  # noqa: E731
     assert _med(results["spec_sweep"]) <= 1.05 * _med(results["sweep_fused"]), \
         (results["spec_sweep"], results["sweep_fused"])
+    # second-body row: one compile per iso-tracking kind on the cold
+    # iteration, none on the warm rep (detector specs are first-class
+    # executable-cache keys, not a retrace hazard)
+    seq = results["sweep_seq_detector"]
+    assert seq["compiles_per_iter"][0] == 2, seq
+    assert seq["compiles_per_iter"][1:] == [0], seq
     # AOT row: iteration 1 traces + compiles + populates the disk;
     # warm-disk iterations deserialise whole executables — no traces,
     # no XLA compiles

@@ -12,27 +12,26 @@ import glob
 import json
 from typing import List
 
-import jax
-
 from benchmarks.datasets import prepare
 from repro.core.simulate import comm_mb_per_round, comm_transfers_per_round
-from repro.models import autoencoder as AE
-from repro.models.params import param_bytes
+from repro.models.detector import as_detector
 
 N, K = 10, 5
 
 
 def run() -> List[str]:
     prep = prepare("commsml")
-    params, _ = AE.init_params(jax.random.PRNGKey(0), prep.ae_cfg)
-    mb = param_bytes(params)
+    # payload derived from the detector interface: the same number any
+    # body reports via DetectorModel.param_bytes() (one eager tiny init
+    # through models.params.param_count/param_bytes)
+    det = as_detector(prep.ae_cfg)
     lines = ["# Table VI: communication cost per training round (N=10, k=5)",
              "method,expected,transfers,MB_per_epoch"]
     for scheme, expected in (("fl", "O(2N)"), ("sbt", "O(N)"),
                              ("tolfl", "O(N+k)")):
         tr = comm_transfers_per_round(scheme, N, K)
         lines.append(f"{scheme},{expected},{tr},"
-                     f"{comm_mb_per_round(scheme, N, K, mb):.2f}")
+                     f"{comm_mb_per_round(scheme, N, K, det):.2f}")
     # datacenter cross-check from dry-run HLO collective bytes
     recs = []
     for p in glob.glob("results/dryrun/*train_4k__pod16x16.json"):

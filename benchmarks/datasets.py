@@ -94,7 +94,7 @@ def data_spec(prep: Prepared) -> DataSpec:
     """The :class:`repro.core.experiment.DataSpec` of a prepared
     dataset — the one arrays-plus-config bundle every paper-table bench
     used to rebuild by hand as a 5-tuple."""
-    return DataSpec(ae_cfg=prep.ae_cfg, device_x=prep.device_x,
+    return DataSpec(model=prep.ae_cfg, device_x=prep.device_x,
                     device_counts=prep.counts, test_x=prep.test_x,
                     test_y=prep.test_y, name=prep.name)
 

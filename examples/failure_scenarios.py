@@ -60,7 +60,7 @@ def build_spec(args, p_grid):
                                     kind="server")),
     ]
     spec = ExperimentSpec(
-        data=DataSpec(ae_cfg=AutoencoderConfig(), device_x=dx,
+        data=DataSpec(model=AutoencoderConfig(), device_x=dx,
                       device_counts=counts, test_x=split.test_x,
                       test_y=split.test_y, name="commsml"),
         base=SimConfig(num_devices=args.devices, rounds=args.rounds,

@@ -40,6 +40,41 @@ echo "== example smoke: declarative spec -> plan -> execute surface =="
 # from silently rotting
 python examples/failure_scenarios.py --smoke
 
+echo "== second-body smoke: SeqDetector campaign through plan -> execute =="
+# a tiny RG-LRU sequence-detector campaign: pins the pluggable-model
+# seam end-to-end (DataSpec.model -> simulate/baselines cores ->
+# detector-keyed executables) with the plan-time static analyzer on
+python - <<'PY'
+from repro.api import (CellSpec, DataSpec, ExperimentSpec, SeedSpec,
+                       SeqDetector, SimConfig, TraceSpec, execute, plan)
+from repro.core.failure import NO_FAILURE, FailureSpec
+from repro.data import commsml, federated
+
+X, y = commsml.generate(seed=0, samples_per_class=40)
+split = federated.make_split(X, y, num_devices=6, num_clusters=2,
+                             anomaly_classes=[3], seed=0)
+dx, counts = federated.pad_devices(split)
+spec = ExperimentSpec(
+    data=DataSpec(model=SeqDetector(input_dim=commsml.N_FEATURES,
+                                    window=16, d_model=8),
+                  device_x=dx, device_counts=counts,
+                  test_x=split.test_x, test_y=split.test_y,
+                  name="ci-seq-smoke"),
+    base=SimConfig(num_devices=6, rounds=2, lr=1e-3, dropout=False),
+    cells=(CellSpec("tolfl", 2), CellSpec("ifca", 2)),
+    traces=TraceSpec(traces=(NO_FAILURE, FailureSpec(1, "server"))),
+    seeds=SeedSpec((0,)))
+p = plan(spec, check=True)
+assert p.static_report().clean, p.describe()
+res = execute(p)
+assert res.num_scenarios == 4, res.num_scenarios
+print(p.describe())
+print("seq smoke OK:", {k: round(v["auroc_used_mean"]
+                                 if "auroc_used_mean" in v
+                                 else v["best_auroc_mean"], 3)
+                        for k, v in res.summary().items()})
+PY
+
 echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
 # stash the committed baseline before --smoke overwrites it, so the
 # perf trajectory of this change is visible in the CI log below

@@ -58,7 +58,7 @@ def _demo_plan():
     traces = sample_traces(np.random.default_rng(0), tcfg.topology(),
                            0.5, max_events=6, rounds=2, num_traces=1)
     spec = ExperimentSpec(
-        data=DataSpec(ae_cfg=ae, device_x=dx, device_counts=counts,
+        data=DataSpec(model=ae, device_x=dx, device_counts=counts,
                       test_x=split.test_x, test_y=split.test_y,
                       name="plancheck-demo"),
         base=base,

@@ -62,6 +62,20 @@ BUDGETS: Dict[str, Budget] = {
         Budget("campaign_core_multi", 1500,
                "multi-model baseline core (kmeans init + assignment "
                "scan; measured 757)"),
+        # seq family: RG-LRU windowed sequence detector bodies
+        # (repro.models.detector.SeqDetector).  The recurrence lowers
+        # through an associative scan, so the cores are materially
+        # bigger than the dense autoencoder's — they get their own
+        # named ceilings rather than inflating the ae family's.
+        Budget("campaign_core_single:seq", 3600,
+               "static-topology single-model core with the RG-LRU seq "
+               "body (measured 1458 / 1760 with track_iso)"),
+        Budget("campaign_core_single_fused:seq", 3600,
+               "padded-topology fused single-model core with the "
+               "RG-LRU seq body (measured 1431 / 1734 with track_iso)"),
+        Budget("campaign_core_multi:seq", 3600,
+               "multi-model baseline core with the RG-LRU seq body "
+               "(measured 1778)"),
     )
 }
 
@@ -99,8 +113,19 @@ def eqn_count(fn: Callable, *args, **kwargs) -> int:
 def check_budget(name: str, count: int, where: str = "",
                  file: str = "", line: int = 0) -> Optional[Finding]:
     """None when ``count`` fits the named budget, else a
-    ``PC-JAX-BUDGET`` finding."""
-    budget = BUDGETS[name]
+    ``PC-JAX-BUDGET`` finding.  An UNKNOWN name is itself a finding:
+    a detector family without a declared ceiling is unguarded, which
+    is the regression class this module exists to catch."""
+    budget = BUDGETS.get(name)
+    if budget is None:
+        return finding(
+            "PC-JAX-BUDGET", file or where or name, line,
+            f"{where or name}: no named budget {name!r} — this core "
+            f"runs unguarded",
+            hint=("declare a Budget in plancheck.budgets.BUDGETS for "
+                  "this detector family (ceiling ~2x the measured "
+                  "recursive eqn count)"),
+            tag=name)
     if count <= budget.max_eqns:
         return None
     loc = where or name
@@ -121,9 +146,16 @@ def constant_across(make_count: Callable[[int], int],
     return len(counts) == 1
 
 
-def bucket_budget_name(kind: str, fused: bool) -> str:
-    """The budget governing one experiment dispatch bucket."""
+def bucket_budget_name(kind: str, fused: bool, family: str = "ae") -> str:
+    """The budget governing one experiment dispatch bucket.
+
+    ``family`` is the detector's ``budget_family``: the default "ae"
+    keeps the historical names; any other family suffixes them
+    (``campaign_core_single:seq``), so each body is ceilinged against
+    its own measured size."""
     if kind == "multi":
-        return "campaign_core_multi"
-    return ("campaign_core_single_fused" if fused
-            else "campaign_core_single")
+        base = "campaign_core_multi"
+    else:
+        base = ("campaign_core_single_fused" if fused
+                else "campaign_core_single")
+    return base if family == "ae" else f"{base}:{family}"

@@ -7,11 +7,14 @@ cache entry (or, on the AOT path, serialises the wrong executable).
 The check is structural, so it fires the moment someone ADDS such a
 knob — before any campaign runs:
 
-* ``SimConfig`` / ``MultiModelConfig`` / ``AutoencoderConfig`` enter
-  the key as whole frozen dataclasses, so every field they ever grow is
-  covered BY CONSTRUCTION — the check verifies that containment
-  property (frozen + eq + hash) rather than enumerating fields.
-* ``ExecPlan`` / ``BucketPlan`` fields do NOT ride along wholesale;
+* ``SimConfig`` / ``MultiModelConfig`` / ``AutoencoderConfig`` — and
+  every registered detector spec class
+  (:func:`repro.models.detector.spec_classes`) — enter the key as whole
+  frozen dataclasses, so every field they ever grow is covered BY
+  CONSTRUCTION — the check verifies that containment property
+  (frozen + eq + hash) rather than enumerating fields.
+* ``ExecPlan`` / ``BucketPlan`` / ``DataSpec`` fields do NOT ride along
+  wholesale;
   each field must either map onto a key component
   (:data:`KEY_COMPONENTS`) via :data:`FIELD_COVERAGE`, or appear in the
   allowlist with a reason (shape-only / bookkeeping knobs).  A new
@@ -36,7 +39,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.analysis.plancheck.findings import Finding, finding
 
 #: the canonical key components (campaign._exe_key's parameters)
-KEY_COMPONENTS: Tuple[str, ...] = ("kind", "ae_cfg", "cfg", "k_pad",
+KEY_COMPONENTS: Tuple[str, ...] = ("kind", "model", "cfg", "k_pad",
                                    "ndev", "track_iso", "fused")
 
 #: program-changing fields -> the key component that carries them
@@ -51,6 +54,10 @@ FIELD_COVERAGE: Dict[Tuple[str, str], str] = {
     ("BucketPlan", "m_pad"): "cfg",     # folded into cfg.num_models by
     #                                     experiment._bucket_exe_args
     ("BucketPlan", "devices"): "ndev",
+    ("DataSpec", "model"): "model",     # the detector body the cores
+    #                                     close over
+    ("DataSpec", "ae_cfg"): "model",    # deprecated alias; __post_init__
+    #                                     folds it into model
 }
 
 #: fields that deliberately stay OUT of the key, each with its reason
@@ -78,6 +85,20 @@ ALLOWLIST: Dict[Tuple[str, str], str] = {
     ("BucketPlan", "padded_scenarios"):
         "shape-only: padded batch length, covered by the aval "
         "signature",
+    ("DataSpec", "device_x"):
+        "data-as-arguments: enters the compiled program as a traced "
+        "operand, never closed over; its shape/dtype are covered by "
+        "the aval signature",
+    ("DataSpec", "device_counts"):
+        "data-as-arguments: traced operand, shapes covered by the aval "
+        "signature",
+    ("DataSpec", "test_x"):
+        "data-as-arguments: traced operand, shapes covered by the aval "
+        "signature",
+    ("DataSpec", "test_y"):
+        "host-only: consumed by AUROC post-processing after the "
+        "dispatch returns, never lowered",
+    ("DataSpec", "name"): "cosmetic: tags ExperimentResult.to_rows",
 }
 
 
@@ -151,11 +172,15 @@ def check_cache_keys(extra_execplan_fields: Sequence[str] = (),
 
     # containment property: whole-dataclass key components must be
     # frozen + hashable, or lru_cache would reject them and ad-hoc
-    # per-field keys (the incomplete kind) would creep back in
+    # per-field keys (the incomplete kind) would creep back in.  Every
+    # REGISTERED detector spec class joins the sweep: any body can land
+    # in the key via DataSpec.model.
     from repro.configs.autoencoder_paper import AutoencoderConfig
     from repro.core.baselines import MultiModelConfig
     from repro.core.simulate import SimConfig
-    for cls in (SimConfig, MultiModelConfig, AutoencoderConfig):
+    from repro.models.detector import spec_classes
+    for cls in ((SimConfig, MultiModelConfig, AutoencoderConfig)
+                + spec_classes()):
         params = getattr(cls, "__dataclass_params__", None)
         if params is None or not params.frozen or not params.eq:
             out.append(finding(
@@ -166,8 +191,10 @@ def check_cache_keys(extra_execplan_fields: Sequence[str] = (),
                 f"construction",
                 tag=f"{cls.__name__}.containment"))
 
+    from repro.core.experiment import DataSpec
     out += _field_findings(_c.ExecPlan, "repro/core/campaign.py",
                            extra_execplan_fields)
     out += _field_findings(BucketPlan, "repro/core/experiment.py",
                            extra_bucket_fields)
+    out += _field_findings(DataSpec, "repro/core/experiment.py")
     return out

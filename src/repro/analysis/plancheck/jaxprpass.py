@@ -159,6 +159,9 @@ def check_plan(plan, data=None, budgets: bool = True) -> List[Finding]:
     from repro.core import experiment as _x
 
     data = data or plan.spec.data
+    # the detector's budget_family picks the named eqn ceilings the
+    # buckets are checked against ("ae" = the historical names)
+    family = getattr(getattr(data, "model", None), "budget_family", "ae")
     out: List[Finding] = []
     for bucket in plan.buckets:
         cells = [plan.cells[i] for i in bucket.cell_indices]
@@ -170,6 +173,6 @@ def check_plan(plan, data=None, budgets: bool = True) -> List[Finding]:
         out.extend(check_jaxpr(
             closed, where, file=f"plan://bucket{bucket.index}",
             budget=(_budgets.bucket_budget_name(bucket.kind,
-                                                bucket.fused)
+                                                bucket.fused, family)
                     if budgets else None)))
     return out

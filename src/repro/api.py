@@ -36,6 +36,9 @@ from repro.core.failure import (MAX_EVENTS, NO_FAILURE, FailureEvent,
                                 sample_traces)
 from repro.core.simulate import SimConfig, SimResult, run_simulation
 from repro.core.topology import Topology
+from repro.models.detector import (AutoencoderDetector, DetectorModel,
+                                   SeqDetector, as_detector, detector_names,
+                                   make_detector, register_detector)
 
 __all__ = [
     # declarative pipeline
@@ -51,6 +54,9 @@ __all__ = [
     # configs / schemes
     "AutoencoderConfig", "SimConfig", "MultiModelConfig", "Topology",
     "SINGLE_SCHEMES", "MULTI_SCHEMES",
+    # detector bodies (pluggable model specs)
+    "DetectorModel", "AutoencoderDetector", "SeqDetector", "as_detector",
+    "make_detector", "register_detector", "detector_names",
     # failure model
     "FailureSpec", "FailureEvent", "FailureTrace", "NO_FAILURE",
     "MAX_EVENTS", "sample_traces", "sample_rate_grid",

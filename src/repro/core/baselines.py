@@ -53,11 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.failure import (Failure, FailureTrace, KIND_CODES,
                                 MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
                                 trace_alive_mask)
-from repro.models import autoencoder as AE
+from repro.models import detector as D
+from repro.models.detector import ModelLike
 from repro.training.metrics import auroc_batch
 
 
@@ -87,12 +87,11 @@ class MultiOutputs(NamedTuple):
     assignments: jax.Array        # (N,) final device -> model map
 
 
-def _grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
+def _grad_fn(model: ModelLike, dropout: bool):
+    det = D.as_detector(model)
+
     def local_loss(params, x, valid, key):
-        x_hat = AE.forward(params, ae_cfg, x,
-                           dropout_key=key if dropout else None)
-        err = jnp.sum(jnp.square(x - x_hat), axis=-1) * valid
-        return jnp.sum(err) / jnp.maximum(jnp.sum(valid), 1.0)
+        return det.loss(params, x, valid, key if dropout else None)
     return local_loss, jax.grad(local_loss)
 
 
@@ -204,7 +203,7 @@ def prepare_multimodel_arrays(device_x: np.ndarray,
     return dx, counts, valid
 
 
-def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
+def _build_multimodel_core(model: ModelLike, cfg: MultiModelConfig):
     """Pure scenario function: (dx, counts, valid, tx, model_valid,
     trace, seed) -> :class:`MultiOutputs`, mirroring
     ``simulate._build_core``.
@@ -226,7 +225,8 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
     are uncorrelated.
     """
     N, M = cfg.num_devices, cfg.num_models
-    local_loss, grad_fn = _grad_fn(ae_cfg, cfg.dropout)
+    det = D.as_detector(model)
+    local_loss, grad_fn = _grad_fn(det, cfg.dropout)
 
     def core(dx, counts, valid, tx, model_valid, trace: FailureTrace,
              seed):
@@ -235,8 +235,7 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
         # M model instances with different inits
         models = []
         for j in range(M):
-            p, _ = AE.init_params(jax.random.fold_in(k_init, j), ae_cfg)
-            models.append(p)
+            models.append(det.init_params(jax.random.fold_in(k_init, j)))
         models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
 
         client_tr, server_tr = _split_trace(trace)
@@ -246,7 +245,7 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
         # ---- initial assignment ----
         if cfg.scheme == "fedgroup":
             k_probe, k_pgrad, k_km = jax.random.split(k_group, 3)
-            p0, _ = AE.init_params(k_probe, ae_cfg)
+            p0 = det.init_params(k_probe)
             g0 = jax.vmap(lambda x, v, k_: _flat(grad_fn(p0, x, v, k_)),
                           in_axes=(0, 0, 0))(
                 dx, valid, jax.random.split(k_pgrad, N))
@@ -315,7 +314,7 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
                 models_, g_m)
 
             scores = jax.vmap(
-                lambda p: AE.anomaly_scores(p, ae_cfg, tx))(models_)
+                lambda p: det.anomaly_scores(p, tx))(models_)
             # per-sample min over LIVE models only (padded slots hold
             # untrained inits whose scores must not leak into the loss)
             tl = jnp.mean(jnp.min(
@@ -326,27 +325,29 @@ def _build_multimodel_core(ae_cfg: AutoencoderConfig, cfg: MultiModelConfig):
         (models, assign, _), losses = jax.lax.scan(
             round_fn, (models, assign0, k_train), jnp.arange(cfg.rounds))
         final_scores = jax.vmap(
-            lambda p: AE.anomaly_scores(p, ae_cfg, tx))(models)
+            lambda p: det.anomaly_scores(p, tx))(models)
         return MultiOutputs(losses, final_scores, assign)
 
     return core
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_multimodel_core_cached(ae_cfg: AutoencoderConfig,
+def _jitted_multimodel_core_cached(model: ModelLike,
                                    cfg: MultiModelConfig):
-    return jax.jit(_build_multimodel_core(ae_cfg, cfg))
+    return jax.jit(_build_multimodel_core(model, cfg))
 
 
-def _jitted_multimodel_core(ae_cfg: AutoencoderConfig,
+def _jitted_multimodel_core(model: ModelLike,
                             cfg: MultiModelConfig):
     """Compiled single-scenario core, cached on static config (the seed
-    field of ``cfg`` is ignored — seed is a dynamic argument)."""
+    field of ``cfg`` is ignored — seed is a dynamic argument; the model
+    spec is canonicalised so the config and detector spellings of the
+    same autoencoder share one cache entry)."""
     return _jitted_multimodel_core_cached(
-        ae_cfg, dataclasses.replace(cfg, seed=0))
+        D.canonical_model_key(model), dataclasses.replace(cfg, seed=0))
 
 
-def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+def run_multimodel(model: ModelLike, device_x: np.ndarray,
                    device_counts: np.ndarray, test_x: np.ndarray,
                    test_y: np.ndarray, cfg: MultiModelConfig,
                    failure: Failure = NO_FAILURE) -> MultiModelResult:
@@ -359,7 +360,7 @@ def run_multimodel(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     trace = as_multimodel_trace(failure, cfg.num_devices)
     dx, counts, valid = prepare_multimodel_arrays(device_x, device_counts)
     tx = jnp.asarray(test_x)
-    core = _jitted_multimodel_core(ae_cfg, cfg)
+    core = _jitted_multimodel_core(model, cfg)
     out = core(dx, counts, valid, tx,
                jnp.ones((cfg.num_models,), jnp.float32), trace,
                jnp.int32(cfg.seed))

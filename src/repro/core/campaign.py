@@ -77,10 +77,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core.baselines import MultiModelConfig, _build_multimodel_core
 from repro.core.failure import Failure, FailureTrace
 from repro.core.simulate import SimConfig, _build_core, _build_core_arrays
+from repro.models.detector import ModelLike, canonical_model_key
 from repro.sharding import scenario_shard_map
 from repro.training.metrics import auroc_batch
 
@@ -275,23 +275,30 @@ def _scenario_grid(num_traces: int, seeds: Sequence[int]
 # the static config, so repeated campaigns with the same shapes reuse the
 # compiled executable instead of re-tracing per campaign.
 # ---------------------------------------------------------------------------
-def _exe_key(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+def _exe_key(kind: str, model: ModelLike, cfg, k_pad, ndev,
              track_iso: bool, fused: bool) -> tuple:
     """Canonical executable-cache key.
 
-    Everything that changes the lowered program is in here — the static
-    config (scheme/k-normalised by the caller on padded paths), the
-    cluster-axis pad, the shard width, the iso-tracking kind and the
-    fused/broadcast operand split — and NOTHING else: redundant degrees
-    of freedom are normalised away so two spellings of the same
-    configuration can never compile twice (``functools.lru_cache``
-    would otherwise key ``f(a, b)`` and ``f(a, b=...)`` differently,
-    and a ``track_iso`` flag disagreeing with ``cfg.scheme`` on the
-    static path would duplicate an identical program).  Shapes/dtypes
-    are deliberately NOT part of this key: the jit path retraces per
-    shape inside one entry, and the AOT path extends the key with the
-    abstract-argument signature (``aot_executable``).  Pinned by
-    ``tests/test_cache_semantics.py``."""
+    Everything that changes the lowered program is in here — the
+    detector-model spec, the static config (scheme/k-normalised by the
+    caller on padded paths), the cluster-axis pad, the shard width, the
+    iso-tracking kind and the fused/broadcast operand split — and
+    NOTHING else: redundant degrees of freedom are normalised away so
+    two spellings of the same configuration can never compile twice
+    (``functools.lru_cache`` would otherwise key ``f(a, b)`` and
+    ``f(a, b=...)`` differently, and a ``track_iso`` flag disagreeing
+    with ``cfg.scheme`` on the static path would duplicate an identical
+    program).  ``model`` canonicalises through
+    :func:`repro.models.detector.canonical_model_key`: autoencoder
+    specs key on the raw :class:`AutoencoderConfig` — whichever
+    spelling the caller used — so pre-detector cache keys and
+    persistent-cache fingerprints are bit-identical; other bodies key
+    on their frozen spec.  Shapes/dtypes are deliberately NOT part of
+    this key: the jit path retraces per shape inside one entry, and the
+    AOT path extends the key with the abstract-argument signature
+    (``aot_executable``).  Pinned by ``tests/test_cache_semantics.py``
+    and ``tests/test_detector.py``."""
+    model = canonical_model_key(model)
     if kind == "multi":
         assert k_pad is None, "multi-model cells pad M via cfg.num_models"
         track_iso = False          # the multi core has no iso branch
@@ -301,20 +308,20 @@ def _exe_key(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
         # flag would alias a second identical executable
         track_iso = cfg.scheme == "fl"
         fused = False
-    return (kind, ae_cfg, cfg, k_pad, ndev, bool(track_iso), bool(fused))
+    return (kind, model, cfg, k_pad, ndev, bool(track_iso), bool(fused))
 
 
-def _executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+def _executable(kind: str, model: ModelLike, cfg, k_pad, ndev,
                 track_iso: bool = False, fused: bool = False):
     """Batched scenario executable (see :func:`_build_executable`); the
     lru key is the canonical :func:`_exe_key`, never the raw call
     spelling."""
-    return _build_executable(*_exe_key(kind, ae_cfg, cfg, k_pad, ndev,
+    return _build_executable(*_exe_key(kind, model, cfg, k_pad, ndev,
                                        track_iso, fused))
 
 
 @functools.lru_cache(maxsize=64)
-def _build_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad,
+def _build_executable(kind: str, model: ModelLike, cfg, k_pad,
                       ndev, track_iso: bool, fused: bool):
     """Batched scenario executable.
 
@@ -341,13 +348,13 @@ def _build_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad,
         replicated (:func:`repro.sharding.scenario_shard_map`).
     """
     if kind == "multi":
-        core = _build_multimodel_core(ae_cfg, cfg)
+        core = _build_multimodel_core(model, cfg)
         n_bcast, n_mapped = (4, 3) if fused else (5, 2)
     elif k_pad is None:
-        core = _build_core(ae_cfg, cfg, score_history=False)
+        core = _build_core(model, cfg, score_history=False)
         n_bcast, n_mapped = 4, 2
     else:
-        core = _build_core_arrays(ae_cfg, cfg, cfg.num_devices, k_pad,
+        core = _build_core_arrays(model, cfg, cfg.num_devices, k_pad,
                                   track_iso=track_iso,
                                   score_history=False)
         n_bcast, n_mapped = (4, 5) if fused else (7, 2)
@@ -416,7 +423,7 @@ def _avals_signature(abstract_args) -> tuple:
                   for l in leaves))
 
 
-def aot_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
+def aot_executable(kind: str, model: ModelLike, cfg, k_pad, ndev,
                    track_iso: bool, fused: bool, abstract_args
                    ) -> Tuple[Any, AotTimes]:
     """Lower + compile the batched core for ``abstract_args`` (a tuple
@@ -429,7 +436,7 @@ def aot_executable(kind: str, ae_cfg: AutoencoderConfig, cfg, k_pad, ndev,
     experiment layer compiles buckets on a worker pool while the host
     builds data arrays."""
     from repro.core import compilecache as _cc
-    key = _exe_key(kind, ae_cfg, cfg, k_pad, ndev, track_iso, fused)
+    key = _exe_key(kind, model, cfg, k_pad, ndev, track_iso, fused)
     full_key = key + _avals_signature(abstract_args)
     with _AOT_LOCK:
         hit = _AOT_CACHE.get(full_key)
@@ -538,7 +545,7 @@ def _padded_topology_arrays(topo, k_pad: int):
             jnp.asarray(head_valid))
 
 
-def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+def run_campaign(model: ModelLike, device_x: np.ndarray,
                  device_counts: np.ndarray, test_x: np.ndarray,
                  test_y: np.ndarray, cfg: SimConfig,
                  traces: Sequence[Failure], seeds: Sequence[int],
@@ -561,7 +568,7 @@ def run_campaign(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     (:mod:`repro.core.experiment`): one-cell spec, per-cell dispatch."""
     from repro.core import experiment as X
     spec = X.ExperimentSpec(
-        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+        data=X.DataSpec(model=model, device_x=device_x,
                         device_counts=device_counts, test_x=test_x,
                         test_y=test_y),
         base=cfg,
@@ -632,7 +639,7 @@ def _post_process_arrays(track_iso: bool, out, test_y, target_loss
                 rounds_to_loss=r2l)
 
 
-def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
+def run_multimodel_campaign(model: ModelLike,
                             device_x: np.ndarray,
                             device_counts: np.ndarray, test_x: np.ndarray,
                             test_y: np.ndarray, cfg: MultiModelConfig,
@@ -655,7 +662,7 @@ def run_multimodel_campaign(ae_cfg: AutoencoderConfig,
     (:mod:`repro.core.experiment`): one-cell spec, per-cell dispatch."""
     from repro.core import experiment as X
     spec = X.ExperimentSpec(
-        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+        data=X.DataSpec(model=model, device_x=device_x,
                         device_counts=device_counts, test_x=test_x,
                         test_y=test_y),
         base=SimConfig(num_devices=cfg.num_devices),
@@ -696,7 +703,7 @@ def _single_trace_key(traces: Sequence[Failure], topo) -> tuple:
     return (tuple(topo.heads), tuple(topo.clusters[0]))
 
 
-def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+def run_fused_campaigns(model: ModelLike, device_x: np.ndarray,
                         device_counts: np.ndarray, test_x: np.ndarray,
                         test_y: np.ndarray,
                         cells: Sequence[Tuple[SimConfig,
@@ -740,7 +747,7 @@ def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
                              "via run_campaign")
     from repro.core import experiment as X
     spec = X.ExperimentSpec(
-        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+        data=X.DataSpec(model=model, device_x=device_x,
                         device_counts=device_counts, test_x=test_x,
                         test_y=test_y),
         base=cells[0][0],
@@ -752,7 +759,7 @@ def run_fused_campaigns(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     return X.run_experiment(spec).results
 
 
-def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
+def run_fused_multimodel_campaigns(model: ModelLike,
                                    device_x: np.ndarray,
                                    device_counts: np.ndarray,
                                    test_x: np.ndarray, test_y: np.ndarray,
@@ -781,7 +788,7 @@ def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
         return []
     from repro.core import experiment as X
     spec = X.ExperimentSpec(
-        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+        data=X.DataSpec(model=model, device_x=device_x,
                         device_counts=device_counts, test_x=test_x,
                         test_y=test_y),
         base=SimConfig(num_devices=cells[0][0].num_devices),
@@ -793,7 +800,7 @@ def run_fused_multimodel_campaigns(ae_cfg: AutoencoderConfig,
     return X.run_experiment(spec).results
 
 
-def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+def sweep_grid(model: ModelLike, device_x: np.ndarray,
                device_counts: np.ndarray, test_x: np.ndarray,
                test_y: np.ndarray, base: SimConfig,
                scheme_ks: Sequence[Tuple[str, int]],
@@ -842,7 +849,7 @@ def sweep_grid(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     :func:`repro.core.experiment.plan`."""
     from repro.core import experiment as X
     spec = X.ExperimentSpec(
-        data=X.DataSpec(ae_cfg=ae_cfg, device_x=device_x,
+        data=X.DataSpec(model=model, device_x=device_x,
                         device_counts=device_counts, test_x=test_x,
                         test_y=test_y),
         base=base,

@@ -40,7 +40,7 @@ Typical use::
                            TraceSpec, execute, plan)
 
     spec = ExperimentSpec(
-        data=DataSpec(ae_cfg=ae, device_x=dx, device_counts=counts,
+        data=DataSpec(model=detector, device_x=dx, device_counts=counts,
                       test_x=tx, test_y=ty),
         base=SimConfig(num_devices=10, rounds=40, lr=1e-3),
         cells=(CellSpec("tolfl", 5), CellSpec("fl", 1),
@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -76,6 +77,8 @@ from repro.core.failure import (Failure, FailureSpec, FailureTrace, as_trace,
                                 stack_traces)
 from repro.core.simulate import SimConfig, _prepare_arrays
 from repro.core.topology import Topology
+from repro.models.detector import (AutoencoderDetector, DetectorModel,
+                                   ModelLike, as_detector)
 
 #: single-model schemes the simulator core understands
 SINGLE_SCHEMES = ("batch", "fl", "sbt", "tolfl")
@@ -84,20 +87,57 @@ SINGLE_SCHEMES = ("batch", "fl", "sbt", "tolfl")
 # ---------------------------------------------------------------------------
 # Spec dataclasses (the declarative surface)
 # ---------------------------------------------------------------------------
+#: fired at most once per process; tests reset it to re-pin the warning
+_AE_CFG_WARNED = False
+
+
 @dataclass(frozen=True, eq=False)
 class DataSpec:
-    """Dataset + federated partition of one experiment.
+    """Dataset + federated partition + detector body of one experiment.
 
-    ``device_x`` is the (N, n_max, D) padded per-device tensor,
-    ``device_counts`` the (N,) true sample counts — exactly the arrays
+    ``model`` is the detector spec the campaign trains — any
+    :class:`repro.models.detector.DetectorModel` (or a raw
+    :class:`AutoencoderConfig`, which normalises to the paper's
+    :class:`~repro.models.detector.AutoencoderDetector`).  ``device_x``
+    is the (N, n_max, D) padded per-device tensor, ``device_counts``
+    the (N,) true sample counts — exactly the arrays
     :func:`repro.data.federated.pad_devices` returns.  ``name`` is
-    cosmetic (it tags :meth:`ExperimentResult.to_rows`)."""
-    ae_cfg: AutoencoderConfig
-    device_x: np.ndarray
-    device_counts: np.ndarray
-    test_x: np.ndarray
-    test_y: np.ndarray
+    cosmetic (it tags :meth:`ExperimentResult.to_rows`).
+
+    ``ae_cfg`` is the deprecated pre-detector spelling of ``model``:
+    constructing with it still works (one ``DeprecationWarning`` per
+    process), and reading it back returns the underlying
+    :class:`AutoencoderConfig` for autoencoder specs (None otherwise)
+    so legacy call sites keep functioning."""
+    model: Optional[ModelLike] = None
+    device_x: Optional[np.ndarray] = None
+    device_counts: Optional[np.ndarray] = None
+    test_x: Optional[np.ndarray] = None
+    test_y: Optional[np.ndarray] = None
     name: str = ""
+    ae_cfg: Optional[AutoencoderConfig] = None
+
+    def __post_init__(self):
+        global _AE_CFG_WARNED
+        model = self.model
+        if model is None:
+            if self.ae_cfg is None:
+                raise TypeError(
+                    "DataSpec needs a detector spec: pass model= (a "
+                    "DetectorModel or AutoencoderConfig)")
+            if not _AE_CFG_WARNED:
+                warnings.warn(
+                    "DataSpec(ae_cfg=...) is deprecated; pass model= "
+                    "(any repro.models.detector.DetectorModel — a raw "
+                    "AutoencoderConfig still normalises to the paper "
+                    "autoencoder)", DeprecationWarning, stacklevel=3)
+                _AE_CFG_WARNED = True
+            model = self.ae_cfg
+        det = as_detector(model)
+        object.__setattr__(self, "model", det)
+        object.__setattr__(
+            self, "ae_cfg",
+            det.cfg if isinstance(det, AutoencoderDetector) else None)
 
 
 @dataclass(frozen=True, eq=False)
@@ -628,16 +668,16 @@ class CompileReport:
 
 
 def _bucket_exe_args(data: DataSpec, bucket: BucketPlan) -> tuple:
-    """``(kind, ae_cfg, cfg, k_pad, ndev, track_iso, fused)`` — the
+    """``(kind, model, cfg, k_pad, ndev, track_iso, fused)`` — the
     executable-cache key parts the bucket's ``_exec_*`` helper will
     resolve (fused multi buckets compile at the PADDED model count)."""
     if bucket.kind == "multi":
         cfg = (dataclasses.replace(bucket.key_cfg,
                                    num_models=bucket.m_pad)
                if bucket.fused else bucket.key_cfg)
-        return ("multi", data.ae_cfg, cfg, None, bucket.devices, False,
+        return ("multi", data.model, cfg, None, bucket.devices, False,
                 bucket.fused)
-    return ("single", data.ae_cfg, bucket.key_cfg, bucket.k_pad,
+    return ("single", data.model, bucket.key_cfg, bucket.k_pad,
             bucket.devices, bucket.track_iso, bucket.fused)
 
 
@@ -783,7 +823,7 @@ def _exec_single_cell(data: DataSpec, cfg: SimConfig,
         bcast = (dx, counts, valid, tx) + _c._padded_topology_arrays(
             topo, pad_k)
     ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
-    batched = _c._executable("single", data.ae_cfg, key_cfg, pad_k, ndev,
+    batched = _c._executable("single", data.model, key_cfg, pad_k, ndev,
                              track_iso)
     out = _c._run_batched(batched, bcast,
                           (batch_traces, jnp.asarray(seed_arr)),
@@ -810,7 +850,7 @@ def _exec_multi_cell(data: DataSpec, cfg: MultiModelConfig,
     assert dx.shape[0] == cfg.num_devices, (dx.shape, cfg.num_devices)
     key_cfg = dataclasses.replace(cfg, seed=0)
     ndev = exec_plan.resolved_devices(warn=False) if exec_plan else None
-    batched = _c._executable("multi", data.ae_cfg, key_cfg, None, ndev)
+    batched = _c._executable("multi", data.model, key_cfg, None, ndev)
     model_valid = jnp.ones((cfg.num_models,), jnp.float32)
     out = _c._run_batched(batched, (dx, counts, valid, tx, model_valid),
                           (batch_traces, jnp.asarray(seed_arr)),
@@ -884,7 +924,7 @@ def _exec_fused_single_group(data: DataSpec, cells, seeds, target_loss,
     mapped = (jnp.concatenate(cids_l), jnp.concatenate(heads_l),
               jnp.concatenate(hv_l), concat_traces(tr_l),
               jnp.asarray(np.concatenate(seeds_l)))
-    batched = _c._executable("single", data.ae_cfg, key_cfg, kp, ndev,
+    batched = _c._executable("single", data.model, key_cfg, kp, ndev,
                              track_iso, fused=True)
     out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
                           exec_plan, aot_resolve=aot_resolve)
@@ -933,7 +973,7 @@ def _exec_fused_multi_group(data: DataSpec, cells, seeds, exec_plan,
     mapped = (jnp.concatenate(mv_l), concat_traces(tr_l),
               jnp.asarray(np.concatenate(seeds_l)))
     exe_cfg = dataclasses.replace(key_cfg, num_models=mp)
-    batched = _c._executable("multi", data.ae_cfg, exe_cfg, None, ndev,
+    batched = _c._executable("multi", data.model, exe_cfg, None, ndev,
                              fused=True)
     out = _c._run_batched(batched, (dx, counts, valid, tx), mapped,
                           exec_plan, aot_resolve=aot_resolve)

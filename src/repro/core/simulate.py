@@ -40,12 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import aggregation as agg
 from repro.core.failure import (Failure, FailureTrace, NO_FAILURE, as_trace,
                                 effective_weights_arrays, trace_alive_mask)
 from repro.core.topology import Topology
-from repro.models import autoencoder as AE
+from repro.models import detector as D
+from repro.models.detector import ModelLike
 from repro.training.metrics import auroc, auroc_batch
 
 
@@ -98,20 +98,19 @@ class SimOutputs(NamedTuple):
     iso_score_hist: jax.Array    # (rounds, N, T) or (rounds, 0, 0)
 
 
-def _device_grad_fn(ae_cfg: AutoencoderConfig, dropout: bool):
+def _device_grad_fn(model: ModelLike, dropout: bool):
+    det = D.as_detector(model)
+
     def local_loss(params, x, valid, key):
-        x_hat = AE.forward(params, ae_cfg, x,
-                           dropout_key=key if dropout else None)
-        err = jnp.sum(jnp.square(x - x_hat), axis=-1) * valid
-        return jnp.sum(err) / jnp.maximum(jnp.sum(valid), 1.0)
+        return det.loss(params, x, valid, key if dropout else None)
     return jax.grad(local_loss)
 
 
-def _local_delta_fn(ae_cfg: AutoencoderConfig, cfg: SimConfig):
+def _local_delta_fn(model: ModelLike, cfg: SimConfig):
     """E local SGD steps; returns the (negated-gradient-like) delta/lr.
 
     With E=1 this is exactly the local gradient (paper Algorithm 1)."""
-    grad_fn = _device_grad_fn(ae_cfg, cfg.dropout)
+    grad_fn = _device_grad_fn(model, cfg.dropout)
 
     def delta(params, x, valid, key):
         if cfg.local_epochs == 1:
@@ -128,7 +127,7 @@ def _local_delta_fn(ae_cfg: AutoencoderConfig, cfg: SimConfig):
     return delta
 
 
-def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+def _build_core_arrays(model: ModelLike, cfg: SimConfig,
                        num_devices: int, num_clusters: int,
                        track_iso: bool, score_history: bool):
     """Pure scenario function with the topology as DYNAMIC operands:
@@ -146,15 +145,16 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
     fl/sbt/tolfl alike."""
     N = num_devices
     k = num_clusters
-    delta_fn = _local_delta_fn(ae_cfg, cfg)
+    det = D.as_detector(model)
+    delta_fn = _local_delta_fn(det, cfg)
 
     def core(dx, counts, valid, tx, cluster_ids, heads, head_valid,
              trace: FailureTrace, seed):
         key = jax.random.PRNGKey(seed)
-        params, _ = AE.init_params(key, ae_cfg)
+        params = det.init_params(key)
 
         def test_loss(p):
-            s = AE.anomaly_scores(p, ae_cfg, tx)
+            s = det.anomaly_scores(p, tx)
             return jnp.mean(s)
 
         def heads_alive_max(alive):
@@ -221,12 +221,12 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
 
             tl = test_loss(new_params)
             if score_history:
-                scores = AE.anomaly_scores(new_params, ae_cfg, tx)
+                scores = det.anomaly_scores(new_params, tx)
             else:
                 scores = jnp.zeros((0,), jnp.float32)
             if track_iso and score_history:
                 iso_scores = jax.vmap(
-                    lambda p: AE.anomaly_scores(p, ae_cfg, tx))(iso_params)
+                    lambda p: det.anomaly_scores(p, tx))(iso_params)
             else:
                 iso_scores = jnp.zeros((0, 0), jnp.float32)
             return (new_params, iso_params, rkey), (tl, scores, iso_tl,
@@ -242,10 +242,10 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
 
         final_alive = trace_alive_mask(trace, N, jnp.int32(cfg.rounds - 1))
         server_dead = 1.0 - heads_alive_max(final_alive)
-        final_scores = AE.anomaly_scores(final_params, ae_cfg, tx)
+        final_scores = det.anomaly_scores(final_params, tx)
         if track_iso:
             iso_final_scores = jax.vmap(
-                lambda p: AE.anomaly_scores(p, ae_cfg, tx))(iso_params)
+                lambda p: det.anomaly_scores(p, tx))(iso_params)
         else:
             iso_final_scores = jnp.zeros((N, 0), jnp.float32)
         return SimOutputs(losses, iso_losses, final_scores,
@@ -255,7 +255,7 @@ def _build_core_arrays(ae_cfg: AutoencoderConfig, cfg: SimConfig,
     return core
 
 
-def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+def _build_core(model: ModelLike, cfg: SimConfig,
                 score_history: bool):
     """Pure scenario function: (dx, counts, valid, tx, trace, seed)
     -> :class:`SimOutputs`.  The topology is closed over statically (a
@@ -266,7 +266,7 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
     cluster_ids = jnp.asarray(topo.device_cluster_array())
     heads = jnp.asarray(np.array(topo.heads))
     head_valid = jnp.ones((topo.num_clusters,), jnp.float32)
-    arrays_core = _build_core_arrays(ae_cfg, cfg, topo.num_devices,
+    arrays_core = _build_core_arrays(model, cfg, topo.num_devices,
                                      topo.num_clusters,
                                      track_iso=(cfg.scheme == "fl"),
                                      score_history=score_history)
@@ -279,16 +279,19 @@ def _build_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_core_cached(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+def _jitted_core_cached(model: ModelLike, cfg: SimConfig,
                         score_history: bool):
-    return jax.jit(_build_core(ae_cfg, cfg, score_history))
+    return jax.jit(_build_core(model, cfg, score_history))
 
 
-def _jitted_core(ae_cfg: AutoencoderConfig, cfg: SimConfig,
+def _jitted_core(model: ModelLike, cfg: SimConfig,
                  score_history: bool):
     """Compiled single-scenario core, cached on static config (the seed
-    field of ``cfg`` is ignored — seed is a dynamic argument)."""
-    return _jitted_core_cached(ae_cfg, dataclasses.replace(cfg, seed=0),
+    field of ``cfg`` is ignored — seed is a dynamic argument; the model
+    spec is canonicalised so the config and detector spellings of the
+    same autoencoder share one cache entry)."""
+    return _jitted_core_cached(D.canonical_model_key(model),
+                               dataclasses.replace(cfg, seed=0),
                                score_history)
 
 
@@ -320,15 +323,17 @@ def iso_mean_auroc(iso_scores: np.ndarray, final_alive: np.ndarray,
     return float(np.mean(per_dev)) if per_dev else float("nan")
 
 
-def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
+def run_simulation(model: ModelLike, device_x: np.ndarray,
                    device_counts: np.ndarray, test_x: np.ndarray,
                    test_y: np.ndarray, cfg: SimConfig,
                    failure: Failure = NO_FAILURE,
                    target_loss: Optional[float] = None) -> SimResult:
     """device_x: (N, n_max, D) padded; device_counts: (N,).
 
-    ``failure`` may be a legacy single-event :class:`FailureSpec` or a
-    multi-event :class:`FailureTrace`."""
+    ``model`` is any :class:`repro.models.detector.DetectorModel` (a raw
+    :class:`AutoencoderConfig` — the historical first argument — still
+    works).  ``failure`` may be a legacy single-event
+    :class:`FailureSpec` or a multi-event :class:`FailureTrace`."""
     topo = cfg.topology()
     N = topo.num_devices
     trace = as_trace(failure, topo)
@@ -336,7 +341,7 @@ def run_simulation(ae_cfg: AutoencoderConfig, device_x: np.ndarray,
     assert dx.shape[0] == N, (dx.shape, N)
     tx = jnp.asarray(test_x)
 
-    core = _jitted_core(ae_cfg, cfg, True)
+    core = _jitted_core(model, cfg, True)
     out = core(dx, counts, valid, tx, trace, jnp.int32(cfg.seed))
 
     losses = np.asarray(out.losses).copy()
@@ -392,18 +397,28 @@ def comm_transfers_per_round(scheme: str, n: int, k: int) -> int:
     raise ValueError(scheme)
 
 
-def comm_mb_per_round(scheme: str, n: int, k: int, model_bytes: int) -> float:
-    return comm_transfers_per_round(scheme, n, k) * model_bytes / 1e6
+def _resolve_model_bytes(model_bytes) -> int:
+    """``model_bytes`` may be a raw byte count or any detector spec /
+    AutoencoderConfig — sized via ``models.params.param_count`` over the
+    actual parameter tree instead of hand-rolled arithmetic."""
+    if isinstance(model_bytes, (int, float, np.integer, np.floating)):
+        return int(model_bytes)
+    return D.as_detector(model_bytes).param_bytes()
+
+
+def comm_mb_per_round(scheme: str, n: int, k: int, model_bytes) -> float:
+    return (comm_transfers_per_round(scheme, n, k)
+            * _resolve_model_bytes(model_bytes) / 1e6)
 
 
 def round_time_model(scheme: str, n: int, k: int, samples: int,
-                     model_bytes: int, flops_per_sample: float,
+                     model_bytes, flops_per_sample: float,
                      device_flops: float = 5e9, link_bw: float = 10e6
                      ) -> float:
     """Seconds per round under the paper's Section IV-A task-sequencing
     model: parallel stages take the max over participants, sequential
     stages sum.  link_bw in bytes/s (wireless-ish)."""
-    t_model = model_bytes / link_bw
+    t_model = _resolve_model_bytes(model_bytes) / link_bw
     per_dev = samples / max(n, 1) * flops_per_sample / device_flops
     if scheme == "batch":
         return samples * flops_per_sample / device_flops

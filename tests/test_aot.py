@@ -65,7 +65,7 @@ def _spec(small_ae, small_data, *, aot, shard=False):
     traces = sample_traces(np.random.default_rng(3), tcfg.topology(), 0.5,
                            max_events=8, rounds=ROUNDS, num_traces=2)
     return ExperimentSpec(
-        data=DataSpec(ae_cfg=small_ae, device_x=dx, device_counts=counts,
+        data=DataSpec(model=small_ae, device_x=dx, device_counts=counts,
                       test_x=tx, test_y=ty, name="commsml"),
         base=base,
         # one fused non-fl single bucket + one fl iso bucket + one
@@ -182,7 +182,7 @@ tcfg = dataclasses.replace(base, scheme="tolfl", num_clusters=2)
 traces = sample_traces(np.random.default_rng(5), tcfg.topology(), 0.4,
                        max_events=6, rounds=3, num_traces=2)
 spec = ExperimentSpec(
-    data=DataSpec(ae_cfg=ae, device_x=dx, device_counts=counts,
+    data=DataSpec(model=ae, device_x=dx, device_counts=counts,
                   test_x=split.test_x, test_y=split.test_y,
                   name="commsml"),
     base=base, cells=(CellSpec("tolfl", 2),),

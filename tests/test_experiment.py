@@ -59,7 +59,7 @@ def small_data():
 
 def _data_spec(small_ae, small_data):
     dx, counts, tx, ty = small_data
-    return DataSpec(ae_cfg=small_ae, device_x=dx, device_counts=counts,
+    return DataSpec(model=small_ae, device_x=dx, device_counts=counts,
                     test_x=tx, test_y=ty, name="commsml")
 
 

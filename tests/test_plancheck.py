@@ -159,7 +159,8 @@ def test_cache_key_flags_planted_missing_knob():
 @pytest.mark.parametrize(
     "cls_name,field_name",
     [("ExecPlan", f.name) for f in dataclasses.fields(campaign.ExecPlan)]
-    + [("BucketPlan", f.name) for f in dataclasses.fields(BucketPlan)])
+    + [("BucketPlan", f.name) for f in dataclasses.fields(BucketPlan)]
+    + [("DataSpec", f.name) for f in dataclasses.fields(DataSpec)])
 def test_every_exec_knob_is_keyed_or_allowlisted(cls_name, field_name):
     verdict = pc_cachekey.classify_field(cls_name, field_name)
     assert verdict in ("covered", "allowlisted"), (
@@ -304,7 +305,7 @@ def plancheck_spec(tiny_ae_cfg, tiny_split, tiny_padded):
     traces = sample_traces(np.random.default_rng(1), tcfg.topology(),
                            0.5, max_events=6, rounds=2, num_traces=1)
     return ExperimentSpec(
-        data=DataSpec(ae_cfg=tiny_ae_cfg, device_x=dx,
+        data=DataSpec(model=tiny_ae_cfg, device_x=dx,
                       device_counts=counts, test_x=tiny_split.test_x,
                       test_y=tiny_split.test_y, name="plancheck"),
         base=base,
