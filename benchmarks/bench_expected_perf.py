@@ -28,11 +28,15 @@ from typing import List, Sequence
 import numpy as np
 
 from benchmarks.datasets import base_config, data_spec, prepare
-from repro.api import (CellSpec, ExperimentSpec, SeedSpec, TraceSpec,
-                       execute, plan)
+from repro.api import (FAMILIES, CellSpec, ExperimentSpec, ProcessGrid,
+                       SeedSpec, TraceSpec, execute, family_process, plan)
 
 SCHEMES = ("tolfl", "fl", "batch")
 P_GRID = (0.0, 0.01, 0.05, 0.1, 0.2, 0.4)
+
+#: the per-family curves' scheme grid (single + multi-model baselines)
+FAMILY_SCHEMES = ("tolfl", "fl", "fedgroup", "ifca", "fesem")
+INTENSITIES = (0.05, 0.2, 0.4)
 
 
 def run(reps: int = 1, rounds: int = 40, dataset: str = "commsml",
@@ -90,5 +94,68 @@ def run_smoke(rounds: int = 8, reps: int = 1) -> List[str]:
                traces_per_p=2, scale=0.25)
 
 
+def run_families(reps: int = 1, rounds: int = 40,
+                 dataset: str = "commsml",
+                 intensities: Sequence[float] = INTENSITIES,
+                 samples: int = 4, scale: float = 1.0,
+                 trace_seed: int = 0,
+                 families: Sequence[str] = FAMILIES) -> List[str]:
+    """E[AUROC]-vs-intensity curves per generative failure family.
+
+    One spec per family: the FAMILY_SCHEMES cell grid crossed with a
+    :class:`TraceSpec` of one :class:`ProcessGrid` per intensity of the
+    family's canonical process (``family_process``).  Multi-model cells
+    report their best (starred) instance; the faulty family runs the
+    whole grid on the faulty-aware engine variants."""
+    prep = prepare(dataset, seed=0, scale=scale)
+    base = base_config(prep, rounds)
+    k_of = {"tolfl": prep.clusters, "fl": 1,
+            "fedgroup": 3, "ifca": 3, "fesem": 3}
+    lines: List[str] = []
+    for family in families:
+        spec = ExperimentSpec(
+            data=data_spec(prep), base=base,
+            cells=tuple(CellSpec(s, k_of[s]) for s in FAMILY_SCHEMES),
+            traces=TraceSpec.generated(
+                *(ProcessGrid(family_process(family, x), samples)
+                  for x in intensities),
+                sample_seed=trace_seed),
+            seeds=SeedSpec.range(reps))
+        ep = plan(spec)
+        t0 = time.time()
+        res = execute(ep)
+        per = res.per_process()
+        print(f"# {family} family {dataset}: {res.num_scenarios} "
+              f"scenarios in {len(ep.buckets)} buckets, "
+              f"{time.time()-t0:.0f}s", flush=True)
+        lines.append(f"# E[AUROC] vs intensity, {family} failure "
+                     f"process ({samples} draws x {reps} seeds per "
+                     f"point, {dataset}, {rounds} rounds)")
+        lines.append("intensity," + ",".join(FAMILY_SCHEMES))
+        for gi, x in enumerate(intensities):
+            row = [f"{x:.2f}"]
+            for cplan in ep.cells:
+                row.append(f"{np.mean(per[cplan.key][gi]):.3f}")
+            lines.append(",".join(row))
+    return lines
+
+
+def run_families_smoke(rounds: int = 6, reps: int = 1) -> List[str]:
+    """CI path: one intensity point per family, seconds-scale."""
+    return run_families(reps=reps, rounds=rounds, intensities=(0.3,),
+                        samples=2, scale=0.25)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", action="store_true",
+                    help="per-family E[AUROC]-vs-intensity curves "
+                         "instead of the rate sweep")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.families:
+        print("\n".join(run_families_smoke() if args.smoke
+                        else run_families()))
+    else:
+        print("\n".join(run_smoke() if args.smoke else run()))

@@ -18,6 +18,11 @@ runs the buckets; the per-draw result mapping comes back on the plan.
 
 Run:  PYTHONPATH=src python examples/failure_scenarios.py [--rounds 60]
       PYTHONPATH=src python examples/failure_scenarios.py --smoke
+      PYTHONPATH=src python examples/failure_scenarios.py \
+          --process {iid,markov,cascade,straggler,faulty,all}
+The --process path swaps the canonical/rate tables for generative
+failure-process studies (repro.core.processes): one E[AUROC] table per
+family, one intensity column per ProcessGrid.
 The --smoke path (CI) shrinks the grid to seconds-scale and prints the
 execution plan before running it.
 """
@@ -25,9 +30,10 @@ import argparse
 
 import numpy as np
 
-from repro.api import (NO_FAILURE, AutoencoderConfig, CellSpec, DataSpec,
-                       ExecPlan, ExperimentSpec, FailureSpec, SeedSpec,
-                       SimConfig, TraceSpec, execute, mean_ci95, plan)
+from repro.api import (FAMILIES, NO_FAILURE, AutoencoderConfig, CellSpec,
+                       DataSpec, ExecPlan, ExperimentSpec, FailureSpec,
+                       ProcessGrid, SeedSpec, SimConfig, TraceSpec, execute,
+                       family_process, mean_ci95, plan)
 from repro.data import commsml, federated
 
 SINGLE = [("Tol-FL", "tolfl", 5), ("FL", "fl", 1), ("SBT", "sbt", 10),
@@ -75,6 +81,67 @@ def build_spec(args, p_grid):
     return spec, canonical
 
 
+def build_process_spec(args, families, intensities):
+    """One generative-process study per listed family, as ONE spec per
+    family (the one-spec-per-study pattern): the schemes crossed with a
+    ProcessGrid per intensity of the family's canonical process."""
+    singles = [c for c in SINGLE if c[1] in args.single]
+    X, y = commsml.generate(seed=0, samples_per_class=args.samples)
+    split = federated.make_split(X, y, args.devices, 5,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    data = DataSpec(model=AutoencoderConfig(), device_x=dx,
+                    device_counts=counts, test_x=split.test_x,
+                    test_y=split.test_y, name="commsml")
+    specs = {}
+    for family in families:
+        specs[family] = ExperimentSpec(
+            data=data,
+            base=SimConfig(num_devices=args.devices, rounds=args.rounds,
+                           lr=1e-3),
+            cells=(tuple(CellSpec(s, k) for _, s, k in singles)
+                   + tuple(CellSpec(m, args.multi_k) for m in args.multi)),
+            traces=TraceSpec.generated(
+                *(ProcessGrid(family_process(family, x),
+                              args.traces_per_p)
+                  for x in intensities)),
+            seeds=SeedSpec.range(args.seeds),
+            exec_plan=ExecPlan(shard=args.shard,
+                               chunk_size=args.chunk_size))
+    return specs
+
+
+def run_process_study(args, intensities):
+    """--process path: one E[AUROC]-vs-intensity table per family."""
+    families = FAMILIES if args.process == "all" else [args.process]
+    specs = build_process_spec(args, families, intensities)
+    labels = {s: label for label, s, _ in SINGLE}
+    for family, spec in specs.items():
+        ep = plan(spec)
+        if args.smoke:
+            print(ep.describe())
+            print()
+        res = execute(ep)
+        per = res.per_process()
+        header = (f"{family + ' process':<12}"
+                  + "".join(f"{f'E[AUROC] x={x:.2f}':<{COL}}"
+                            for x in intensities))
+        print(header)
+        print("-" * len(header))
+        for cplan in ep.cells:
+            scheme = cplan.cfg.scheme
+            name = (scheme + "*" if cplan.kind == "multi"
+                    else labels[scheme])
+            row = f"{name:<12}"
+            for gi, _ in enumerate(intensities):
+                row += fmt(per[cplan.key][gi])
+            print(row)
+        print()
+    print("* = best single instance of a multi-model scheme; intensity "
+          "x is each family's\ncanonical probability knob "
+          "(repro.core.processes.family_process).")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
@@ -91,10 +158,17 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI path: tiny grid (seconds-scale), plan "
                          "printed before execution")
+    ap.add_argument("--process", choices=list(FAMILIES) + ["all"],
+                    default=None,
+                    help="generative failure-process study instead of "
+                         "the canonical + rate-grid tables: one "
+                         "E[AUROC]-vs-intensity table for this family "
+                         "(or every family with 'all')")
     args = ap.parse_args()
     args.single = [s for _, s, _ in SINGLE]
     args.multi, args.multi_k = MULTI, 3
     p_grid = P_GRID
+    intensities = (0.05, 0.2, 0.4)
     if args.smoke:
         # tiny grid, seconds-scale: one fused non-fl bucket (tolfl+sbt),
         # the fl fallback bucket, one multi bucket — the whole spec ->
@@ -103,6 +177,11 @@ def main():
         args.traces_per_p, args.multi, args.multi_k = 1, ["ifca"], 2
         args.single = ["tolfl", "fl", "sbt"]
         p_grid = (0.2,)
+        intensities = (0.3,)
+
+    if args.process:
+        run_process_study(args, intensities)
+        return
 
     spec, canonical = build_spec(args, p_grid)
     ep = plan(spec)          # pure: inspectable before anything runs

@@ -75,6 +75,43 @@ print("seq smoke OK:", {k: round(v["auroc_used_mean"]
                         for k, v in res.summary().items()})
 PY
 
+echo "== failure-process smoke: Markov churn + cluster cascade micro-campaign =="
+# generative fault injection end-to-end: TraceSpec.processes lowers to
+# deduplicated trace grids in plan(check=True), executes clean, and a
+# warm replay of the same spec retraces nothing (deterministic process
+# seeds -> identical traces -> identical executables)
+python - <<'PY'
+from repro.api import (AutoencoderConfig, CellSpec, ClusterCascadeProcess,
+                       DataSpec, ExperimentSpec, MarkovChurnProcess,
+                       ProcessGrid, SeedSpec, SimConfig, TraceSpec,
+                       execute, plan)
+from repro.core import campaign
+from repro.data import commsml, federated
+
+X, y = commsml.generate(seed=0, samples_per_class=40)
+split = federated.make_split(X, y, num_devices=6, num_clusters=2,
+                             anomaly_classes=[3], seed=0)
+dx, counts = federated.pad_devices(split)
+spec = ExperimentSpec(
+    data=DataSpec(model=AutoencoderConfig(), device_x=dx,
+                  device_counts=counts, test_x=split.test_x,
+                  test_y=split.test_y, name="ci-process-smoke"),
+    base=SimConfig(num_devices=6, rounds=3, lr=1e-3, dropout=False),
+    cells=(CellSpec("tolfl", 2), CellSpec("fl", 1)),
+    traces=TraceSpec.generated(
+        ProcessGrid(MarkovChurnProcess(p_fail=0.2, p_recover=0.5), 2),
+        ProcessGrid(ClusterCascadeProcess(p_head=0.8), 2)),
+    seeds=SeedSpec((0,)))
+p = plan(spec, check=True)
+assert p.static_report().clean, p.describe()
+execute(p)
+before = campaign.TRACE_COUNT
+res = execute(plan(spec))        # warm replay: bit-identical traces
+assert campaign.TRACE_COUNT == before, "retrace on warm process replay"
+print(p.describe())
+print("process smoke OK:", res.process_summary())
+PY
+
 echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
 # stash the committed baseline before --smoke overwrites it, so the
 # perf trajectory of this change is visible in the CI log below

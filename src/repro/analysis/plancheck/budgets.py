@@ -53,6 +53,10 @@ BUDGETS: Dict[str, Budget] = {
                "O(1) in max_events: one reversed argmax, never a "
                "per-slot where chain (PR 3 regression class; measured "
                "19 recursive eqns)"),
+        Budget("trace_faulty_scale", 30,
+               "the faulty-update channel reader: shadow-device twin "
+               "of trace_alive_mask, same O(1)-in-max_events shape "
+               "(measured ~20 recursive eqns)"),
         Budget("campaign_core_single", 1400,
                "static-topology single-model scenario core, whole scan "
                "body included (measured 669 / 727 with track_iso)"),

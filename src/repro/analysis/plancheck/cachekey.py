@@ -176,10 +176,16 @@ def check_cache_keys(extra_execplan_fields: Sequence[str] = (),
     # REGISTERED detector spec class joins the sweep: any body can land
     # in the key via DataSpec.model.
     from repro.configs.autoencoder_paper import AutoencoderConfig
-    from repro.core.baselines import MultiModelConfig
-    from repro.core.simulate import SimConfig
+    from repro.core.baselines import FaultyMultiModelConfig, MultiModelConfig
+    from repro.core.simulate import FaultySimConfig, SimConfig
     from repro.models.detector import spec_classes
-    for cls in ((SimConfig, MultiModelConfig, AutoencoderConfig)
+    # the Faulty* engine variants join the sweep: they reach the key as
+    # cfg whenever TraceSpec.processes needs the faulty engine, and
+    # their CLASS is the keyed bit (failure PROCESSES themselves never
+    # enter the key — they are host-side samplers lowering to traces,
+    # which travel as data arguments)
+    for cls in ((SimConfig, FaultySimConfig, MultiModelConfig,
+                 FaultyMultiModelConfig, AutoencoderConfig)
                 + spec_classes()):
         params = getattr(cls, "__dataclass_params__", None)
         if params is None or not params.frozen or not params.eq:

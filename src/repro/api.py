@@ -13,8 +13,8 @@ See :mod:`repro.core.experiment` for the spec -> plan -> execute
 contract and :mod:`repro.core.campaign` for the execution mechanism.
 """
 from repro.configs.autoencoder_paper import AutoencoderConfig
-from repro.core.baselines import (MultiModelConfig, MultiModelResult,
-                                  run_multimodel)
+from repro.core.baselines import (FaultyMultiModelConfig, MultiModelConfig,
+                                  MultiModelResult, run_multimodel)
 from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
                                  MultiCampaignResult,
                                  clear_executable_caches, mean_ci95,
@@ -33,8 +33,14 @@ from repro.core.experiment import (SINGLE_SCHEMES, BucketCompileStats,
                                    plan, run_experiment)
 from repro.core.failure import (MAX_EVENTS, NO_FAILURE, FailureEvent,
                                 FailureSpec, FailureTrace, sample_rate_grid,
-                                sample_traces)
-from repro.core.simulate import SimConfig, SimResult, run_simulation
+                                sample_traces, trace_faulty_scale)
+from repro.core.processes import (FAMILIES, ClusterCascadeProcess,
+                                  FailureProcess, FaultyUpdateProcess,
+                                  IidRateProcess, MarkovChurnProcess,
+                                  ProcessGrid, StragglerProcess,
+                                  family_process, process_seed)
+from repro.core.simulate import (FaultySimConfig, SimConfig, SimResult,
+                                 run_simulation)
 from repro.core.topology import Topology
 from repro.models.detector import (AutoencoderDetector, DetectorModel,
                                    SeqDetector, as_detector, detector_names,
@@ -60,6 +66,11 @@ __all__ = [
     # failure model
     "FailureSpec", "FailureEvent", "FailureTrace", "NO_FAILURE",
     "MAX_EVENTS", "sample_traces", "sample_rate_grid",
+    # generative failure processes (fault injection)
+    "FailureProcess", "IidRateProcess", "MarkovChurnProcess",
+    "ClusterCascadeProcess", "StragglerProcess", "FaultyUpdateProcess",
+    "ProcessGrid", "FAMILIES", "family_process", "process_seed",
+    "trace_faulty_scale", "FaultySimConfig", "FaultyMultiModelConfig",
     # legacy imperative entry points (thin shims over the pipeline)
     "run_simulation", "SimResult", "run_multimodel", "MultiModelResult",
     "run_campaign", "run_multimodel_campaign", "sweep_grid",

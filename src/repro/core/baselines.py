@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.core.failure import (Failure, FailureTrace, KIND_CODES,
                                 MAX_EVENTS, NO_FAILURE, PAD_EPOCH,
-                                trace_alive_mask)
+                                trace_alive_mask, trace_faulty_scale)
 from repro.models import detector as D
 from repro.models.detector import ModelLike
 from repro.training.metrics import auroc_batch
@@ -70,6 +70,19 @@ class MultiModelConfig:
     lr: float = 1e-4
     dropout: bool = True
     seed: int = 0
+
+
+@dataclass(frozen=True)
+class FaultyMultiModelConfig(MultiModelConfig):
+    """Faulty-update variant of the multi-model engine: per-device
+    deltas are scaled by the ORIGINAL trace's faulty channel before the
+    per-model aggregation (assignment probes stay clean — a faulty
+    device corrupts what it sends, not how it measures).  A distinct
+    frozen subclass for the same reason as
+    :class:`repro.core.simulate.FaultySimConfig`: class identity keys
+    the cached cores/fingerprints while plain-config keys stay
+    bit-identical."""
+    faulty_updates: bool = True
 
 
 @dataclass
@@ -227,6 +240,8 @@ def _build_multimodel_core(model: ModelLike, cfg: MultiModelConfig):
     N, M = cfg.num_devices, cfg.num_models
     det = D.as_detector(model)
     local_loss, grad_fn = _grad_fn(det, cfg.dropout)
+    # faulty-update gate (static, class-level — see FaultyMultiModelConfig)
+    faulty = bool(getattr(cfg, "faulty_updates", False))
 
     def core(dx, counts, valid, tx, model_valid, trace: FailureTrace,
              seed):
@@ -295,6 +310,14 @@ def _build_multimodel_core(model: ModelLike, cfg: MultiModelConfig):
                 p_cur = jax.tree.map(lambda t: t[a], models_)
                 return grad_fn(p_cur, x, v, k_)
             gs = jax.vmap(dev_grad)(dx, valid, dkeys, assign)
+            if faulty:
+                # faulty channel lives on the ORIGINAL trace's shadow
+                # device range — _split_trace PADs kind-3 rows out of
+                # both client/server splits, so read ``trace`` directly
+                fscale = trace_faulty_scale(trace, N, epoch)
+                gs = jax.tree.map(
+                    lambda g_: g_ * fscale.reshape(
+                        (-1,) + (1,) * (g_.ndim - 1)), gs)
 
             # ---- per-model weighted aggregation ----
             onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)  # (N, M)

@@ -296,8 +296,12 @@ def _exe_key(kind: str, model: ModelLike, cfg, k_pad, ndev,
     on their frozen spec.  Shapes/dtypes are deliberately NOT part of
     this key: the jit path retraces per shape inside one entry, and the
     AOT path extends the key with the abstract-argument signature
-    (``aot_executable``).  Pinned by ``tests/test_cache_semantics.py``
-    and ``tests/test_detector.py``."""
+    (``aot_executable``).  The faulty-update engine variants
+    (``FaultySimConfig`` / ``FaultyMultiModelConfig``) key through
+    ``cfg`` by CLASS IDENTITY — dataclass ``__eq__``/``repr`` include
+    the class — so faulty cores get distinct entries and fingerprints
+    while plain-config keys stay bit-identical.  Pinned by
+    ``tests/test_cache_semantics.py`` and ``tests/test_detector.py``."""
     model = canonical_model_key(model)
     if kind == "multi":
         assert k_pad is None, "multi-model cells pad M via cfg.num_models"

@@ -68,14 +68,16 @@ import numpy as np
 from repro.configs.autoencoder_paper import AutoencoderConfig
 from repro.core import campaign as _c
 from repro.core import compilecache
-from repro.core.baselines import (MultiModelConfig, as_multimodel_trace,
+from repro.core.baselines import (FaultyMultiModelConfig, MultiModelConfig,
+                                  as_multimodel_trace,
                                   prepare_multimodel_arrays)
 from repro.core.campaign import (MULTI_SCHEMES, CampaignResult, ExecPlan,
                                  MultiCampaignResult)
 from repro.core.failure import (Failure, FailureSpec, FailureTrace, as_trace,
                                 concat_traces, sample_rate_grid,
                                 stack_traces)
-from repro.core.simulate import SimConfig, _prepare_arrays
+from repro.core.processes import ProcessGrid, sample_process_grids
+from repro.core.simulate import FaultySimConfig, SimConfig, _prepare_arrays
 from repro.core.topology import Topology
 from repro.models.detector import (AutoencoderDetector, DetectorModel,
                                    ModelLike, as_detector)
@@ -219,7 +221,7 @@ def cell(scheme: str, k: int = 1, traces: Optional[Sequence[Failure]] = None,
 class TraceSpec:
     """Failure conditions of an experiment.
 
-    Two composable parts:
+    Three composable parts:
 
     * ``traces`` — explicit conditions (legacy ``FailureSpec``s or
       ``FailureTrace``s), shared by every cell (a cell may override its
@@ -235,19 +237,38 @@ class TraceSpec:
       retraining it.  ``plan()`` records the draw -> trace-index map in
       :attr:`CellPlan.draws`.
 
-    When ``p_grid`` is non-empty the explicit entries are normalised to
-    traces at the slot budget (``max_events``, default 2N — enough for
-    every device to fail AND recover); a "client" ``FailureSpec`` is
-    dropped for batch cells (batch centralises the data: there are no
-    clients), recorded as ``None`` in :attr:`CellPlan.explicit_index`.
-    Without sampling, explicit entries pass through to the engine
-    verbatim — bit-compatible with the legacy entry points."""
+    * ``processes`` — generative failure models
+      (:class:`repro.core.processes.FailureProcess`): each
+      :class:`~repro.core.processes.ProcessGrid` draws ``n_samples``
+      scenarios of its process against each cell's own topology,
+      deduplicated into the same trace pool; ``plan()`` records
+      ``{grid index: [trace index per draw]}`` in
+      :attr:`CellPlan.process_draws`.  A process with
+      ``needs_faulty_engine`` (e.g.
+      :class:`~repro.core.processes.FaultyUpdateProcess`) switches
+      every cell onto the faulty-aware engine variant.
+
+    When ``p_grid`` or ``processes`` is non-empty the explicit entries
+    are normalised to traces at the slot budget (``max_events``,
+    default 2N or the largest process default — enough for every device
+    to fail AND recover); a "client" ``FailureSpec`` is dropped for
+    batch cells (batch centralises the data: there are no clients),
+    recorded as ``None`` in :attr:`CellPlan.explicit_index`.  Without
+    sampling, explicit entries pass through to the engine verbatim —
+    bit-compatible with the legacy entry points.
+
+    Reproducibility: ALL sampling (rate grids and process grids)
+    derives from ``sample_seed`` alone — ``plan()`` builds fresh
+    generators from it (per cell for ``p_grid``; per (process, draw)
+    via :func:`repro.core.processes.process_seed`), so equal specs
+    lower to bit-identical trace grids in any process or session."""
     traces: Tuple[Failure, ...] = ()
     p_grid: Tuple[float, ...] = ()
     traces_per_p: int = 4
     recover_prob: float = 0.5
     sample_seed: int = 0
     max_events: Optional[int] = None
+    processes: Tuple[ProcessGrid, ...] = ()
 
     @staticmethod
     def explicit(*traces: Failure) -> "TraceSpec":
@@ -261,6 +282,15 @@ class TraceSpec:
         return TraceSpec(traces=tuple(base), p_grid=tuple(p_grid),
                          traces_per_p=traces_per_p,
                          recover_prob=recover_prob,
+                         sample_seed=sample_seed, max_events=max_events)
+
+    @staticmethod
+    def generated(*grids: ProcessGrid, base: Sequence[Failure] = (),
+                  sample_seed: int = 0,
+                  max_events: Optional[int] = None) -> "TraceSpec":
+        """A spec of generative failure-process grids (plus optional
+        explicit base conditions)."""
+        return TraceSpec(traces=tuple(base), processes=tuple(grids),
                          sample_seed=sample_seed, max_events=max_events)
 
 
@@ -313,6 +343,8 @@ class CellPlan:
     explicit_index: Dict[int, Optional[int]]   # explicit pos -> trace idx
     draws: Dict[float, List[int]]   # rate p -> one trace idx per draw
     num_scenarios: int              # len(traces) * len(seeds)
+    #: process-grid index -> one trace idx per draw (TraceSpec.processes)
+    process_draws: Dict[int, List[int]] = field(default_factory=dict)
 
     @property
     def key(self) -> Any:
@@ -419,14 +451,15 @@ class ExecutionPlan:
 # ---------------------------------------------------------------------------
 def _resolve_cell_traces(spec: ExperimentSpec, cspec: CellSpec,
                          cfg, kind: str, shared_explicit: Sequence[Failure]):
-    """(traces, explicit_index, draws) of one cell per the TraceSpec."""
+    """(traces, explicit_index, draws, process_draws) of one cell per
+    the TraceSpec."""
     ts = spec.traces
     explicit = (list(cspec.traces) if cspec.traces is not None
                 else shared_explicit)
-    if not ts.p_grid:
+    if not ts.p_grid and not ts.processes:
         # verbatim pass-through: no normalisation, no dedup — the
         # legacy-compatible path every shim rides
-        return explicit, {j: j for j in range(len(explicit))}, {}
+        return explicit, {j: j for j in range(len(explicit))}, {}, {}
 
     if kind == "single":
         topo = cfg.topology()
@@ -438,7 +471,12 @@ def _resolve_cell_traces(spec: ExperimentSpec, cspec: CellSpec,
         topo = Topology(cfg.num_devices, 1)
         n = cfg.num_devices
         rounds = cfg.rounds
-    max_events = ts.max_events or 2 * n
+    # one cell-wide slot budget so every trace in the pool stacks: the
+    # rate-grid default (2N) or the largest process default, whichever
+    # is bigger (markov churn wants 4N for repeated outages)
+    max_events = ts.max_events or max(
+        [2 * n] + [pg.process.default_max_events(topo)
+                   for pg in ts.processes])
 
     base_traces: List[FailureTrace] = []
     explicit_index: Dict[int, Optional[int]] = {}
@@ -461,7 +499,25 @@ def _resolve_cell_traces(spec: ExperimentSpec, cspec: CellSpec,
                                      max_events=max_events,
                                      recover_prob=ts.recover_prob,
                                      base_traces=base_traces)
-    return traces, explicit_index, draws
+    process_draws = sample_process_grids(ts.processes, topo, rounds,
+                                         ts.sample_seed, max_events,
+                                         traces)
+    return traces, explicit_index, draws, process_draws
+
+
+def _faulty_variant(cfg):
+    """The faulty-update engine twin of a resolved cell config
+    (idempotent).  Subclass swap, not a field: plain-config reprs —
+    and therefore every existing executable-cache key and persisted
+    fingerprint — stay bit-identical, while the faulty cores key and
+    bucket separately by class identity (``dataclasses.replace`` in
+    the bucket grouping below preserves the subclass)."""
+    if isinstance(cfg, (FaultySimConfig, FaultyMultiModelConfig)):
+        return cfg
+    cls = (FaultyMultiModelConfig if isinstance(cfg, MultiModelConfig)
+           else FaultySimConfig)
+    return cls(**{f.name: getattr(cfg, f.name)
+                  for f in dataclasses.fields(cfg)})
 
 
 def _geometry(bucket: BucketPlan, exec_plan: Optional[ExecPlan]) -> None:
@@ -501,11 +557,15 @@ def plan(spec: ExperimentSpec, check: bool = False) -> ExecutionPlan:
         raise ValueError("empty campaign: need >=1 trace and >=1 seed")
 
     shared_explicit = list(spec.traces.traces)
+    needs_faulty = any(pg.process.needs_faulty_engine
+                       for pg in spec.traces.processes)
     cells: List[CellPlan] = []
     for i, cspec in enumerate(spec.cells):
         kind = cspec.kind            # validates the scheme
         cfg = cspec.resolve(spec.base)
-        traces, explicit_index, draws = _resolve_cell_traces(
+        if needs_faulty:
+            cfg = _faulty_variant(cfg)
+        traces, explicit_index, draws, process_draws = _resolve_cell_traces(
             spec, cspec, cfg, kind, shared_explicit)
         if len(traces) == 0:
             raise ValueError("empty campaign: need >=1 trace and "
@@ -513,7 +573,8 @@ def plan(spec: ExperimentSpec, check: bool = False) -> ExecutionPlan:
         cells.append(CellPlan(
             index=i, spec=cspec, cfg=cfg, kind=kind, traces=traces,
             explicit_index=explicit_index, draws=draws,
-            num_scenarios=len(traces) * len(spec.seeds.seeds)))
+            num_scenarios=len(traces) * len(spec.seeds.seeds),
+            process_draws=process_draws))
 
     buckets: List[BucketPlan] = []
     fused_mode = spec.fuse and spec.pad_k
@@ -759,9 +820,50 @@ class ExperimentResult:
         return self.per_cell()[key]
 
     def summary(self) -> Dict[Any, Dict[str, float]]:
-        """{cell key: that cell's summary dict} (see the result types)."""
-        return {c.key: r.summary()
-                for c, r in zip(self.plan.cells, self.results)}
+        """{cell key: that cell's summary dict} (see the result types).
+
+        Cells planned from ``TraceSpec.processes`` additionally carry
+        per-process-family keys ``E[auroc] <family>[<grid idx>]`` (the
+        Monte-Carlo mean over that grid's draws x seeds); process-free
+        cells are untouched."""
+        out = {}
+        for c, r in zip(self.plan.cells, self.results):
+            s = dict(r.summary())
+            if c.process_draws:
+                procs = self.plan.spec.traces.processes
+                for gi, aurocs in self._cell_process(c, r).items():
+                    fam = procs[gi].process.family
+                    s[f"E[auroc] {fam}[{gi}]"] = float(np.mean(aurocs))
+            out[c.key] = s
+        return out
+
+    @staticmethod
+    def _cell_process(c: CellPlan, r) -> Dict[int, np.ndarray]:
+        """{grid index: per-(draw x seed) AUROCs} of one cell."""
+        sel = (r.select if isinstance(r, CampaignResult)
+               else (lambda i: r.select(i, "best")))
+        return {gi: np.concatenate([np.asarray(sel(i)) for i in idxs])
+                for gi, idxs in c.process_draws.items()}
+
+    def per_process(self) -> Dict[Any, Dict[int, np.ndarray]]:
+        """{cell key: {process-grid index: AUROC per draw x seed}} —
+        the per-process-family axis of the result.  Duplicated draws
+        repeat their deduplicated trace's values, so means equal the
+        undeduplicated Monte-Carlo estimate (same contract as
+        ``CellPlan.draws``).  Multi-model cells report their "best"
+        (starred) AUROC."""
+        return {c.key: self._cell_process(c, r)
+                for c, r in zip(self.plan.cells, self.results)
+                if c.process_draws}
+
+    def process_summary(self) -> Dict[Any, Dict[str, float]]:
+        """{cell key: {"<family>[<grid idx>]": E[AUROC]}} — the
+        flattened per-family expected-performance table."""
+        procs = self.plan.spec.traces.processes
+        return {key: {f"{procs[gi].process.family}[{gi}]":
+                      float(np.mean(aurocs))
+                      for gi, aurocs in cell.items()}
+                for key, cell in self.per_process().items()}
 
     def to_rows(self) -> List[Dict[str, Any]]:
         """One tidy dict per scenario — the benches' CSV fodder."""

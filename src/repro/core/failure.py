@@ -42,8 +42,13 @@ MAX_EVENTS = 8
 #: sentinel epoch for unused event slots — never fires
 PAD_EPOCH = 1 << 30
 #: event-kind codes carried in the trace arrays (baselines interpret
-#: "server" events as aggregator death because they have no head devices)
-KIND_CODES = {"none": 0, "client": 1, "server": 2}
+#: "server" events as aggregator death because they have no head devices).
+#: "faulty" events (FedFm-style corrupted updates) live on a SHADOW
+#: device range [N, 2N) with the delta scale in the alive_after channel:
+#: alive masks compare devices == arange(N) and never match them, so
+#: they are inert except under the faulty-aware engine variants, which
+#: read them back via :func:`trace_faulty_scale`.
+KIND_CODES = {"none": 0, "client": 1, "server": 2, "faulty": 3}
 
 
 @dataclass(frozen=True)
@@ -149,6 +154,9 @@ def as_trace(failure: Failure, topo: Topology,
 
 def stack_traces(traces: Sequence[FailureTrace]) -> FailureTrace:
     """Stack same-shape traces on a leading axis for ``vmap``."""
+    if not traces:
+        raise ValueError("stack_traces: empty trace list — a batch "
+                         "needs at least one trace")
     ms = {t.max_events for t in traces}
     assert len(ms) == 1, f"mixed max_events: {ms}"
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
@@ -160,6 +168,9 @@ def concat_traces(batches: Sequence[FailureTrace]) -> FailureTrace:
     per-cell batches of a grid into one with this (the batches must
     share ``max_events``; pass every trace through the same slot budget
     before stacking)."""
+    if not batches:
+        raise ValueError("concat_traces: empty batch list — nothing to "
+                         "concatenate")
     ms = {t.max_events for t in batches}
     assert len(ms) == 1, f"mixed max_events: {ms}"
     if len(batches) == 1:
@@ -295,6 +306,26 @@ def trace_alive_mask(trace: FailureTrace, num_devices: int, epoch: jax.Array
     any_fired = jnp.any(fired, axis=0)                     # (N,)
     # argmax on the reversed slot axis -> index of the LAST fired slot
     # (ties between same-epoch slots keep the list-order contract)
+    last = (trace.max_events - 1) - jnp.argmax(fired[::-1], axis=0)
+    return jnp.where(any_fired, trace.alive_after[last],
+                     jnp.ones((num_devices,), jnp.float32))
+
+
+def trace_faulty_scale(trace: FailureTrace, num_devices: int,
+                       epoch: jax.Array) -> jax.Array:
+    """(num_devices,) per-device delta scale at ``epoch`` (traced).
+
+    The faulty-update channel: kind-3 events target shadow device ids
+    ``N + d`` and carry the transmitted-delta scale in ``alive_after``
+    (1.0 = clean).  Structurally :func:`trace_alive_mask` against the
+    shadow range — same reversed-argmax last-event-wins, same O(1)
+    graph size in ``max_events`` (named budget ``"trace_faulty_scale"``
+    in ``plancheck.budgets``).  Traces without faulty events yield all
+    ones, so the faulty-aware cores are no-ops on ordinary grids."""
+    shadow = num_devices + jnp.arange(num_devices)
+    fired = ((epoch >= trace.epochs)[:, None]              # (M, N)
+             & (trace.devices[:, None] == shadow[None, :]))
+    any_fired = jnp.any(fired, axis=0)                     # (N,)
     last = (trace.max_events - 1) - jnp.argmax(fired[::-1], axis=0)
     return jnp.where(any_fired, trace.alive_after[last],
                      jnp.ones((num_devices,), jnp.float32))

@@ -1,0 +1,377 @@
+"""Generative failure processes: declarative fault injection.
+
+A :class:`FailureProcess` is a frozen, hashable spec of a *stochastic
+failure model* — not a scenario, a distribution over scenarios.  Each
+process is a pure host-side sampler ``sample(rng, topo, n_rounds) ->
+FailureTrace``: it lowers to the exact same fixed-shape
+:class:`repro.core.failure.FailureTrace` arrays the jitted campaign
+engine already sweeps, so declaring a process changes WHAT scenarios a
+campaign draws, never what it compiles.  The families:
+
+* :class:`IidRateProcess` — every device independently fails once at a
+  uniform epoch (subsumes today's ``TraceSpec.p_grid``; same sampler).
+* :class:`MarkovChurnProcess` — per-device two-state fail/recover
+  chain, i.e. bursty outages with geometric up/down times ("Keep It
+  Simple": unreliable clients, not just dead ones).
+* :class:`ClusterCascadeProcess` — a head failure takes its members
+  down with probability ``q`` and the cluster staggers back — the
+  cascade from the paper's own motivation.
+* :class:`StragglerProcess` — flaky clients miss a contiguous window
+  of rounds via PAIRED failure+recovery events; they never die.
+* :class:`FaultyUpdateProcess` — FedFm-style corrupted deltas: marked
+  devices stay alive but transmit scaled/garbled updates for a window.
+
+Faulty-update lowering: faulty events ride the SAME trace arrays on a
+shadow device range ``[N, 2N)`` with kind code ``KIND_CODES["faulty"]``
+and the delta scale in the ``alive_after`` float channel.  Alive masks
+compare ``devices == arange(N)`` and therefore never match a shadow
+row, so traces carrying faulty events are inert in every existing
+core; only the faulty-aware engine variants
+(:class:`repro.core.simulate.FaultySimConfig` /
+:class:`repro.core.baselines.FaultyMultiModelConfig`) read the channel
+back via :func:`repro.core.failure.trace_faulty_scale`.
+
+Reproducibility: a process draw's numpy generator derives from
+``(sample_seed, repr(process), draw index)`` via SHA-256
+(:func:`process_seed`) — never Python's salted ``hash`` — so equal
+specs lower to bit-identical trace grids in any process, pinned by
+``tests/test_processes.py``.
+
+Slot budgets: like :func:`repro.core.failure.sample_traces`, samplers
+degrade gracefully near ``max_events`` — device/cluster order is
+shuffled first and events pack group-wise so no trace ever ends on a
+dangling recovery (:func:`_pack_groups`); stragglers pack all-or-
+nothing per device because a lone failure would change their semantics
+from "misses a window" to "dies".
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.failure import (KIND_CODES, PAD_EPOCH, FailureTrace,
+                                _trace_key, sample_traces)
+from repro.core.topology import Topology
+
+#: (epoch, device, alive_after/scale, kind_code) — the raw row form the
+#: samplers emit; shadow-device and scale-carrying rows have no
+#: FailureEvent equivalent, hence this bypass of ``from_events``.
+Row = Tuple[int, int, float, int]
+
+#: canonical family names, the order benches/examples sweep them in
+FAMILIES = ("iid", "markov", "cascade", "straggler", "faulty")
+
+
+def trace_from_rows(rows: Sequence[Row], max_events: int) -> FailureTrace:
+    """Pack raw event rows into a trace (stable epoch sort, PAD fill).
+
+    The row form carries device ids and alive/scale values verbatim —
+    unlike ``FailureTrace.from_events`` it can express shadow-device
+    faulty rows and fractional scales.  Same tie-break contract:
+    same-epoch rows apply in list order, the last-listed wins."""
+    assert len(rows) <= max_events, (len(rows), max_events)
+    rows = sorted(rows, key=lambda r: r[0])    # stable
+    ep = np.full((max_events,), PAD_EPOCH, np.int32)
+    dev = np.full((max_events,), -1, np.int32)
+    alv = np.ones((max_events,), np.float32)
+    knd = np.zeros((max_events,), np.int32)
+    for j, (e, d, a, k) in enumerate(rows):
+        ep[j], dev[j], alv[j], knd[j] = e, d, a, k
+    return FailureTrace(jnp.asarray(ep), jnp.asarray(dev),
+                        jnp.asarray(alv), jnp.asarray(knd))
+
+
+def _pack_groups(groups: Sequence[Sequence[Row]], max_events: int,
+                 pairs_only: bool = False) -> List[Row]:
+    """Pack per-device/cluster event groups into a slot budget.
+
+    Each group lists one device's (or one cascade's) events with every
+    recovery AFTER its failure in list order, so any prefix is a valid
+    history — truncating a group keeps the failure and drops only the
+    recovery, exactly ``sample_traces``' degradation rule.  With
+    ``pairs_only`` a group is kept whole or dropped whole (straggler
+    semantics: a window-miss must never truncate into a death).  The
+    caller shuffles the group order first so truncation is unbiased."""
+    rows: List[Row] = []
+    for g in groups:
+        free = max_events - len(rows)
+        if free <= 0:
+            break
+        if pairs_only:
+            if len(g) <= free:
+                rows.extend(g)
+        else:
+            rows.extend(list(g)[:free])
+    return rows
+
+
+@dataclass(frozen=True)
+class FailureProcess:
+    """Base spec: a pure host-side sampler of failure scenarios.
+
+    Subclasses are frozen hashable dataclasses (their fields ARE the
+    process identity — ``repr`` feeds :func:`process_seed`) and
+    override :meth:`sample`.  ``needs_faulty_engine`` marks families
+    whose traces only take effect under the faulty-aware engine
+    variants; ``plan()`` swaps configs accordingly."""
+    family: ClassVar[str] = "process"
+    needs_faulty_engine: ClassVar[bool] = False
+
+    def default_max_events(self, topo: Topology) -> int:
+        """Slot budget when ``TraceSpec.max_events`` is unset — enough
+        for every device to fail and recover once (matches
+        ``sample_rate_grid``'s default)."""
+        return 2 * topo.num_devices
+
+    def sample(self, rng: np.random.Generator, topo: Topology,
+               n_rounds: int,
+               max_events: Optional[int] = None) -> FailureTrace:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class IidRateProcess(FailureProcess):
+    """Every device independently fails with probability ``p`` at a
+    uniform epoch, recovering later with ``recover_prob`` — exactly the
+    ``TraceSpec.p_grid`` sampler (:func:`failure.sample_traces`, byte-
+    identical draws given the same generator state), lifted to a
+    process so rate sweeps and generative sweeps share one axis."""
+    p: float = 0.2
+    recover_prob: float = 0.5
+    family: ClassVar[str] = "iid"
+
+    def sample(self, rng, topo, n_rounds, max_events=None):
+        m = max_events or self.default_max_events(topo)
+        return sample_traces(rng, topo, self.p, max_events=m,
+                             rounds=n_rounds, num_traces=1,
+                             recover_prob=self.recover_prob)[0]
+
+
+@dataclass(frozen=True)
+class MarkovChurnProcess(FailureProcess):
+    """Per-device two-state Markov chain: an alive device fails with
+    ``p_fail`` per round, a dead one recovers with ``p_recover`` —
+    geometric burst lengths, possibly many outages per device (bursty
+    churn rather than one-shot death).  Each device's whole chain is
+    drawn before packing, so slot-budget truncation of one device never
+    shifts another's stream."""
+    p_fail: float = 0.05
+    p_recover: float = 0.25
+    family: ClassVar[str] = "markov"
+
+    def default_max_events(self, topo):
+        return 4 * topo.num_devices     # room for repeated outages
+
+    def sample(self, rng, topo, n_rounds, max_events=None):
+        m = max_events or self.default_max_events(topo)
+        head_set = set(topo.heads)
+        order = np.arange(topo.num_devices)
+        rng.shuffle(order)
+        groups = []
+        for d in order:
+            kind = KIND_CODES["server" if int(d) in head_set else "client"]
+            u = rng.random(n_rounds)
+            alive, g = True, []
+            for r in range(n_rounds):
+                if alive and u[r] < self.p_fail:
+                    g.append((r, int(d), 0.0, kind))
+                    alive = False
+                elif not alive and u[r] < self.p_recover:
+                    g.append((r, int(d), 1.0, kind))
+                    alive = True
+            if g:
+                groups.append(g)
+        return trace_from_rows(_pack_groups(groups, m), m)
+
+
+@dataclass(frozen=True)
+class ClusterCascadeProcess(FailureProcess):
+    """Correlated cluster-level outage — the paper's cascade scenario.
+
+    Each cluster's head fails with ``p_head`` at a uniform epoch ``e``
+    (a *server* event: the whole cluster already leaves training);
+    each member then physically cascades down at ``e + 1`` with
+    probability ``q`` (client events — they stay dead even if the head
+    returns).  With ``recover_prob`` the cluster staggers back: head at
+    ``e + recovery_lag``, then members one per ``stagger`` rounds, any
+    recovery past the horizon dropped."""
+    p_head: float = 0.2
+    q: float = 0.9
+    recover_prob: float = 0.5
+    recovery_lag: int = 5
+    stagger: int = 1
+    family: ClassVar[str] = "cascade"
+
+    def sample(self, rng, topo, n_rounds, max_events=None):
+        m = max_events or self.default_max_events(topo)
+        lag = max(1, int(self.recovery_lag))
+        stag = max(1, int(self.stagger))
+        order = np.arange(topo.num_clusters)
+        rng.shuffle(order)
+        groups = []
+        for c in order:
+            members = topo.clusters[int(c)]
+            head = int(members[0])
+            if rng.random() >= self.p_head:
+                continue
+            e = int(rng.integers(n_rounds))
+            g = [(e, head, 0.0, KIND_CODES["server"])]
+            fell = []
+            for d in members[1:]:
+                if rng.random() < self.q:
+                    g.append((min(e + 1, n_rounds - 1), int(d), 0.0,
+                              KIND_CODES["client"]))
+                    fell.append(int(d))
+            rec = e + lag
+            if rng.random() < self.recover_prob and rec < n_rounds:
+                g.append((rec, head, 1.0, KIND_CODES["server"]))
+                for i, d in enumerate(fell):
+                    rr = rec + stag * (i + 1)
+                    if rr < n_rounds:
+                        g.append((rr, d, 1.0, KIND_CODES["client"]))
+            groups.append(g)
+        return trace_from_rows(_pack_groups(groups, m), m)
+
+
+@dataclass(frozen=True)
+class StragglerProcess(FailureProcess):
+    """Flaky clients: with probability ``p`` a device misses a
+    contiguous ``window`` of rounds via a PAIRED (fail@e, recover@e+w)
+    — it always comes back, never dies ("Keep It Simple"'s unreliable-
+    client regime).  The window is clipped so recovery lands inside the
+    horizon, and packing is all-or-nothing per device: under slot
+    pressure a straggler is dropped entirely rather than truncated
+    into a permanent death."""
+    p: float = 0.3
+    window: int = 5
+    family: ClassVar[str] = "straggler"
+
+    def sample(self, rng, topo, n_rounds, max_events=None):
+        m = max_events or self.default_max_events(topo)
+        if n_rounds < 2:        # no room for a window that returns
+            return FailureTrace.none(m)
+        w = max(1, min(int(self.window), n_rounds - 1))
+        head_set = set(topo.heads)
+        order = np.arange(topo.num_devices)
+        rng.shuffle(order)
+        groups = []
+        for d in order:
+            if rng.random() >= self.p:
+                continue
+            e = int(rng.integers(n_rounds - w))    # recover at e+w < rounds
+            kind = KIND_CODES["server" if int(d) in head_set else "client"]
+            groups.append([(e, int(d), 0.0, kind),
+                           (e + w, int(d), 1.0, kind)])
+        return trace_from_rows(_pack_groups(groups, m, pairs_only=True), m)
+
+
+@dataclass(frozen=True)
+class FaultyUpdateProcess(FailureProcess):
+    """FedFm-style faulty updates: with probability ``p`` a device's
+    transmitted deltas are scaled by ``scale`` from a uniform epoch on
+    (for ``window`` rounds if set, else to the end) while the device
+    stays fully alive — corruption, not death.  Lowers to shadow-device
+    rows (``N + d``, kind ``"faulty"``, scale in the alive channel):
+    inert everywhere except the faulty-aware engine variants, which
+    read them back with ``trace_faulty_scale``."""
+    p: float = 0.2
+    scale: float = -1.0
+    window: Optional[int] = None
+    family: ClassVar[str] = "faulty"
+    needs_faulty_engine: ClassVar[bool] = True
+
+    def sample(self, rng, topo, n_rounds, max_events=None):
+        m = max_events or self.default_max_events(topo)
+        n = topo.num_devices
+        faulty = KIND_CODES["faulty"]
+        order = np.arange(n)
+        rng.shuffle(order)
+        groups = []
+        for d in order:
+            if rng.random() >= self.p:
+                continue
+            e = int(rng.integers(n_rounds))
+            g = [(e, n + int(d), float(self.scale), faulty)]
+            if self.window is not None and e + int(self.window) < n_rounds:
+                g.append((e + int(self.window), n + int(d), 1.0, faulty))
+            groups.append(g)
+        return trace_from_rows(_pack_groups(groups, m), m)
+
+
+@dataclass(frozen=True)
+class ProcessGrid:
+    """One generative axis of a ``TraceSpec``: ``n_samples`` Monte-
+    Carlo draws of ``process``, deduplicated against the cell's whole
+    trace pool at plan time."""
+    process: FailureProcess
+    n_samples: int = 4
+
+    def __post_init__(self):
+        assert self.n_samples >= 1, self.n_samples
+
+
+def process_seed(sample_seed: int, process: FailureProcess,
+                 draw: int) -> int:
+    """Deterministic per-draw numpy seed from (spec seed, process
+    identity, draw index) — SHA-256 of the dataclass repr, because
+    Python's ``hash`` is salted per interpreter and would break the
+    identical-traces-across-processes contract."""
+    msg = f"{sample_seed}|{process!r}|{draw}".encode()
+    return int.from_bytes(hashlib.sha256(msg).digest()[:8], "little")
+
+
+def sample_process_grids(processes: Sequence[ProcessGrid], topo: Topology,
+                         rounds: int, sample_seed: int, max_events: int,
+                         traces: List[FailureTrace]
+                         ) -> Dict[int, List[int]]:
+    """Lower process grids into a cell's trace pool (in place).
+
+    Appends each distinct draw to ``traces`` (dedup by trace bytes
+    against everything already there — an all-none draw aliases a
+    no-failure base trace instead of retraining) and returns
+    ``{grid index: [trace index per draw]}``, the generative twin of
+    ``sample_rate_grid``'s ``draws``.  Every draw gets a FRESH
+    generator from :func:`process_seed`, so grids replay bit-identical
+    regardless of draw order or what else the spec samples."""
+    idx_of: dict = {}
+    for i, t in enumerate(traces):
+        idx_of.setdefault(_trace_key(t), i)
+    out: Dict[int, List[int]] = {}
+    for gi, pg in enumerate(processes):
+        idxs = []
+        for draw in range(pg.n_samples):
+            rng = np.random.default_rng(
+                process_seed(sample_seed, pg.process, draw))
+            t = pg.process.sample(rng, topo, rounds, max_events=max_events)
+            assert t.max_events == max_events, (t.max_events, max_events)
+            key = _trace_key(t)
+            if key not in idx_of:
+                idx_of[key] = len(traces)
+                traces.append(t)
+            idxs.append(idx_of[key])
+        out[gi] = idxs
+    return out
+
+
+def family_process(family: str, intensity: float) -> FailureProcess:
+    """The canonical process of ``family`` at ``intensity`` in [0, 1]
+    — the one knob the per-family E[AUROC] curves sweep (benches and
+    ``examples/failure_scenarios.py --process``).  Intensity maps to
+    each family's headline probability; markov scales the per-round
+    hazard down by 10x so a full sweep spans comparable outage mass."""
+    if family == "iid":
+        return IidRateProcess(p=intensity)
+    if family == "markov":
+        return MarkovChurnProcess(p_fail=0.1 * intensity, p_recover=0.25)
+    if family == "cascade":
+        return ClusterCascadeProcess(p_head=intensity)
+    if family == "straggler":
+        return StragglerProcess(p=intensity)
+    if family == "faulty":
+        return FaultyUpdateProcess(p=intensity)
+    raise ValueError(f"unknown process family {family!r}; "
+                     f"one of {FAMILIES}")

@@ -42,7 +42,8 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.failure import (Failure, FailureTrace, NO_FAILURE, as_trace,
-                                effective_weights_arrays, trace_alive_mask)
+                                effective_weights_arrays, trace_alive_mask,
+                                trace_faulty_scale)
 from repro.core.topology import Topology
 from repro.models import detector as D
 from repro.models.detector import ModelLike
@@ -69,6 +70,24 @@ class SimConfig:
         if self.scheme == "sbt":
             return Topology(self.num_devices, self.num_devices)
         return Topology(self.num_devices, self.num_clusters)
+
+
+@dataclass(frozen=True)
+class FaultySimConfig(SimConfig):
+    """The faulty-update engine variant: identical training except the
+    TRANSMITTED per-device deltas are scaled by the trace's faulty
+    channel (:func:`repro.core.failure.trace_faulty_scale`) before the
+    hierarchical combine — FedFm-style corrupted updates from devices
+    that are otherwise alive.  Local/isolated training stays clean (the
+    corruption happens on the wire, not on the device).
+
+    A distinct SUBCLASS rather than a ``SimConfig`` field on purpose:
+    dataclass ``__eq__``/``repr`` include the class, so faulty cores
+    get their own cached-core and executable-fingerprint entries while
+    every plain-config key and persisted fingerprint stays
+    bit-identical.  ``plan()`` swaps cells onto this class whenever a
+    ``TraceSpec`` declares a process with ``needs_faulty_engine``."""
+    faulty_updates: bool = True
 
 
 @dataclass
@@ -147,6 +166,9 @@ def _build_core_arrays(model: ModelLike, cfg: SimConfig,
     k = num_clusters
     det = D.as_detector(model)
     delta_fn = _local_delta_fn(det, cfg)
+    # faulty-update engine gate: static (class-level), so plain configs
+    # trace the byte-identical graph they always did
+    faulty = bool(getattr(cfg, "faulty_updates", False))
 
     def core(dx, counts, valid, tx, cluster_ids, heads, head_valid,
              trace: FailureTrace, seed):
@@ -188,9 +210,18 @@ def _build_core_arrays(model: ModelLike, cfg: SimConfig,
             else:
                 gs = jax.vmap(delta_fn, in_axes=(None, 0, 0, 0))(
                     params, dx, valid, dkeys)
+            gs_tx = gs
+            if faulty:
+                # corrupt the TRANSMITTED deltas only: the isolated
+                # fallback below keeps the clean ``gs`` (faulty devices
+                # train fine locally, they just send garbage)
+                fscale = trace_faulty_scale(trace, N, epoch)
+                gs_tx = jax.tree.map(
+                    lambda g_: g_ * fscale.reshape(
+                        (-1,) + (1,) * (g_.ndim - 1)), gs)
             ns = counts * w
             # ---- Tol-FL hierarchical combine (Algorithm 1) ----
-            cluster_gs, n_c = agg.cluster_reduce(gs, ns, cluster_ids, k)
+            cluster_gs, n_c = agg.cluster_reduce(gs_tx, ns, cluster_ids, k)
             if cfg.combine == "streaming":
                 n_tot, g = agg.stacked_streaming_mean(cluster_gs, n_c)
             else:

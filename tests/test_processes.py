@@ -1,0 +1,476 @@
+"""Generative failure processes (``repro.core.processes``).
+
+Covers the fault-injection layer end to end: per-family sampler
+invariants (well-formedness, slot-budget degradation, straggler
+pairing), deterministic seed derivation (equal specs -> bit-identical
+trace grids), the faulty-update engine channel
+(``trace_faulty_scale`` + ``FaultySimConfig``/
+``FaultyMultiModelConfig``), plan()-level lowering (dedup,
+``CellPlan.process_draws``, the per-process-family result axis), the
+executable-cache-key class-identity contract, and the
+``concat_traces``/zero-event/recovery-at-round-0 edge cases.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.autoencoder_paper import AutoencoderConfig
+from repro.core import campaign
+from repro.core.baselines import FaultyMultiModelConfig, MultiModelConfig
+from repro.core.experiment import (CellSpec, DataSpec, ExperimentSpec,
+                                   SeedSpec, TraceSpec, execute, plan)
+from repro.core.failure import (KIND_CODES, PAD_EPOCH, FailureTrace,
+                                NO_FAILURE, concat_traces,
+                                effective_weights, stack_traces,
+                                trace_alive_mask, trace_faulty_scale)
+from repro.core.processes import (FAMILIES, ClusterCascadeProcess,
+                                  FailureProcess, FaultyUpdateProcess,
+                                  IidRateProcess, MarkovChurnProcess,
+                                  ProcessGrid, StragglerProcess,
+                                  _pack_groups, family_process,
+                                  process_seed, trace_from_rows)
+from repro.core.simulate import FaultySimConfig, SimConfig, run_simulation
+from repro.core.topology import Topology
+from repro.data import commsml, federated
+
+TOPO = Topology(6, 2)
+ROUNDS = 20
+
+ALL_PROCESSES = (IidRateProcess(p=0.5),
+                 MarkovChurnProcess(p_fail=0.15, p_recover=0.4),
+                 ClusterCascadeProcess(p_head=0.7),
+                 StragglerProcess(p=0.6, window=4),
+                 FaultyUpdateProcess(p=0.5, scale=-1.0, window=5))
+
+
+def sample(proc: FailureProcess, seed: int = 0, topo: Topology = TOPO,
+           rounds: int = ROUNDS, max_events=None) -> FailureTrace:
+    rng = np.random.default_rng(seed)
+    return proc.sample(rng, topo, rounds, max_events=max_events)
+
+
+def rows_of(t: FailureTrace):
+    """Real (epoch, device, alive_after, kind) rows of a trace."""
+    ep, dev = np.asarray(t.epochs), np.asarray(t.devices)
+    alv, knd = np.asarray(t.alive_after), np.asarray(t.kinds)
+    real = ep < PAD_EPOCH
+    return list(zip(ep[real].tolist(), dev[real].tolist(),
+                    alv[real].tolist(), knd[real].tolist()))
+
+
+def assert_well_formed(t: FailureTrace, topo: Topology, rounds: int):
+    """Shared sampler contract: sorted real rows, PAD tail, in-range
+    epochs, device ids in [0, N) or the shadow range [N, 2N) for kind-3
+    rows, never a recovery before its device's first failure."""
+    ep = np.asarray(t.epochs)
+    real = ep < PAD_EPOCH
+    n_real = int(real.sum())
+    assert real[:n_real].all() and not real[n_real:].any()  # PAD tail
+    assert (np.diff(ep[:n_real]) >= 0).all()                # sorted
+    n = topo.num_devices
+    first_seen: dict = {}
+    for e, d, a, k in rows_of(t):
+        assert 0 <= e < rounds
+        if k == KIND_CODES["faulty"]:
+            assert n <= d < 2 * n
+        else:
+            assert 0 <= d < n
+            assert k in (KIND_CODES["client"], KIND_CODES["server"])
+        if d not in first_seen:
+            # a device's FIRST event is never a recovery (dangling)
+            assert a == 0.0 or k == KIND_CODES["faulty"], (d, a, k)
+            first_seen[d] = a
+
+
+# ---------------------------------------------------------------------------
+# samplers: well-formedness, determinism, slot-budget degradation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("proc", ALL_PROCESSES,
+                         ids=[p.family for p in ALL_PROCESSES])
+def test_sampler_well_formed_and_deterministic(proc):
+    for seed in range(8):
+        t = sample(proc, seed)
+        assert t.max_events == proc.default_max_events(TOPO)
+        assert_well_formed(t, TOPO, ROUNDS)
+    a, b = sample(proc, 3), sample(proc, 3)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_markov_tiny_budget_never_dangles_a_recovery():
+    proc = MarkovChurnProcess(p_fail=0.5, p_recover=0.9)
+    for seed in range(12):
+        t = sample(proc, seed, max_events=3)
+        assert_well_formed(t, TOPO, ROUNDS)
+        # per device, events alternate fail/recover chronologically
+        for d in range(TOPO.num_devices):
+            states = [a for e, dd, a, k in rows_of(t) if dd == d]
+            assert states == [i % 2.0 for i in range(len(states))]
+
+
+def test_straggler_pairs_are_all_or_nothing():
+    proc = StragglerProcess(p=1.0, window=3)
+    # budget for 1.5 devices: packing must keep whole pairs only
+    t = sample(proc, 0, max_events=3)
+    rows = rows_of(t)
+    assert len(rows) == 2                     # one whole pair, not 3 rows
+    per_dev: dict = {}
+    for e, d, a, k in rows:
+        per_dev.setdefault(d, []).append((e, a))
+    for d, evs in per_dev.items():
+        assert len(evs) == 2
+        (e0, a0), (e1, a1) = evs
+        assert (a0, a1) == (0.0, 1.0) and e1 == e0 + 3
+
+
+def test_straggler_single_round_is_a_noop():
+    t = sample(StragglerProcess(p=1.0, window=5), 0, rounds=1)
+    assert rows_of(t) == []
+
+
+def test_cascade_takes_members_and_staggers_recovery():
+    proc = ClusterCascadeProcess(p_head=1.0, q=1.0, recover_prob=1.0,
+                                 recovery_lag=3, stagger=1)
+    t = sample(proc, 1, rounds=100)
+    rows = rows_of(t)
+    heads = set(TOPO.heads)
+    for c in range(TOPO.num_clusters):
+        members = TOPO.clusters[c]
+        head = members[0]
+        he = [e for e, d, a, k in rows if d == head and a == 0.0]
+        assert len(he) == 1 and head in heads
+        e = he[0]
+        for i, d in enumerate(members[1:]):
+            assert (min(e + 1, 99), d, 0.0, KIND_CODES["client"]) in rows
+            assert (e + 3 + (i + 1), d, 1.0, KIND_CODES["client"]) in rows
+        assert (e + 3, head, 1.0, KIND_CODES["server"]) in rows
+
+
+def test_iid_process_matches_sample_traces_bitwise():
+    from repro.core.failure import sample_traces
+    proc = IidRateProcess(p=0.4, recover_prob=0.5)
+    t = sample(proc, 7)
+    ref = sample_traces(np.random.default_rng(7), TOPO, 0.4,
+                        max_events=2 * TOPO.num_devices, rounds=ROUNDS,
+                        num_traces=1, recover_prob=0.5)[0]
+    for la, lb in zip(jax.tree.leaves(t), jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_pack_groups_prefix_and_pairs_modes():
+    g1 = [(0, 1, 0.0, 1), (5, 1, 1.0, 1)]
+    g2 = [(2, 2, 0.0, 1), (6, 2, 1.0, 1)]
+    assert _pack_groups([g1, g2], 3) == g1 + g2[:1]       # prefix cut
+    assert _pack_groups([g1, g2], 3, pairs_only=True) == g1   # whole g2 drop
+    assert _pack_groups([g1, g2], 4) == g1 + g2
+
+
+def test_process_seed_is_stable_and_distinct():
+    p = MarkovChurnProcess(p_fail=0.1, p_recover=0.2)
+    s = process_seed(0, p, 0)
+    assert s == process_seed(0, p, 0)          # sha256, not salted hash
+    assert s != process_seed(0, p, 1)
+    assert s != process_seed(1, p, 0)
+    assert s != process_seed(0, dataclasses.replace(p, p_fail=0.2), 0)
+
+
+def test_family_process_covers_every_family():
+    for fam in FAMILIES:
+        assert family_process(fam, 0.3).family == fam
+    with pytest.raises(ValueError):
+        family_process("nope", 0.3)
+
+
+# ---------------------------------------------------------------------------
+# the faulty-update channel
+# ---------------------------------------------------------------------------
+def test_trace_faulty_scale_windows_and_inert_alive_mask():
+    n = 4
+    rows = [(2, n + 1, -1.0, KIND_CODES["faulty"]),
+            (5, n + 1, 1.0, KIND_CODES["faulty"]),
+            (3, n + 3, 0.0, KIND_CODES["faulty"])]
+    t = trace_from_rows(rows, 8)
+    for epoch, want in [(0, [1, 1, 1, 1]), (2, [1, -1, 1, 1]),
+                        (3, [1, -1, 1, 0]), (5, [1, 1, 1, 0])]:
+        got = np.asarray(trace_faulty_scale(t, n, jnp.int32(epoch)))
+        assert np.array_equal(got, np.asarray(want, np.float32)), epoch
+        # shadow rows never touch the alive mask
+        alive = np.asarray(trace_alive_mask(t, n, jnp.int32(epoch)))
+        assert np.array_equal(alive, np.ones(n, np.float32))
+
+
+def test_trace_faulty_scale_graph_size_constant_in_max_events():
+    from repro.analysis.plancheck import budgets
+
+    def n_eqns(m):
+        trace = FailureTrace.none(m)
+        return budgets.eqn_count(
+            lambda e: trace_faulty_scale(trace, 16, e), jnp.int32(0))
+
+    assert budgets.constant_across(n_eqns, (4, 8, 64))
+    assert budgets.check_budget("trace_faulty_scale", n_eqns(64)) is None
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_data():
+    X, y = commsml.generate(seed=0, samples_per_class=40)
+    split = federated.make_split(X, y, num_devices=6, num_clusters=2,
+                                 anomaly_classes=[3], seed=0)
+    dx, counts = federated.pad_devices(split)
+    return dx, counts, split
+
+
+def test_faulty_config_is_a_noop_without_faulty_events():
+    dx, counts, split = _tiny_data()
+    base = dict(scheme="tolfl", num_devices=6, num_clusters=2, rounds=3,
+                lr=1e-3, dropout=False)
+    r_plain = run_simulation(AutoencoderConfig(), dx, counts,
+                             split.test_x, split.test_y,
+                             SimConfig(**base), NO_FAILURE)
+    r_faulty = run_simulation(AutoencoderConfig(), dx, counts,
+                              split.test_x, split.test_y,
+                              FaultySimConfig(**base), NO_FAILURE)
+    assert np.array_equal(r_plain.loss_curve, r_faulty.loss_curve)
+    assert r_plain.final_auroc == r_faulty.final_auroc
+
+
+def test_faulty_scale_zero_freezes_the_global_model():
+    dx, counts, split = _tiny_data()
+    n = 6
+    rows = [(0, n + d, 0.0, KIND_CODES["faulty"]) for d in range(n)]
+    trace = trace_from_rows(rows, 2 * n)
+    cfg = FaultySimConfig(scheme="tolfl", num_devices=n, num_clusters=2,
+                          rounds=4, lr=1e-3, dropout=False)
+    r = run_simulation(AutoencoderConfig(), dx, counts, split.test_x,
+                       split.test_y, cfg, trace)
+    # every transmitted delta is zeroed -> params never move
+    assert np.allclose(r.loss_curve, r.loss_curve[0])
+    # the same trace under the PLAIN engine is completely inert
+    r_plain = run_simulation(AutoencoderConfig(), dx, counts,
+                             split.test_x, split.test_y,
+                             dataclasses.replace(SimConfig(), **{
+                                 f.name: getattr(cfg, f.name)
+                                 for f in dataclasses.fields(SimConfig)}),
+                             trace)
+    r_none = run_simulation(AutoencoderConfig(), dx, counts,
+                            split.test_x, split.test_y,
+                            SimConfig(scheme="tolfl", num_devices=n,
+                                      num_clusters=2, rounds=4, lr=1e-3,
+                                      dropout=False), NO_FAILURE)
+    assert np.array_equal(r_plain.loss_curve, r_none.loss_curve)
+    assert not np.allclose(r_none.loss_curve, r_none.loss_curve[0])
+
+
+def test_exe_key_distinguishes_faulty_configs_only_by_class():
+    base = dict(scheme="tolfl", num_devices=6, num_clusters=2, rounds=3,
+                lr=1e-3, dropout=False)
+    plain, faulty = SimConfig(**base), FaultySimConfig(**base)
+    model = AutoencoderConfig()
+    k_plain = campaign._exe_key("single", model, plain, None, None,
+                                False, False)
+    k_faulty = campaign._exe_key("single", model, faulty, None, None,
+                                 False, False)
+    assert k_plain != k_faulty
+    # process-free keys/fingerprints stay bit-identical: the plain
+    # class never grew a field
+    assert "faulty" not in repr(plain)
+    assert {f.name for f in dataclasses.fields(SimConfig)} == {
+        "scheme", "num_devices", "num_clusters", "rounds", "lr",
+        "local_epochs", "combine", "dropout", "seed"}
+    assert {f.name for f in dataclasses.fields(MultiModelConfig)} == {
+        "scheme", "num_devices", "num_models", "rounds", "lr",
+        "dropout", "seed"}
+    # replace() keeps the subclass -> bucket grouping separates faulty
+    assert isinstance(dataclasses.replace(faulty, seed=1),
+                      FaultySimConfig)
+    assert isinstance(
+        dataclasses.replace(FaultyMultiModelConfig(), num_models=2),
+        FaultyMultiModelConfig)
+
+
+# ---------------------------------------------------------------------------
+# straggler semantics (satellite: Fig 4 reporting must be unaffected)
+# ---------------------------------------------------------------------------
+def test_straggler_reenters_with_pre_failure_weight():
+    topo = Topology(6, 2)
+    d, w = 4, 3                               # a non-head member
+    t = trace_from_rows([(2, d, 0.0, KIND_CODES["client"]),
+                         (2 + w, d, 1.0, KIND_CODES["client"])], 12)
+    before = effective_weights(
+        trace_alive_mask(t, 6, jnp.int32(1)), topo)
+    during = effective_weights(
+        trace_alive_mask(t, 6, jnp.int32(3)), topo)
+    after = effective_weights(
+        trace_alive_mask(t, 6, jnp.int32(2 + w)), topo)
+    assert np.array_equal(np.asarray(before), np.ones(6, np.float32))
+    want_during = np.ones(6, np.float32)
+    want_during[d] = 0.0
+    assert np.array_equal(np.asarray(during), want_during)
+    # re-entry: aggregation weight is bit-identical to pre-failure
+    assert np.array_equal(np.asarray(after), np.asarray(before))
+
+
+def test_straggling_client_never_trips_fl_iso_reporting():
+    dx, counts, split = _tiny_data()
+    cfg = SimConfig(scheme="fl", num_devices=6, num_clusters=1,
+                    rounds=6, lr=1e-3, dropout=False)
+    t = trace_from_rows([(1, 3, 0.0, KIND_CODES["client"]),
+                         (4, 3, 1.0, KIND_CODES["client"])], 8)
+    res = campaign.run_campaign(AutoencoderConfig(), dx, counts,
+                                split.test_x, split.test_y, cfg,
+                                [t, NO_FAILURE], seeds=[0])
+    # the server (device 0) never died: no scenario engages the
+    # isolated-mean fallback and the Fig 4 switch stays off
+    assert not res.iso_active.any()
+    assert np.isfinite(res.auroc_used).all()
+    # the straggler scenario reports the GLOBAL model, same as none
+    assert np.array_equal(res.auroc_used, res.final_auroc)
+
+
+def test_straggler_process_runs_under_fl_without_iso():
+    dx, counts, split = _tiny_data()
+    spec = ExperimentSpec(
+        data=DataSpec(model=AutoencoderConfig(), device_x=dx,
+                      device_counts=counts, test_x=split.test_x,
+                      test_y=split.test_y, name="straggler-fl"),
+        base=SimConfig(num_devices=6, rounds=6, lr=1e-3, dropout=False),
+        cells=(CellSpec("fl", 1),),
+        traces=TraceSpec.generated(
+            ProcessGrid(StragglerProcess(p=1.0, window=2), 3)),
+        seeds=SeedSpec((0,)))
+    res = execute(plan(spec))
+    (r,) = res.results
+    # a straggled fl SERVER recovers within the run: Fig 4 semantics
+    # may engage the fallback mid-run but every AUROC stays finite and
+    # the per-process axis reports all draws
+    assert np.isfinite(r.auroc_used).all()
+    assert len(res.per_process()[("fl", 1)][0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# plan() lowering + the per-process result axis
+# ---------------------------------------------------------------------------
+def _process_spec(processes, cells=(("tolfl", 2), ("fl", 1)),
+                  rounds=3, seeds=(0,), explicit=()):
+    dx, counts, split = _tiny_data()
+    return ExperimentSpec(
+        data=DataSpec(model=AutoencoderConfig(), device_x=dx,
+                      device_counts=counts, test_x=split.test_x,
+                      test_y=split.test_y, name="proc-test"),
+        base=SimConfig(num_devices=6, rounds=rounds, lr=1e-3,
+                       dropout=False),
+        cells=tuple(CellSpec(s, k) for s, k in cells),
+        traces=TraceSpec(traces=tuple(explicit), processes=processes),
+        seeds=SeedSpec(tuple(seeds)))
+
+
+def test_plan_lowers_processes_deterministically():
+    spec = _process_spec((ProcessGrid(MarkovChurnProcess(0.2, 0.5), 3),
+                          ProcessGrid(StragglerProcess(0.8, 2), 3)))
+    p1, p2 = plan(spec), plan(spec)
+    for c1, c2 in zip(p1.cells, p2.cells):
+        assert c1.process_draws == c2.process_draws
+        assert len(c1.traces) == len(c2.traces)
+        for t1, t2 in zip(c1.traces, c2.traces):
+            for l1, l2 in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+                assert np.array_equal(np.asarray(l1), np.asarray(l2))
+        for idxs in c1.process_draws.values():
+            assert len(idxs) == 3
+
+
+def test_plan_dedups_process_draws_against_base_traces():
+    # p=0 draws only all-none traces: every draw must alias the single
+    # no-failure base trace instead of multiplying scenarios
+    spec = _process_spec((ProcessGrid(StragglerProcess(p=0.0), 4),),
+                         cells=(("tolfl", 2),), explicit=(NO_FAILURE,))
+    (cell,) = plan(spec).cells
+    assert len(cell.traces) == 1
+    assert cell.process_draws == {0: [0, 0, 0, 0]}
+    assert cell.explicit_index == {0: 0}
+
+
+def test_plan_swaps_faulty_engine_only_when_needed():
+    plain = plan(_process_spec((ProcessGrid(MarkovChurnProcess(), 2),)))
+    assert all(type(c.cfg) is SimConfig for c in plain.cells)
+    faulty = plan(_process_spec(
+        (ProcessGrid(MarkovChurnProcess(), 2),
+         ProcessGrid(FaultyUpdateProcess(p=0.5), 2)),
+        cells=(("tolfl", 2), ("ifca", 2))))
+    assert type(faulty.cells[0].cfg) is FaultySimConfig
+    assert type(faulty.cells[1].cfg) is FaultyMultiModelConfig
+
+
+def test_process_free_specs_lower_exactly_as_before():
+    spec = _process_spec((), explicit=(NO_FAILURE,))
+    (c0, c1) = plan(spec).cells
+    for c in (c0, c1):
+        assert type(c.cfg) is SimConfig
+        assert c.process_draws == {}
+        assert list(c.traces) == [NO_FAILURE]   # verbatim pass-through
+
+
+def test_end_to_end_families_execute_and_replay_without_retrace():
+    spec = _process_spec(
+        tuple(ProcessGrid(p, 2) for p in ALL_PROCESSES),
+        cells=(("tolfl", 2), ("ifca", 2)))
+    p = plan(spec, check=True)
+    assert p.static_report().clean, p.describe()
+    res = execute(p)
+    per = res.per_process()
+    for key in (("tolfl", 2), ("ifca", 2)):
+        assert set(per[key]) == set(range(len(ALL_PROCESSES)))
+        for gi, proc in enumerate(ALL_PROCESSES):
+            assert per[key][gi].shape == (2,)
+            assert np.isfinite(per[key][gi]).all()
+        fam_keys = set(res.process_summary()[key])
+        assert fam_keys == {f"{p_.family}[{i}]"
+                            for i, p_ in enumerate(ALL_PROCESSES)}
+    # summary() grows the per-family axis without losing the base keys
+    s = res.summary()[("tolfl", 2)]
+    assert "auroc_used_mean" in s and "E[auroc] iid[0]" in s
+    # warm replay: identical process seeds -> identical traces ->
+    # identical executables, zero retraces
+    before = campaign.TRACE_COUNT
+    execute(plan(spec))
+    assert campaign.TRACE_COUNT == before
+
+
+# ---------------------------------------------------------------------------
+# edge-case hardening (satellite: concat/zero-event/recovery-at-0)
+# ---------------------------------------------------------------------------
+def test_concat_and_stack_reject_empty_lists():
+    with pytest.raises(ValueError, match="empty"):
+        concat_traces([])
+    with pytest.raises(ValueError, match="empty"):
+        stack_traces([])
+
+
+def test_zero_event_trace_round_trips():
+    t = FailureTrace.none(4)
+    assert rows_of(t) == []
+    alive = trace_alive_mask(t, 6, jnp.int32(0))
+    assert np.array_equal(np.asarray(alive), np.ones(6, np.float32))
+    batch = stack_traces([t, t])
+    back = concat_traces([batch, batch])
+    assert back.epochs.shape == (4, 4)
+    scale = trace_faulty_scale(t, 6, jnp.int32(5))
+    assert np.array_equal(np.asarray(scale), np.ones(6, np.float32))
+
+
+def test_recovery_at_round_zero_round_trips():
+    # a recovery firing at epoch 0 (no prior failure in the trace) must
+    # win over the implicit alive default without shape surprises
+    t = trace_from_rows([(0, 2, 1.0, KIND_CODES["client"])], 4)
+    for epoch in (0, 1, 7):
+        alive = np.asarray(trace_alive_mask(t, 6, jnp.int32(epoch)))
+        assert alive.shape == (6,)
+        assert np.array_equal(alive, np.ones(6, np.float32))
+    # and composed with a same-device failure later, last event wins
+    t2 = trace_from_rows([(0, 2, 1.0, KIND_CODES["client"]),
+                          (3, 2, 0.0, KIND_CODES["client"])], 4)
+    alive = np.asarray(trace_alive_mask(t2, 6, jnp.int32(3)))
+    assert alive[2] == 0.0
