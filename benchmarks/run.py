@@ -22,7 +22,7 @@ def main(argv=None) -> int:
                          "campaign (scripts/ci.sh)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: kernels|roofline|comm|"
-                         "curves|time|expected|auroc|campaign")
+                         "curves|time|expected|auroc|campaign|serve")
     ap.add_argument("--shard", action="store_true",
                     help="campaign bench: shard scenario batches across "
                          "local JAX devices (ExecPlan(shard=True))")
@@ -36,7 +36,7 @@ def main(argv=None) -> int:
 
     if args.smoke:
         from benchmarks import (bench_campaign, bench_expected_perf,
-                                bench_failure_auroc)
+                                bench_failure_auroc, bench_serve)
         lines = bench_failure_auroc.run_smoke()
         print("\n===== smoke: batched failure micro-campaigns =====")
         print("\n".join(lines))
@@ -46,6 +46,10 @@ def main(argv=None) -> int:
         lines = bench_campaign.run(shard=args.shard,
                                    chunk_size=args.chunk_size)
         print("\n===== smoke: campaign exec layer (BENCH_campaign.json)"
+              " =====")
+        print("\n".join(lines))
+        lines = bench_serve.run_smoke()
+        print("\n===== smoke: anomaly scoring service (BENCH_serve.json)"
               " =====")
         print("\n".join(lines))
         print(f"\nsmoke done in {time.time()-t_all:.0f}s")
@@ -60,6 +64,10 @@ def main(argv=None) -> int:
                          bench_campaign.run(shard=args.shard,
                                             chunk_size=args.chunk_size)))
 
+    if want("serve"):
+        from benchmarks import bench_serve
+        sections.append(("anomaly scoring service (BENCH_serve.json)",
+                         bench_serve.run()))
     if want("kernels"):
         from benchmarks import bench_kernels
         sections.append(("kernels (interpret parity + xla timing)",

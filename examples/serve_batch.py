@@ -16,21 +16,17 @@ import jax.numpy as jnp
 from repro.configs import ARCHS
 from repro.models import transformer as T
 from repro.serving.decode import decode_step, pad_cache, prefill
+from repro.serving.inputs import synthetic_batch
 
 
-def serve(arch: str, batch_size: int, prompt_len: int, gen_tokens: int):
+def serve(arch: str, batch_size: int, prompt_len: int, gen_tokens: int,
+          seed: int = 0):
     cfg = ARCHS[arch].reduced()
     params, _ = T.init_params(jax.random.PRNGKey(0), cfg)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (batch_size, prompt_len), 0, cfg.vocab_size)
 
     # --- prefill: process the whole prompt batch in one shot ---
     t0 = time.time()
-    batch = {"tokens": prompts}
-    if cfg.is_encdec:
-        batch["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (batch_size, cfg.encoder_seq or 16, cfg.d_model))
+    batch = synthetic_batch(cfg, batch_size, prompt_len, seed=seed)
     logits, cache = prefill(params, cfg, batch)
     cache = pad_cache(cache, cfg, prompt_len=prompt_len,
                       target_len=prompt_len + gen_tokens)
@@ -60,13 +56,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for the synthetic prompt batch "
+                         "(equal seeds reproduce latency inputs exactly)")
     args = ap.parse_args()
 
     print(f"batched serving: batch={args.batch} prompt={args.prompt} "
-          f"generate={args.tokens}\n")
+          f"generate={args.tokens} seed={args.seed}\n")
     for arch in ("qwen3-8b", "rwkv6-7b", "recurrentgemma-9b",
                  "whisper-large-v3"):
-        serve(arch, args.batch, args.prompt, args.tokens)
+        serve(arch, args.batch, args.prompt, args.tokens, seed=args.seed)
     print("\n(reduced configs; the full-size path is exercised by the "
           "multi-pod dry-run)")
 

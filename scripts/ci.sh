@@ -112,12 +112,20 @@ print(p.describe())
 print("process smoke OK:", res.process_summary())
 PY
 
-echo "== smoke micro-campaign (also writes BENCH_campaign.json) =="
-# stash the committed baseline before --smoke overwrites it, so the
+echo "== serving smoke: train -> batched scoring service -> failover =="
+# the anomaly-scoring demo: a cascade kills heads mid-stream; the
+# service must keep scoring (zero drops) with bit-identical failover —
+# both asserted inside the script
+python examples/score_stream.py --smoke
+
+echo "== smoke micro-campaign (also writes BENCH_campaign.json + BENCH_serve.json) =="
+# stash the committed baselines before --smoke overwrites them, so the
 # perf trajectory of this change is visible in the CI log below
 baseline="${TMPDIR:-/tmp}/bench_campaign_baseline.json"
-rm -f "$baseline"
+serve_baseline="${TMPDIR:-/tmp}/bench_serve_baseline.json"
+rm -f "$baseline" "$serve_baseline"
 cp BENCH_campaign.json "$baseline" 2>/dev/null || true
+cp BENCH_serve.json "$serve_baseline" 2>/dev/null || true
 python -m benchmarks.run --smoke
 
 echo "== campaign scenarios/sec + wall vs committed baseline =="
@@ -140,4 +148,31 @@ for row in sorted(fresh):
     wdelta = f"{(fw - bw) / bw * 100.0:+.0f}%" if bw else "new"
     print(f"{row:<22}{b if b is not None else '-':>9}{f:>9}{delta:>8}"
           f"{bw if bw is not None else '-':>9}{fw:>9}{wdelta:>8}")
+PY
+
+echo "== serving windows/sec + tail latency vs committed baseline =="
+# the failure rows (iid/markov/cascade) legitimately run slower than
+# service_bs64 — failover adds per-client isolated-model dispatches —
+# so compare each row against ITS OWN baseline
+python - "$serve_baseline" <<'PY'
+import json, os, sys
+base_path = sys.argv[1]
+fresh = json.load(open("BENCH_serve.json"))
+base = json.load(open(base_path)) if os.path.exists(base_path) else {}
+hdr = (f"{'row':<18}{'base_w/s':>10}{'fresh_w/s':>10}{'delta':>8}"
+       f"{'base_p99':>10}{'fresh_p99':>10}")
+print(hdr)
+for row in sorted(fresh):
+    if "windows_per_s" not in fresh[row]:
+        continue
+    f = fresh[row]["windows_per_s"]
+    fp = fresh[row].get("p99_ms", "-")
+    b = base.get(row, {}).get("windows_per_s")
+    bp = base.get(row, {}).get("p99_ms", "-")
+    delta = f"{(f - b) / b * 100.0:+.0f}%" if b else "new"
+    print(f"{row:<18}{b if b is not None else '-':>10}{f:>10}{delta:>8}"
+          f"{bp:>10}{fp:>10}")
+r = fresh["service_bs64"].get("ratio_vs_direct")
+print(f"service_bs64 vs direct_bs64 throughput ratio: {r}"
+      f"  (bench asserts >= 0.9)")
 PY

@@ -43,6 +43,10 @@ from repro.analysis.plancheck.findings import (Finding, apply_inline,
 #: modules (src/repro-relative) allowed to build jit/vmap executables
 BLESSED_JIT_MODULES: Set[str] = {
     "core/campaign.py", "core/simulate.py", "core/baselines.py",
+    # the anomaly service's bucket entry points: compiled through the
+    # same canonical-key + persistent-cache discipline (serve_score
+    # keys in engine._SCORE_CACHE / compilecache fingerprints)
+    "serving/anomaly/engine.py",
 }
 #: whole subtrees allowed to jit (kernels, launch entry points, the
 #: sharding wrappers they compose with)

@@ -80,6 +80,19 @@ BUDGETS: Dict[str, Budget] = {
         Budget("campaign_core_multi:seq", 3600,
                "multi-model baseline core with the RG-LRU seq body "
                "(measured 1778)"),
+        # serving: the anomaly service's batched score entry point
+        # (repro.serving.anomaly.engine) — ONE bank-row gather (scalar
+        # row, per-leaf dynamic slice) + a shared-weight vmapped
+        # anomaly_scores.  Must stay O(1) in bucket size, window length
+        # and bank height (all shape-only knobs); a count that scales
+        # with any of them means a Python fold crept into the serving
+        # hot path.
+        Budget("serving_score_core", 250,
+               "uniform-row bank-gather + score core, autoencoder body "
+               "(measured 156, constant across bucket/window/bank)"),
+        Budget("serving_score_core:seq", 450,
+               "uniform-row bank-gather + score core, RG-LRU seq body "
+               "(measured 270, constant across bucket/window/bank)"),
     )
 }
 

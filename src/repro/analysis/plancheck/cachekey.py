@@ -13,8 +13,8 @@ knob — before any campaign runs:
   frozen dataclasses, so every field they ever grow is covered BY
   CONSTRUCTION — the check verifies that containment property
   (frozen + eq + hash) rather than enumerating fields.
-* ``ExecPlan`` / ``BucketPlan`` / ``DataSpec`` fields do NOT ride along
-  wholesale;
+* ``ExecPlan`` / ``BucketPlan`` / ``DataSpec`` — and the serving
+  layer's ``ServiceConfig`` — fields do NOT ride along wholesale;
   each field must either map onto a key component
   (:data:`KEY_COMPONENTS`) via :data:`FIELD_COVERAGE`, or appear in the
   allowlist with a reason (shape-only / bookkeeping knobs).  A new
@@ -99,6 +99,17 @@ ALLOWLIST: Dict[Tuple[str, str], str] = {
         "host-only: consumed by AUROC post-processing after the "
         "dispatch returns, never lowered",
     ("DataSpec", "name"): "cosmetic: tags ExperimentResult.to_rows",
+    # serving (repro.serving.anomaly): the service's compiled bucket
+    # keys are (serve_score, canonical model key) + aval signature —
+    # every ServiceConfig field is shape-only by design, landing in the
+    # avals, never in the program
+    ("ServiceConfig", "bucket_sizes"):
+        "shape-only: each bucket size is the batch dim of its OWN "
+        "compiled entry point, covered by that executable's "
+        "abstract-argument signature (engine.score_executable)",
+    ("ServiceConfig", "window"):
+        "shape-only: rows per traffic window, the second dim of the "
+        "x operand — covered by the aval signature",
 }
 
 
@@ -198,9 +209,15 @@ def check_cache_keys(extra_execplan_fields: Sequence[str] = (),
                 tag=f"{cls.__name__}.containment"))
 
     from repro.core.experiment import DataSpec
+    from repro.serving.anomaly.service import ServiceConfig
     out += _field_findings(_c.ExecPlan, "repro/core/campaign.py",
                            extra_execplan_fields)
     out += _field_findings(BucketPlan, "repro/core/experiment.py",
                            extra_bucket_fields)
     out += _field_findings(DataSpec, "repro/core/experiment.py")
+    # the serving layer's config: its compiled buckets key on
+    # (serve_score, model) + avals, so every field must be shape-only
+    # (allowlisted as such) or threaded into the engine key
+    out += _field_findings(ServiceConfig,
+                           "repro/serving/anomaly/service.py")
     return out

@@ -42,9 +42,13 @@ from repro.core.processes import (FAMILIES, ClusterCascadeProcess,
 from repro.core.simulate import (FaultySimConfig, SimConfig, SimResult,
                                  run_simulation)
 from repro.core.topology import Topology
+from repro.core.simulate import trained_params
 from repro.models.detector import (AutoencoderDetector, DetectorModel,
                                    SeqDetector, as_detector, detector_names,
                                    make_detector, register_detector)
+from repro.serving.anomaly import (AnomalyService, ModelBank, ScoredWindow,
+                                   ServiceConfig, ServiceReport,
+                                   train_model_bank)
 
 __all__ = [
     # declarative pipeline
@@ -71,6 +75,9 @@ __all__ = [
     "ClusterCascadeProcess", "StragglerProcess", "FaultyUpdateProcess",
     "ProcessGrid", "FAMILIES", "family_process", "process_seed",
     "trace_faulty_scale", "FaultySimConfig", "FaultyMultiModelConfig",
+    # serving: the live anomaly-scoring service under failure
+    "AnomalyService", "ServiceConfig", "ServiceReport", "ScoredWindow",
+    "ModelBank", "train_model_bank", "trained_params",
     # legacy imperative entry points (thin shims over the pipeline)
     "run_simulation", "SimResult", "run_multimodel", "MultiModelResult",
     "run_campaign", "run_multimodel_campaign", "sweep_grid",

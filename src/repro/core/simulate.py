@@ -148,7 +148,8 @@ def _local_delta_fn(model: ModelLike, cfg: SimConfig):
 
 def _build_core_arrays(model: ModelLike, cfg: SimConfig,
                        num_devices: int, num_clusters: int,
-                       track_iso: bool, score_history: bool):
+                       track_iso: bool, score_history: bool,
+                       return_params: bool = False):
     """Pure scenario function with the topology as DYNAMIC operands:
     (dx, counts, valid, tx, cluster_ids, heads, head_valid, trace, seed)
     -> :class:`SimOutputs`.
@@ -279,9 +280,17 @@ def _build_core_arrays(model: ModelLike, cfg: SimConfig,
                 lambda p: det.anomaly_scores(p, tx))(iso_params)
         else:
             iso_final_scores = jnp.zeros((N, 0), jnp.float32)
-        return SimOutputs(losses, iso_losses, final_scores,
-                          iso_final_scores, final_alive, server_dead,
-                          dead_rounds, score_hist, iso_score_hist)
+        outputs = SimOutputs(losses, iso_losses, final_scores,
+                             iso_final_scores, final_alive, server_dead,
+                             dead_rounds, score_hist, iso_score_hist)
+        if return_params:
+            # params export (the serving layer's model bank): the final
+            # global params and the per-device isolated params leave the
+            # graph alongside the metrics.  Static flag, default False,
+            # so every pre-existing core traces the byte-identical
+            # graph it always did.
+            return outputs, final_params, iso_params
+        return outputs
 
     return core
 
@@ -340,6 +349,72 @@ def _prepare_arrays(cfg: SimConfig, device_x: np.ndarray,
     valid = (jnp.arange(device_x.shape[1])[None, :]
              < counts[:, None]).astype(jnp.float32)     # (N, n_max)
     return dx, counts, valid
+
+
+# ---------------------------------------------------------------------------
+# Params export (the serving layer's model bank)
+# ---------------------------------------------------------------------------
+def _build_params_core(model: ModelLike, cfg: SimConfig):
+    """Pure scenario function returning trained PARAMETERS instead of
+    metrics: (dx, counts, valid, tx, cluster_ids, heads, head_valid,
+    trace, seed) -> (global_params, iso_params, final_alive).
+
+    Same round loop as every other core (``_build_core_arrays`` with
+    ``return_params=True``), so the exported params are exactly what the
+    campaign trained.  ``head_valid`` is a dynamic operand: passing the
+    real mask trains the scheme's global model; passing ZEROS makes
+    every round an all-heads-dead round, i.e. each device trains its own
+    isolated model on its local shard from the shared init — the
+    serving failover bank — through the SAME compiled executable."""
+    topo = cfg.topology()
+    arrays_core = _build_core_arrays(model, cfg, topo.num_devices,
+                                     topo.num_clusters, track_iso=True,
+                                     score_history=False,
+                                     return_params=True)
+
+    def core(dx, counts, valid, tx, cluster_ids, heads, head_valid,
+             trace: FailureTrace, seed):
+        out, params, iso_params = arrays_core(
+            dx, counts, valid, tx, cluster_ids, heads, head_valid,
+            trace, seed)
+        return params, iso_params, out.final_alive
+
+    return core
+
+
+@functools.lru_cache(maxsize=16)
+def _params_core_cached(model: ModelLike, cfg: SimConfig):
+    return jax.jit(_build_params_core(model, cfg))
+
+
+def trained_params(model: ModelLike, device_x: np.ndarray,
+                   device_counts: np.ndarray, cfg: SimConfig,
+                   failure: Failure = NO_FAILURE,
+                   isolated: bool = False):
+    """Train one scenario and export its parameters.
+
+    Returns ``(global_params, iso_params, final_alive)`` as device
+    arrays: the scheme's final global model, the per-device isolated
+    models (leaves carry a leading ``(N,)`` axis), and the final alive
+    mask.  With ``isolated=True`` the cluster-head validity mask is
+    zeroed so every device trains its OWN model on its local shard from
+    the shared init — the genuinely-isolated failover models the
+    scoring service banks (:mod:`repro.serving.anomaly`)."""
+    topo = cfg.topology()
+    trace = as_trace(failure, topo)
+    dx, counts, valid = _prepare_arrays(cfg, device_x, device_counts)
+    assert dx.shape[0] == topo.num_devices, (dx.shape, topo.num_devices)
+    cluster_ids = jnp.asarray(topo.device_cluster_array())
+    heads = jnp.asarray(np.array(topo.heads))
+    head_valid = (jnp.zeros if isolated else jnp.ones)(
+        (topo.num_clusters,), jnp.float32)
+    # the test-loss operand is unused by the params outputs; keep it to
+    # one row so the export never pays for a test sweep
+    tx = jnp.zeros((1, dx.shape[-1]), dx.dtype)
+    core = _params_core_cached(D.canonical_model_key(model),
+                               dataclasses.replace(cfg, seed=0))
+    return core(dx, counts, valid, tx, cluster_ids, heads, head_valid,
+                trace, jnp.int32(cfg.seed))
 
 
 def iso_mean_auroc(iso_scores: np.ndarray, final_alive: np.ndarray,

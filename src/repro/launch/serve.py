@@ -17,6 +17,7 @@ from repro.configs import ARCHS
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.serving.decode import decode_step, pad_cache, prefill
+from repro.serving.inputs import synthetic_batch
 from repro.sharding import logical as L
 
 
@@ -29,6 +30,9 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for the synthetic prompt batch "
+                         "(equal seeds reproduce latency inputs exactly)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
@@ -39,18 +43,8 @@ def main(argv=None) -> int:
 
     with L.activate_mesh(mesh, rules):
         params, _ = T.init_params(jax.random.PRNGKey(0), cfg)
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (args.batch, args.prompt), 0,
-                                     cfg.vocab_size)
-        batch = {"tokens": prompts}
-        if cfg.is_encdec:
-            batch["frames"] = jax.random.normal(
-                jax.random.PRNGKey(2),
-                (args.batch, cfg.encoder_seq or 16, cfg.d_model))
-        if cfg.frontend.kind == "vision":
-            batch["prefix"] = jax.random.normal(
-                jax.random.PRNGKey(2),
-                (args.batch, cfg.frontend.frontend_seq or 16, cfg.d_model))
+        batch = synthetic_batch(cfg, args.batch, args.prompt,
+                                seed=args.seed)
 
         print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
               f"batch={args.batch} prompt={args.prompt} gen={args.tokens}")

@@ -1,0 +1,30 @@
+"""Live anomaly-scoring service under failure (the Tol-FL serving layer).
+
+Surface:
+
+* :func:`~repro.serving.anomaly.bank.train_model_bank` /
+  :class:`~repro.serving.anomaly.bank.ModelBank` — params export from a
+  training scenario (global + isolated-per-client models);
+* :class:`~repro.serving.anomaly.service.AnomalyService` /
+  :class:`~repro.serving.anomaly.service.ServiceConfig` — the batched
+  failover scoring service (fixed-size buckets, coalescing work queue,
+  trace-driven liveness routing);
+* :class:`~repro.serving.anomaly.service.ServiceReport` — sustained
+  throughput, latency percentiles, failover/failback counts and
+  per-regime AUROC.
+
+See the module docstrings (and "Anomaly scoring service" in
+``tests/README.md``) for semantics and the extension recipe.
+"""
+from repro.serving.anomaly.bank import ModelBank, train_model_bank
+from repro.serving.anomaly.engine import (clear_score_cache,
+                                          score_budget_name,
+                                          score_executable)
+from repro.serving.anomaly.service import (AnomalyService, ScoredWindow,
+                                           ServiceConfig, ServiceReport)
+
+__all__ = [
+    "ModelBank", "train_model_bank",
+    "AnomalyService", "ServiceConfig", "ServiceReport", "ScoredWindow",
+    "score_executable", "score_budget_name", "clear_score_cache",
+]

@@ -1,0 +1,87 @@
+"""The service's parameter bank: trained models a scoring router picks.
+
+A :class:`ModelBank` holds, for one finished training scenario,
+
+* ``global_params`` — the scheme's final global model, the one every
+  cluster head serves (Tol-FL trains ONE global model hierarchically;
+  "route to the cluster-head model" means this row);
+* ``iso_params`` — N genuinely-isolated per-client models, each trained
+  on its own local shard from the shared init with NO communication
+  (``simulate.trained_params(..., isolated=True)``) — the ResiliNet-
+  style failover targets served while a client's head is dead;
+* ``row_params`` — the two stacked into an ``(N + 1, ...)``-leaved
+  pytree (row 0 global, row ``c + 1`` client ``c``'s isolated model)
+  so a compiled bucket entry point selects per-request rows with one
+  gather (:mod:`repro.serving.anomaly.engine`).
+
+Both exports run through the simulator's own round loop
+(:func:`repro.core.simulate.trained_params`), sharing one compiled
+executable — the bank costs two dispatches of the training core, not a
+new engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.failure import Failure, NO_FAILURE
+from repro.core.simulate import SimConfig, trained_params
+from repro.core.topology import Topology
+from repro.models import detector as D
+from repro.models.detector import DetectorModel, ModelLike
+
+
+@dataclass(frozen=True, eq=False)
+class ModelBank:
+    """Trained params + routing geometry for one deployed detector."""
+
+    detector: DetectorModel
+    topology: Topology
+    input_dim: int               # feature dim D of a window row
+    global_params: Any           # pytree, the served cluster-head model
+    iso_params: Any              # pytree, leaves (N, ...) isolated models
+    row_params: Any              # pytree, leaves (N + 1, ...): stacked
+
+    @property
+    def num_clients(self) -> int:
+        return self.topology.num_devices
+
+    def row_index(self, client: int, failover: bool) -> int:
+        """Bank row serving ``client``: the global model while its head
+        is alive, its isolated model (row ``client + 1``) on failover."""
+        assert 0 <= client < self.num_clients, client
+        return client + 1 if failover else 0
+
+    def client_iso_params(self, client: int):
+        """Client ``client``'s isolated model (a host-side convenience
+        for parity checks; the service gathers from ``row_params``)."""
+        return jax.tree.map(lambda p: p[client], self.iso_params)
+
+
+def train_model_bank(model: ModelLike, device_x: np.ndarray,
+                     device_counts: np.ndarray, cfg: SimConfig,
+                     failure: Failure = NO_FAILURE) -> ModelBank:
+    """Train one scenario and bank its params for serving.
+
+    The global model trains under ``cfg``/``failure`` exactly as the
+    campaign engine would; the isolated failover models train clean
+    (pre-deployment provisioning: each client's fallback is its own
+    local model, independent of whatever outage the global run saw).
+    Both runs share one compiled params-export executable."""
+    det = D.as_detector(model)
+    topo = cfg.topology()
+    global_params, _, _ = trained_params(det, device_x, device_counts,
+                                         cfg, failure=failure)
+    _, iso_params, _ = trained_params(det, device_x, device_counts,
+                                      cfg, isolated=True)
+    row_params = jax.tree.map(
+        lambda g, i: jnp.concatenate([g[None], i], axis=0),
+        global_params, iso_params)
+    return ModelBank(detector=det, topology=topo,
+                     input_dim=int(device_x.shape[-1]),
+                     global_params=global_params, iso_params=iso_params,
+                     row_params=row_params)

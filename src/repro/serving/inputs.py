@@ -1,0 +1,34 @@
+"""Synthetic serving inputs shared by the LLM serving entry points.
+
+``examples/serve_batch.py`` and ``repro.launch.serve`` used to build
+their random prompt/frames/prefix batches with duplicated inline code
+(and fixed PRNG keys, so latency numbers could never be re-drawn);
+this is the one helper both call, seeded explicitly for
+run-to-run-reproducible benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def synthetic_batch(cfg, batch_size: int, prompt_len: int,
+                    seed: int = 0) -> Dict[str, jax.Array]:
+    """The prefill input batch for one architecture config: random
+    ``tokens`` always, ``frames`` for encoder-decoder archs, ``prefix``
+    for vision frontends.  Distinct streams derive from one ``seed``
+    via ``fold_in``, so equal seeds reproduce the batch exactly."""
+    root = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(
+        jax.random.fold_in(root, 1), (batch_size, prompt_len), 0,
+        cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(root, 2),
+            (batch_size, cfg.encoder_seq or 16, cfg.d_model))
+    if cfg.frontend.kind == "vision":
+        batch["prefix"] = jax.random.normal(
+            jax.random.fold_in(root, 3),
+            (batch_size, cfg.frontend.frontend_seq or 16, cfg.d_model))
+    return batch

@@ -28,6 +28,7 @@ from repro.api import (CellSpec, DataSpec, ExperimentSpec, SeedSpec,
 from repro.core import campaign, compilecache
 from repro.core.experiment import BucketPlan
 from repro.core.failure import sample_traces
+from repro.serving.anomaly.service import ServiceConfig
 
 SRC_REPRO = os.path.join(os.path.dirname(__file__), os.pardir, "src",
                          "repro")
@@ -155,12 +156,16 @@ def test_cache_key_flags_planted_missing_knob():
 
 
 # generated test: one case per live dataclass field — adding a knob to
-# either dataclass without classifying it fails HERE with its name
+# any of these dataclasses without classifying it fails HERE with its
+# name (ServiceConfig rides along: the serving buckets key on
+# (serve_score, model) + avals, so its fields must stay shape-only)
 @pytest.mark.parametrize(
     "cls_name,field_name",
     [("ExecPlan", f.name) for f in dataclasses.fields(campaign.ExecPlan)]
     + [("BucketPlan", f.name) for f in dataclasses.fields(BucketPlan)]
-    + [("DataSpec", f.name) for f in dataclasses.fields(DataSpec)])
+    + [("DataSpec", f.name) for f in dataclasses.fields(DataSpec)]
+    + [("ServiceConfig", f.name)
+       for f in dataclasses.fields(ServiceConfig)])
 def test_every_exec_knob_is_keyed_or_allowlisted(cls_name, field_name):
     verdict = pc_cachekey.classify_field(cls_name, field_name)
     assert verdict in ("covered", "allowlisted"), (

@@ -1,0 +1,275 @@
+"""Anomaly scoring service: failover parity, coalescing, warm buckets.
+
+The three service contracts the issue pins:
+
+* **failover parity** — a window served through the failover path is
+  BIT-IDENTICAL to scoring the client's isolated model directly (and a
+  head-served window to the global model): row selection is a gather,
+  never an arithmetic change;
+* **order** — the coalescing queue never reorders a client's windows,
+  whatever mix of bucket sizes the drain picks;
+* **warm buckets** — once the bucket set is compiled, serving performs
+  ZERO retraces and ZERO XLA compiles (`compilecache` stats window),
+  and a second service over the same bank resolves every bucket from
+  memory.
+
+Plus the bank/export invariants (row 0 is the global model, isolated
+rows genuinely differ) and the named eqn budget of the score core.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.plancheck import budgets as pc_budgets
+from repro.core import compilecache
+from repro.core.failure import FailureSpec, FailureTrace
+from repro.core.processes import ClusterCascadeProcess
+from repro.core.simulate import SimConfig, trained_params
+from repro.models.detector import SeqDetector, as_detector
+from repro.serving.anomaly import (AnomalyService, ServiceConfig,
+                                   train_model_bank)
+from repro.serving.anomaly.engine import (_build_score_core,
+                                          score_budget_name)
+
+N, K = 10, 5
+WINDOW = 4
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg(tiny_ae_cfg):
+    return SimConfig(scheme="tolfl", num_devices=N, num_clusters=K,
+                     rounds=2, lr=1e-3, dropout=False)
+
+
+@pytest.fixture(scope="module")
+def bank(tiny_ae_cfg, tiny_padded, tiny_cfg):
+    dx, counts = tiny_padded
+    return train_model_bank(tiny_ae_cfg, dx, counts, tiny_cfg)
+
+
+@pytest.fixture(scope="module")
+def windows(tiny_split):
+    """A pool of (WINDOW, D) float32 traffic windows from the test set."""
+    tx = np.asarray(tiny_split.test_x, np.float32)
+    n = tx.shape[0] // WINDOW
+    return tx[:n * WINDOW].reshape(n, WINDOW, tx.shape[-1])
+
+
+def head_dead_trace(cluster: int, epoch: int = 0,
+                    recover: int = None) -> FailureTrace:
+    """Kill the head of ``cluster`` at ``epoch`` (optional recovery)."""
+    head = cluster * (N // K)
+    events = [(epoch, head, 0.0, 2)]
+    if recover is not None:
+        events.append((recover, head, 1.0, 2))
+    from repro.core.processes import trace_from_rows
+    return trace_from_rows(events, max_events=4)
+
+
+# ---------------------------------------------------------------------------
+# bank / params export
+# ---------------------------------------------------------------------------
+def test_bank_rows_stack_global_then_isolated(bank):
+    for leaf_r, leaf_g, leaf_i in zip(jax.tree.leaves(bank.row_params),
+                                      jax.tree.leaves(bank.global_params),
+                                      jax.tree.leaves(bank.iso_params)):
+        assert leaf_r.shape[0] == N + 1
+        assert leaf_i.shape[0] == N
+        np.testing.assert_array_equal(leaf_r[0], leaf_g)
+        np.testing.assert_array_equal(leaf_r[1:], leaf_i)
+
+
+def test_isolated_models_differ_from_global_and_each_other(bank):
+    # genuinely-isolated training on different shards must diverge
+    l_g = jax.tree.leaves(bank.global_params)[0]
+    l_i = jax.tree.leaves(bank.iso_params)[0]
+    assert not np.array_equal(np.asarray(l_i[0]), np.asarray(l_g))
+    assert not np.array_equal(np.asarray(l_i[0]), np.asarray(l_i[1]))
+
+
+def test_trained_params_match_training_engine(tiny_ae_cfg, tiny_padded,
+                                              tiny_cfg):
+    """The params export rides the SAME round loop as the campaign
+    cores: scoring the exported global model reproduces the simulator's
+    final scores bit-for-bit."""
+    from repro.core.simulate import run_simulation
+    dx, counts = tiny_padded
+    tx = np.zeros((3, dx.shape[-1]), np.float32)
+    params, _, _ = trained_params(tiny_ae_cfg, dx, counts, tiny_cfg)
+    det = as_detector(tiny_ae_cfg)
+    got = np.asarray(det.anomaly_scores(params, jnp.asarray(tx)))
+    res = run_simulation(tiny_ae_cfg, dx, counts, tx,
+                         np.zeros((3,)), tiny_cfg)
+    # run_simulation reports scores over ITS test set; rebuild directly:
+    from repro.core import simulate
+    core = simulate._jitted_core(tiny_ae_cfg, tiny_cfg, True)
+    dxj, cj, vj = simulate._prepare_arrays(tiny_cfg, dx, counts)
+    out = core(dxj, cj, vj, jnp.asarray(tx),
+               FailureTrace.none(6), jnp.int32(tiny_cfg.seed))
+    np.testing.assert_array_equal(got, np.asarray(out.final_scores))
+    assert res is not None
+
+
+# ---------------------------------------------------------------------------
+# failover parity (bit-identical routing)
+# ---------------------------------------------------------------------------
+def test_failover_scores_bit_identical_to_isolated_model(bank, windows):
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1, 8),
+                                             window=WINDOW),
+                         failure=head_dead_trace(cluster=0))
+    client = 1                       # member of cluster 0, head dead
+    svc.submit(client, windows[0])
+    (res,) = svc.tick()
+    assert res.served_by == "isolated"
+    det = bank.detector
+    direct = np.asarray(det.anomaly_scores(
+        bank.client_iso_params(client), jnp.asarray(windows[0])))
+    np.testing.assert_array_equal(res.scores, direct)
+
+
+def test_head_scores_bit_identical_to_global_model(bank, windows):
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1, 8),
+                                             window=WINDOW),
+                         failure=head_dead_trace(cluster=0))
+    client = 7                       # cluster 3, head alive
+    svc.submit(client, windows[1])
+    (res,) = svc.tick()
+    assert res.served_by == "head"
+    direct = np.asarray(bank.detector.anomaly_scores(
+        bank.global_params, jnp.asarray(windows[1])))
+    np.testing.assert_array_equal(res.scores, direct)
+
+
+def test_failover_then_failback_on_recovery(bank, windows):
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1,),
+                                             window=WINDOW),
+                         failure=head_dead_trace(cluster=0, epoch=1,
+                                                 recover=3))
+    client, modes = 0, []
+    for _ in range(5):
+        svc.submit(client, windows[2])
+        (res,) = svc.tick()
+        modes.append(res.served_by)
+    assert modes == ["head", "isolated", "isolated", "head", "head"]
+    rep = svc.report()
+    assert (rep.failovers, rep.failbacks) == (1, 1)
+    assert svc.timeline == [(1, client, "failover"),
+                            (3, client, "failback")]
+    assert rep.dropped == 0 and rep.windows == 5
+
+
+def test_process_driven_service_samples_deterministically(bank, windows):
+    proc = ClusterCascadeProcess(p_head=1.0)
+    a = AnomalyService(bank, ServiceConfig(bucket_sizes=(8,),
+                                           window=WINDOW),
+                       failure=proc, sample_seed=7)
+    b = AnomalyService(bank, ServiceConfig(bucket_sizes=(8,),
+                                           window=WINDOW),
+                       failure=proc, sample_seed=7)
+    np.testing.assert_array_equal(np.asarray(a._trace.epochs),
+                                  np.asarray(b._trace.epochs))
+
+
+# ---------------------------------------------------------------------------
+# queue coalescing
+# ---------------------------------------------------------------------------
+def test_queue_never_reorders_a_clients_windows(bank, windows):
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1, 8),
+                                             window=WINDOW))
+    # 21 windows across 3 clients, interleaved: drains as 8+8+8(pad)
+    order = [(c, i) for i in range(7) for c in (2, 5, 9)]
+    for c, i in order:
+        svc.submit(c, windows[i % len(windows)])
+    res = svc.tick()
+    assert len(res) == 21 and svc.report().dropped == 0
+    for c in (2, 5, 9):
+        seqs = [r.seq for r in res if r.client == c]
+        assert seqs == sorted(seqs) == list(range(7))
+    # FIFO across the whole stream, not just per client
+    assert [(r.client, r.seq) for r in res] == order
+
+
+def test_padded_batches_score_identically_to_exact_ones(bank, windows):
+    """A window scored in a padded remainder batch equals the same
+    window scored alone — padding rows are inert."""
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1, 8),
+                                             window=WINDOW))
+    svc.submit(3, windows[0])
+    svc.submit(4, windows[1])        # n=2 -> bucket 8, 6 padded rows
+    padded = {r.client: r.scores for r in svc.tick()}
+    alone = AnomalyService(bank, ServiceConfig(bucket_sizes=(1,),
+                                               window=WINDOW))
+    alone.submit(3, windows[0])
+    (solo,) = alone.tick()
+    np.testing.assert_array_equal(padded[3], solo.scores)
+
+
+def test_oversized_load_splits_into_max_buckets(bank, windows):
+    svc = AnomalyService(bank, ServiceConfig(bucket_sizes=(1, 8),
+                                             window=WINDOW))
+    for i in range(19):
+        svc.submit(i % N, windows[i % len(windows)])
+    res = svc.tick()
+    assert len(res) == 19
+    rep = svc.report()
+    assert rep.bucket_batches == {1: 0, 8: 3}   # 8 + 8 + 3(padded)
+
+
+# ---------------------------------------------------------------------------
+# warm service: zero retraces / zero XLA after the bucket set compiles
+# ---------------------------------------------------------------------------
+def test_warm_service_opens_zero_recompile_window(bank, windows):
+    cfg = ServiceConfig(bucket_sizes=(1, 8), window=WINDOW)
+    svc = AnomalyService(bank, cfg,
+                         failure=head_dead_trace(cluster=0, epoch=2))
+    svc.submit(0, windows[0])
+    svc.tick()                       # warm the eager liveness-mask ops
+    compilecache.reset_xla_compile_stats()
+    for t in range(4):               # exercise every bucket + failover
+        for c in range(1 + (t % 8)):
+            svc.submit(c, windows[c % len(windows)])
+        svc.tick()
+    stats = compilecache.xla_compile_stats()
+    assert stats["misses"] == 0, stats
+    # a second service over the same bank resolves purely from memory
+    again = AnomalyService(bank, cfg)
+    assert set(again.compile_sources.values()) == {"memory"}
+    stats = compilecache.xla_compile_stats()
+    assert stats["misses"] == 0, stats
+
+
+# ---------------------------------------------------------------------------
+# budgets: the score core is O(1) in every shape knob
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("det,family", [
+    (None, "ae"),
+    (SeqDetector(input_dim=112, window=16, d_model=8), "seq"),
+])
+def test_score_core_fits_named_budget(tiny_ae_cfg, det, family):
+    det = as_detector(tiny_ae_cfg if det is None else det)
+    params = det.init_params(jax.random.PRNGKey(0))
+    core = _build_score_core(det)
+
+    def count(bs):
+        rows = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (N + 1,) + p.shape), params)
+        return pc_budgets.eqn_count(
+            core, rows, jnp.int32(0),
+            jnp.zeros((bs, 16, 112), jnp.float32))
+
+    name = score_budget_name(family)
+    assert pc_budgets.check_budget(name, count(8)) is None
+    assert pc_budgets.constant_across(count, (1, 8, 64))
+
+
+def test_service_config_validates():
+    with pytest.raises(AssertionError):
+        ServiceConfig(bucket_sizes=())
+    with pytest.raises(AssertionError):
+        ServiceConfig(window=0)
+    # frozen: fields cannot drift silently out of the classified set
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ServiceConfig().window = 3
